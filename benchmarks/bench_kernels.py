@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference wall-times.
+
+CPU wall-times are indicative only (TPU is the target); the structural
+metric that transfers is the op count / fusion shape, so we also report the
+kernel's VMEM working set per tile.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.window_score import BW, LANE
+
+
+def _time(fn, *a, n=3, **kw):
+    fn(*a, **kw)  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*a, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    rng = np.random.default_rng(0)
+    print("kernel,shape,ref_ms,pallas_interp_ms,vmem_tile_KB")
+
+    shapes = [(256, 32), (512, 32)] if args.quick else [(256, 32), (512, 32), (1024, 64)]
+    for w, k in shapes:
+        uv = rng.integers(0, 10_000, (w, 2)).astype(np.int32)
+        valid = np.ones(w, bool)
+        repu = rng.random((w, k)) < 0.2
+        repv = rng.random((w, k)) < 0.2
+        degu = rng.integers(1, 50, w).astype(np.int32)
+        degv = rng.integers(1, 50, w).astype(np.int32)
+        bal = rng.random(k).astype(np.float32)
+        allowed = np.ones(k, bool)
+        a = (uv, valid, repu, repv, degu, degv, bal, allowed,
+             jnp.float32(1.0), jnp.int32(50))
+        t_ref = _time(ops.window_score, *a, impl="ref")
+        t_pl = _time(ops.window_score, *a, impl="pallas")
+        w_pad = -(-w // BW) * BW
+        k_pad = -(-k // LANE) * LANE
+        vmem = (5 * w_pad * 4 + 2 * w_pad * k_pad * 4 + BW * k_pad * 4) / 1024
+        print(f"window_score,W{w}xK{k},{t_ref*1e3:.2f},{t_pl*1e3:.2f},{vmem:.0f}")
+
+    for e, d, s in ([(2048, 32, 256)] if args.quick else [(2048, 32, 256), (8192, 64, 1024)]):
+        seg = np.sort(rng.integers(0, s, e)).astype(np.int32)
+        data = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32))
+        t_ref = _time(ops.segment_sum_sorted, data, seg, s, impl="ref")
+        t_pl = _time(ops.segment_sum_sorted, data, seg, s, impl="pallas")
+        print(f"segment_sum,E{e}xD{d}xS{s},{t_ref*1e3:.2f},{t_pl*1e3:.2f},"
+              f"{(512*d*4 + 128*d*4)//1024}")
+
+    for b, hq, hkv, t, dh in ([(1, 4, 2, 256, 64)] if args.quick
+                              else [(1, 4, 2, 256, 64), (2, 8, 4, 512, 64)]):
+        q = jnp.asarray(rng.normal(size=(b, hq, t, dh)).astype(np.float32))
+        kk = jnp.asarray(rng.normal(size=(b, hkv, t, dh)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, hkv, t, dh)).astype(np.float32))
+        t_ref = _time(ops.flash_attention, q, kk, v, impl="ref")
+        t_pl = _time(ops.flash_attention, q, kk, v, impl="pallas")
+        print(f"flash_attention,B{b}H{hq}T{t}D{dh},{t_ref*1e3:.2f},{t_pl*1e3:.2f},"
+              f"{(128*dh*4*3 + 128*128*4)//1024}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Beyond-paper: ADWISE adaptive balancing applied to MoE routing.
+
+Compares expert-load imbalance and token-drop rate of plain top-k routing vs
+top-k + the paper's adaptive λ·B(e) bias (core/moe_balance) over a stream of
+batches with a drifting token distribution (the hard case for static
+aux-loss-only balancing).
+
+    PYTHONPATH=src python -m benchmarks.bench_moe_balance
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moe_balance import adwise_router_bias, init_moe_balance, update_loads
+from repro.models.layers import init_moe, moe_ffn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--experts", type=int, default=16)
+    ap.add_argument("--topk", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--tokens", type=int, default=512)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    e, k, d, t = args.experts, args.topk, args.d, args.tokens
+    params = init_moe(jax.random.PRNGKey(0), d, 2 * d, e, jnp.float32)
+    rng = np.random.default_rng(0)
+    cap_f = 1.25
+
+    def stream(step):
+        # Slowly drifting distribution (topic changes every 8 steps): a
+        # "topic" direction concentrates router mass on a few experts —
+        # static routing overloads them; the load-feedback bias adapts.
+        topic = np.zeros(d)
+        topic[(step // 8) % d] = 3.0
+        return jnp.asarray(
+            (rng.normal(size=(1, t, d)) + topic).astype(np.float32))
+
+    results = {}
+    for mode in ("plain", "adwise"):
+        st = init_moe_balance(e)
+        drops, imbs = [], []
+        for step in range(args.steps):
+            x = stream(step)
+            bias = None
+            if mode == "adwise":
+                bias, st = adwise_router_bias(
+                    st, jnp.float32(step / args.steps))
+            out, aux, counts = moe_ffn(
+                params, x, n_experts=e, top_k=k, capacity_factor=cap_f,
+                router_bias=bias)
+            counts = np.asarray(counts)
+            st = update_loads(st, jnp.asarray(counts))
+            cap = max(8, -(-int(cap_f * t * k / e) // 8) * 8)
+            dropped = np.maximum(counts - cap, 0).sum() / (t * k)
+            imb = (counts.max() - counts.min()) / max(counts.max(), 1)
+            drops.append(dropped)
+            imbs.append(imb)
+        results[mode] = dict(
+            drop_rate=float(np.mean(drops)), imbalance=float(np.mean(imbs)))
+        print(f"{mode}: mean_drop_rate={np.mean(drops):.4f} "
+              f"mean_imbalance={np.mean(imbs):.4f}")
+    gain = (1 - results["adwise"]["drop_rate"] /
+            max(results["plain"]["drop_rate"], 1e-9)) * 100
+    print(f"adwise-balance reduces token drops by {gain:.0f}%")
+    if args.json:
+        json.dump(results, open(args.json, "w"), indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

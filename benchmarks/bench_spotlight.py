@@ -1,0 +1,45 @@
+"""Fig. 8 analogue: spotlight spread sweep for all strategies.
+
+    PYTHONPATH=src python -m benchmarks.bench_spotlight --scale 0.12
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import AdwiseConfig, spotlight_partition
+from repro.graph import make_graph, replica_sets_from_assignment, replication_degree
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.12)
+    ap.add_argument("--graph", default="brain_like")
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--z", type=int, default=8)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    edges, n = make_graph(args.graph, seed=0, scale=args.scale)
+    rows = []
+    print("strategy,spread,RD,improvement_vs_full")
+    for strategy in ("dbh", "hdrf", "adwise"):
+        full_rd = None
+        for spread in (args.k, args.k // 2, args.k // 4, args.k // args.z):
+            cfg = AdwiseConfig(k=args.k, window_max=128) if strategy == "adwise" else None
+            res = spotlight_partition(edges, n, args.k, z=args.z, spread=spread,
+                                      strategy=strategy, cfg=cfg)
+            rd = replication_degree(
+                replica_sets_from_assignment(edges, res.assign, n, args.k))
+            full_rd = full_rd or rd
+            impr = 100 * (1 - rd / full_rd)
+            rows.append(dict(strategy=strategy, spread=spread,
+                             replication_degree=rd, improvement_pct=impr))
+            print(f"{strategy},{spread},{rd:.3f},{impr:.1f}%")
+    if args.json:
+        json.dump(rows, open(args.json, "w"), indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

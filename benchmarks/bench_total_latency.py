@@ -1,0 +1,72 @@
+"""Fig. 7a-f analogue: total latency (partition + processing) vs latency
+preference L, per graph × workload, ADWISE vs HDRF vs DBH.
+
+    PYTHONPATH=src python -m benchmarks.bench_total_latency --scale 0.08
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import run_strategy
+from repro.engine import PAPER_CLUSTER, build_partitioned_graph, partition_latency, process_latency
+from repro.graph import make_graph
+
+# (workload, supersteps, msg_width): PageRank-like light & SI/clique-like heavy.
+WORKLOADS = {
+    "pagerank_300": (300, 1),
+    "coloring_300": (300, 65),
+    "heavy_si": (40, 128),  # wide messages, few rounds (paper's SI analogue)
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.08)
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--graphs", nargs="+",
+                    default=["brain_like", "web_like", "orkut_like"])
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    print("graph,workload,strategy,L,partition_s,process_s,total_s,RD")
+    for preset in args.graphs:
+        edges, n = make_graph(preset, seed=0, scale=args.scale)
+        use_cs = preset != "orkut_like"  # paper switches CS off on Orkut
+        # Partition ONCE per (strategy, window) and reuse across workloads.
+        parts = []
+        for strategy, budgets in [
+            ("dbh", [None]),
+            ("hdrf", [None]),
+            # Increasing windows = increasing invested partitioning latency
+            # (Fig. 7 x-axis; paper guideline ≈ 2-4x single-edge).
+            ("adwise", [16, 64, 256]),
+        ]:
+            for L in budgets:
+                res, rd = run_strategy(edges, n, args.k, strategy, budget=L,
+                                       use_cs=use_cs)
+                g = build_partitioned_graph(edges, res.assign, n, args.k)
+                t_part = partition_latency(res.stats, len(edges), args.k)
+                parts.append((strategy, L, res, rd, g, t_part))
+        for wname, (iters, width) in WORKLOADS.items():
+            for strategy, L, res, rd, g, t_part in parts:
+                model = process_latency(g, iters, width, PAPER_CLUSTER)
+                r = dict(graph=preset, workload=wname, strategy=strategy,
+                         budget=L, replication_degree=rd,
+                         t_partition_s=t_part,
+                         t_partition_wall_s=res.stats.get("wall_time_s", 0.0),
+                         t_process_s=model["t_total_s"],
+                         t_total_s=t_part + model["t_total_s"],
+                         sync_bytes=model["sync_bytes_per_step"])
+                rows.append(r)
+                print(f"{preset},{wname},{strategy},{L if L else ''},"
+                      f"{r['t_partition_s']:.3f},{r['t_process_s']:.3f},"
+                      f"{r['t_total_s']:.3f},{r['replication_degree']:.3f}")
+    if args.json:
+        json.dump(rows, open(args.json, "w"), indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""§III-A/B/C ablations: window size, lazy traversal, adaptive λ, clustering.
+
+    PYTHONPATH=src python -m benchmarks.bench_window --scale 0.04
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from repro.core import AdwiseConfig, partition_stream
+from repro.graph import make_graph, partition_balance, replica_sets_from_assignment, replication_degree
+
+
+def _run(edges, n, cfg):
+    res = partition_stream(edges, n, cfg)
+    rd = replication_degree(replica_sets_from_assignment(edges, res.assign, n, cfg.k))
+    return res, rd
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.04)
+    ap.add_argument("--graph", default="brain_like")
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    edges, n = make_graph(args.graph, seed=0, scale=args.scale)
+    rows = []
+    print("experiment,variant,RD,score_rows,wall_s,imbalance")
+
+    # 1) Window size sweep (fixed w, no adaptation): quality vs w (Fig. 1 gap).
+    for w in (1, 8, 32, 128, 512):
+        cfg = AdwiseConfig(k=args.k, window_max=w, window_init=w, adapt=False)
+        res, rd = _run(edges, n, cfg)
+        rows.append(dict(experiment="window_sweep", variant=str(w),
+                         rd=rd, score_rows=res.stats["score_rows"],
+                         wall_s=res.stats["wall_time_s"]))
+        print(f"window_sweep,w={w},{rd:.3f},{res.stats['score_rows']},"
+              f"{res.stats['wall_time_s']:.2f},"
+              f"{partition_balance(res.assign, args.k):.4f}")
+
+    # 2) Lazy traversal: score computations saved at bounded quality cost.
+    base = AdwiseConfig(k=args.k, window_max=128, window_init=128, adapt=False)
+    for lazy in (False, True):
+        cfg = dataclasses.replace(base, lazy=lazy)
+        res, rd = _run(edges, n, cfg)
+        rows.append(dict(experiment="lazy", variant=str(lazy), rd=rd,
+                         score_rows=res.stats["score_rows"],
+                         wall_s=res.stats["wall_time_s"]))
+        print(f"lazy,lazy={lazy},{rd:.3f},{res.stats['score_rows']},"
+              f"{res.stats['wall_time_s']:.2f},")
+
+    # 3) Clustering score on/off (paper: off for low-clustering graphs).
+    for cs in (False, True):
+        cfg = dataclasses.replace(base, use_clustering=cs)
+        res, rd = _run(edges, n, cfg)
+        rows.append(dict(experiment="clustering", variant=str(cs), rd=rd))
+        print(f"clustering,cs={cs},{rd:.3f},,,")
+
+    # 4) Adaptive λ vs fixed λ (clipped to the fixed point of Eq. 4 extremes).
+    for lam, adapt_note in ((1.1, "fixed-1.1"), (None, "adaptive")):
+        if lam is None:
+            cfg = base
+        else:
+            cfg = dataclasses.replace(base, lam_init=lam, lam_lo=lam, lam_hi=lam)
+        res, rd = _run(edges, n, cfg)
+        imb = partition_balance(res.assign, args.k)
+        rows.append(dict(experiment="lambda", variant=adapt_note, rd=rd,
+                         imbalance=imb))
+        print(f"lambda,{adapt_note},{rd:.3f},,,{imb:.4f}")
+
+    if args.json:
+        json.dump(rows, open(args.json, "w"), indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

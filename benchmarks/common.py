@@ -1,0 +1,62 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    AdwiseConfig,
+    dbh_partition,
+    hdrf_partition,
+    partition_stream,
+)
+from repro.engine import (
+    PAPER_CLUSTER,
+    build_partitioned_graph,
+    partition_latency,
+    process_latency,
+)
+from repro.graph import make_graph, replica_sets_from_assignment, replication_degree
+
+
+def run_strategy(edges, n, k, strategy, budget=None, window_max=256, use_cs=True,
+                 seed=0):
+    """Returns (PartitionResult, replication_degree).
+
+    For ADWISE, `budget` (when set) is interpreted as a fixed window size —
+    benchmark rows are labeled by the resulting MODELED partitioning latency,
+    which is Fig. 7's x-axis semantics ("latency invested").
+    """
+    if strategy == "adwise":
+        wm = window_max if budget is None else int(budget)
+        cfg = AdwiseConfig(k=k, window_max=wm, window_init=max(1, wm // 4),
+                           use_clustering=use_cs)
+        res = partition_stream(edges, n, cfg)
+    elif strategy == "hdrf":
+        res = hdrf_partition(edges, n, k, seed=seed)
+    elif strategy == "dbh":
+        res = dbh_partition(edges, n, k, seed=seed)
+    else:
+        raise ValueError(strategy)
+    rd = replication_degree(replica_sets_from_assignment(edges, res.assign, n, k))
+    return res, rd
+
+
+def total_latency_row(edges, n, k, strategy, workload_iters, msg_width=1,
+                      budget=None, window_max=256, use_cs=True):
+    """One (strategy, L) experiment → dict of latencies (Fig. 7 data point)."""
+    res, rd = run_strategy(edges, n, k, strategy, budget, window_max, use_cs)
+    g = build_partitioned_graph(edges, res.assign, n, k)
+    # Both terms in the SAME modeled cluster units (measured 1-core CPU wall
+    # kept alongside for reference — DESIGN.md §3).
+    t_part = partition_latency(res.stats, len(edges), k)
+    model = process_latency(g, workload_iters, msg_width, PAPER_CLUSTER)
+    return dict(
+        strategy=strategy,
+        budget=budget,
+        replication_degree=rd,
+        t_partition_s=t_part,
+        t_partition_wall_s=res.stats.get("wall_time_s", 0.0),
+        t_process_s=model["t_total_s"],
+        t_total_s=t_part + model["t_total_s"],
+        sync_bytes=model["sync_bytes_per_step"],
+    )

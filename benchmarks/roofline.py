@@ -1,0 +1,104 @@
+"""§Roofline: render the per-(arch × shape × mesh) roofline table from the
+dry-run artifact (results/dryrun.json).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--md] [--json results/dryrun.json]
+
+Terms (single-pod cells, exact unrolled cost analysis):
+  t_compute   = per-device HLO FLOPs / 197e12
+  t_mem_hlo   = per-device HLO bytes-accessed / 819e9  (CPU-HLO pessimistic:
+                counts every un-fused intermediate XLA:TPU would fuse)
+  t_mem_min   = (2·temp + args + outputs) / 819e9      (buffer-assignment
+                floor: every live buffer written+read once)
+  t_collective= per-device collective bytes / 50e9
+  dominant    = argmax(compute, mem_min, collective)   (TPU-realistic)
+  useful      = MODEL_FLOPS / global HLO FLOPs
+  roofline_frac = model-FLOP-time / max(term)          (perfect overlap)
+
+Multi-pod rows prove the pod axis shards (scan-only compile): memory columns
+only — their cost analysis is not trip-count-exact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+HDR = ("arch", "shape", "mesh", "t_compute_s", "t_mem_hlo_s", "t_mem_min_s",
+       "t_collective_s", "dominant", "useful", "roofline_frac",
+       "arg_GB/dev", "temp_GB/dev")
+
+
+def derive(r):
+    """Recompute roofline terms from the RAW per-device counters."""
+    bpd = r["bytes_per_device"]
+    mem_min = (2 * bpd["temp"] + bpd["argument"] + bpd["output"]) / 819e9
+    if not r.get("cost_exact", True):
+        return dict(mem_min=mem_min, exact=False)
+    t = dict(
+        compute=r["hlo_flops"] / 197e12,
+        mem_hlo=r["hlo_bytes"] / 819e9,
+        mem_min=mem_min,
+        collective=r["collective_bytes"]["total"] / 50e9,
+    )
+    dom_terms = dict(compute=t["compute"], memory=t["mem_min"],
+                     collective=t["collective"])
+    dominant = max(dom_terms, key=dom_terms.get)
+    t_star = max(dom_terms.values())
+    t_model = r["model_flops"] / (r["n_chips"] * 197e12)
+    return dict(
+        **t, exact=True, dominant=dominant,
+        useful=r["model_flops"] / (r["hlo_flops"] * r["n_chips"]),
+        frac=t_model / t_star if t_star else 0.0,
+    )
+
+
+def rows_from(results):
+    out = []
+    for r in results:
+        mesh = "2pod" if r["multi_pod"] else "1pod"
+        if r.get("status") != "ok":
+            out.append((r["arch"], r["shape"], mesh, "-", "-", "-", "-",
+                        r.get("status"),
+                        r.get("reason", r.get("error", ""))[:40], "-", "-", "-")[:12])
+            continue
+        d = derive(r)
+        bpd = r["bytes_per_device"]
+        if not d["exact"]:
+            out.append((r["arch"], r["shape"], mesh, "-", "-",
+                        f"{d['mem_min']:.2e}", "-", "compiles-ok", "-", "-",
+                        f"{bpd['argument']/1e9:.2f}", f"{bpd['temp']/1e9:.2f}"))
+            continue
+        out.append((
+            r["arch"], r["shape"], mesh,
+            f"{d['compute']:.2e}", f"{d['mem_hlo']:.2e}", f"{d['mem_min']:.2e}",
+            f"{d['collective']:.2e}", d["dominant"], f"{d['useful']:.2f}",
+            f"{d['frac']:.3f}",
+            f"{bpd['argument']/1e9:.2f}", f"{bpd['temp']/1e9:.2f}",
+        ))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.json):
+        print(f"no dry-run artifact at {args.json}; run repro.launch.dryrun first")
+        return []
+    results = json.load(open(args.json))
+    rows = rows_from(results)
+    if args.md:
+        print("| " + " | ".join(HDR) + " |")
+        print("|" + "---|" * len(HDR))
+        for row in rows:
+            print("| " + " | ".join(str(x) for x in row) + " |")
+    else:
+        print(",".join(HDR))
+        for row in rows:
+            print(",".join(str(x) for x in row))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Run every benchmark at smoke scale. One section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # smoke scale (CI)
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale proxies
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    scale = 0.08 if args.full else 0.012
+    t0 = time.time()
+
+    from benchmarks import (
+        bench_kernels,
+        bench_moe_balance,
+        bench_replication,
+        bench_spotlight,
+        bench_total_latency,
+        bench_window,
+        roofline,
+    )
+
+    print("=== Fig.7a-f: total latency (partition + modeled processing) ===")
+    bench_total_latency.main(["--scale", str(scale)])
+    print("\n=== Fig.7g-i: replication degree per strategy and L ===")
+    bench_replication.main(["--scale", str(scale)])
+    print("\n=== Fig.8: spotlight spread sweep ===")
+    bench_spotlight.main(["--scale", str(scale * 1.5)])
+    print("\n=== §III ablations: window / lazy / clustering / lambda ===")
+    bench_window.main(["--scale", str(scale / 2)])
+    print("\n=== beyond-paper: ADWISE-balance MoE routing ===")
+    bench_moe_balance.main(["--steps", "12" if not args.full else "40"])
+    print("\n=== kernels (interpret-mode wall times, CPU-indicative) ===")
+    bench_kernels.main(["--quick"] if not args.full else [])
+    print("\n=== roofline table (from dry-run artifact, if present) ===")
+    roofline.main([])
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

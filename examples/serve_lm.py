@@ -1,0 +1,16 @@
+"""Serving example: batched prefill + greedy decode on three families.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    for arch in ("qwen1.5-0.5b", "rwkv6-7b", "zamba2-7b"):
+        print(f"\n--- {arch} (reduced config) ---")
+        serve_main(["--arch", arch, "--reduced", "--batch", "2",
+                    "--prompt-len", "16", "--gen", "8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: ADWISE streaming edge partitioning + multi-pod JAX LM framework."""
+__version__ = "0.1.0"

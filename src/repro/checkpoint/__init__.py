@@ -1,0 +1,4 @@
+"""Checkpointing: sharded, async, atomic, keep-k, bit-exact resume."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

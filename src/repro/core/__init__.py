@@ -1,0 +1,34 @@
+"""ADWISE — the paper's primary contribution.
+
+Public API:
+  AdwiseConfig, PartitionResult           — configuration / result types
+  partition_stream                        — vectorized windowed partitioner
+  ref_adwise_partition                    — sequential Algorithm-1 oracle
+  hdrf_partition, dbh_partition, ...      — single-edge streaming baselines
+  spotlight_partition, spread_mask        — §III-D parallel-loading optimization
+"""
+from repro.core.types import AdwiseConfig, PartitionResult
+from repro.core.adwise import partition_stream
+from repro.core.reference import ref_adwise_partition
+from repro.core.baselines import (
+    hdrf_partition,
+    dbh_partition,
+    greedy_partition,
+    hash_partition,
+    grid_partition,
+)
+from repro.core.spotlight import spotlight_partition, spread_mask
+
+__all__ = [
+    "AdwiseConfig",
+    "PartitionResult",
+    "partition_stream",
+    "ref_adwise_partition",
+    "hdrf_partition",
+    "dbh_partition",
+    "greedy_partition",
+    "hash_partition",
+    "grid_partition",
+    "spotlight_partition",
+    "spread_mask",
+]

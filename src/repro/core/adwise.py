@@ -1,0 +1,455 @@
+"""ADWISE as a vectorized JAX streaming computation.
+
+The paper's Algorithm 1 is a sequential loop: refill window → argmax over
+(window × partitions) → assign → adapt. On accelerator hardware we express
+one loop iteration as a fixed-shape masked update (see DESIGN.md §3) and run
+the whole stream through `jax.lax.scan`:
+
+  carry: vertex cache (replica table + versions), degree table, partition
+         sizes, the window buffer (W_max slots + validity), lazy-traversal
+         caches, λ, and the adaptive-window controller state.
+  step : refill invalid slots from the stream, recompute the stale subset of
+         window scores (lazy traversal budget R_sel), take the masked argmax
+         over (W_max × k), emit the assignment, update the vertex cache and
+         the controller.
+
+The stream is processed in a handful of chunks at the Python level so the
+(C2) latency model can be calibrated against wall-clock between chunks —
+inside the scan, per-edge latency is `score_rows × k × cost_per_score +
+base_cost`, with `cost_per_score` measured, not guessed.
+"""
+from __future__ import annotations
+
+import math
+import time
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scoring
+from repro.core.types import AdwiseConfig, PartitionResult
+
+__all__ = ["partition_stream"]
+
+NEG_INF = scoring.NEG_INF
+_BIG_I32 = np.int32(2**31 - 1)
+
+
+class Carry(NamedTuple):
+    # Vertex cache.
+    replicas: jax.Array  # (V+1, K) bool — row V is a scatter dump.
+    rep_version: jax.Array  # (V+1,) int32
+    deg: jax.Array  # (V+1,) int32
+    max_deg: jax.Array  # () int32
+    # Partition state.
+    sizes: jax.Array  # (K,) int32
+    lam: jax.Array  # () f32
+    # Window.
+    w_cap: jax.Array  # () int32 — logical window size w
+    cursor: jax.Array  # () int32 — next stream index
+    n_valid: jax.Array  # () int32
+    win_uv: jax.Array  # (W, 2) int32
+    win_sidx: jax.Array  # (W,) int32 — stream index per slot
+    win_valid: jax.Array  # (W,) bool
+    # Lazy traversal caches.
+    cached_rcs: jax.Array  # (W, K) f32 — cached R + CS per slot
+    cached_ver_u: jax.Array  # (W,) int32
+    cached_ver_v: jax.Array  # (W,) int32
+    theta: jax.Array  # () f32 — candidate threshold Θ from previous step
+    # Counters / controller.
+    assigned: jax.Array  # () int32
+    score_rows: jax.Array  # () int32 — number of (edge × all-partitions) evals
+    c: jax.Array  # () int32 — assignments since last window adaptation
+    sum_g: jax.Array  # () f32
+    avg_g_prev: jax.Array  # () f32
+    last_grew: jax.Array  # () bool
+    budget_left: jax.Array  # () f32 seconds
+    lat_ema: jax.Array  # () f32 — per-edge modeled latency EMA
+    # Calibrated latency model (dynamic so recalibration does not recompile).
+    cost_per_score: jax.Array  # () f32
+    base_cost: jax.Array  # () f32
+
+
+class StepOut(NamedTuple):
+    sidx: jax.Array  # (b,) int32 — stream index assigned this step (-1 = none)
+    p: jax.Array  # (b,) int32
+    w_cap: jax.Array  # () int32
+    g_chosen: jax.Array  # () f32 — best score this step (diagnostics)
+
+
+def _init_carry(cfg: AdwiseConfig, num_vertices: int, budget: float) -> Carry:
+    v1 = num_vertices + 1
+    w, k = cfg.window_max, cfg.k
+    zi = jnp.zeros((), jnp.int32)
+    zf = jnp.zeros((), jnp.float32)
+    return Carry(
+        replicas=jnp.zeros((v1, k), bool),
+        rep_version=jnp.zeros((v1,), jnp.int32),
+        deg=jnp.zeros((v1,), jnp.int32),
+        max_deg=jnp.ones((), jnp.int32),
+        sizes=jnp.zeros((k,), jnp.int32),
+        lam=jnp.float32(cfg.lam_init),
+        w_cap=jnp.int32(max(cfg.window_init, cfg.assign_batch)),
+        cursor=zi,
+        n_valid=zi,
+        win_uv=jnp.zeros((w, 2), jnp.int32),
+        win_sidx=jnp.full((w,), -1, jnp.int32),
+        win_valid=jnp.zeros((w,), bool),
+        cached_rcs=jnp.zeros((w, k), jnp.float32),
+        cached_ver_u=jnp.full((w,), -1, jnp.int32),
+        cached_ver_v=jnp.full((w,), -1, jnp.int32),
+        theta=zf,
+        assigned=zi,
+        score_rows=zi,
+        c=zi,
+        sum_g=zf,
+        avg_g_prev=jnp.float32(-jnp.inf),
+        last_grew=jnp.asarray(True),
+        budget_left=jnp.float32(budget),
+        lat_ema=zf,
+        cost_per_score=jnp.float32(1e-8),
+        base_cost=jnp.float32(1e-7),
+    )
+
+
+def _make_step(
+    cfg: AdwiseConfig,
+    num_vertices: int,
+    r_sel: int,
+    stream: jax.Array,  # (m_pad, 2) int32
+    m_real: jax.Array,  # () int32
+    allowed: jax.Array,  # (K,) bool
+    cap: jax.Array,  # () int32 (BIG when disabled)
+    has_budget: bool,
+):
+    w_max, k, b = cfg.window_max, cfg.k, cfg.assign_batch
+    v_dummy = num_vertices  # scatter dump row
+    m_pad = stream.shape[0]
+    slot_ids = jnp.arange(w_max, dtype=jnp.int32)
+
+    def step(carry: Carry, _) -> tuple[Carry, StepOut]:
+        # ---- 1) Refill invalid slots up to the logical window size w. ----
+        need = jnp.clip(carry.w_cap - carry.n_valid, 0, w_max)
+        avail = jnp.maximum(m_real - carry.cursor, 0)
+        take = jnp.minimum(need, avail)
+        inv = ~carry.win_valid
+        rank = jnp.cumsum(inv.astype(jnp.int32)) - 1
+        fill = inv & (rank < take)
+        src = carry.cursor + rank
+        src_c = jnp.clip(src, 0, m_pad - 1)
+        fill_uv = stream[src_c]
+        win_uv = jnp.where(fill[:, None], fill_uv, carry.win_uv)
+        win_sidx = jnp.where(fill, src, carry.win_sidx)
+        win_valid = carry.win_valid | fill
+        # Streamed degrees update on observation.
+        u_f = jnp.where(fill, fill_uv[:, 0], v_dummy)
+        v_f = jnp.where(fill, fill_uv[:, 1], v_dummy)
+        deg = carry.deg.at[u_f].add(1).at[v_f].add(1)
+        seen = jnp.where(fill, jnp.maximum(deg[u_f], deg[v_f]), 0)
+        max_deg = jnp.maximum(carry.max_deg, jnp.max(seen))
+        cursor = carry.cursor + take
+        n_valid = carry.n_valid + take
+
+        u = win_uv[:, 0]
+        v = win_uv[:, 1]
+
+        # ---- 2) Lazy traversal: pick ≤ r_sel stale slots to rescore. ----
+        ver_u = carry.rep_version[u]
+        ver_v = carry.rep_version[v]
+        if cfg.lazy:
+            # A refilled slot's cache belongs to the previous occupant — always stale.
+            stale = win_valid & (
+                (ver_u != carry.cached_ver_u) | (ver_v != carry.cached_ver_v) | fill
+            )
+        else:
+            # Faithful mode: every valid window edge is rescored every step
+            # (CS depends on *other* window edges, which version stamps on the
+            # own endpoints cannot see).
+            stale = win_valid
+        # Priority classes: fresh window entries first, then stale candidates
+        # (cached score above Θ), then stale secondary edges (§III-B).
+        cand = carry.cached_rcs.max(axis=1) >= carry.theta
+        cls = jnp.where(fill, 0, jnp.where(cand, 1, 2)).astype(jnp.int32)
+        key = jnp.where(stale, cls * w_max + slot_ids, _BIG_I32)
+        order = jnp.argsort(key)[:r_sel]
+        sel_live = jnp.sort(key)[:r_sel] < _BIG_I32
+        sel_idx = jnp.where(sel_live, order, w_max)  # dummy slot w_max
+        sel_c = jnp.clip(sel_idx, 0, w_max - 1)
+
+        # ---- 3) Fresh R (+ CS) for the selected rows. ----
+        rep_u = carry.replicas[u]  # (W, K)
+        rep_v = carry.replicas[v]
+        r_all = scoring.replication_score(rep_u, rep_v, deg[u], deg[v], max_deg)
+        rcs_rows = r_all[sel_c]
+        if cfg.use_clustering:
+            u_s, v_s = u[sel_c], v[sel_c]
+            keep = win_valid[None, :] & (sel_c[:, None] != slot_ids[None, :])
+            a = ((u[None, :] == u_s[:, None]) | (u[None, :] == v_s[:, None])) & keep
+            bm = ((v[None, :] == u_s[:, None]) | (v[None, :] == v_s[:, None])) & keep
+            af = a.astype(jnp.float32)
+            bf = bm.astype(jnp.float32)
+            num = af @ rep_v.astype(jnp.float32) + bf @ rep_u.astype(jnp.float32)
+            den = af.sum(axis=1) + bf.sum(axis=1)
+            rcs_rows = rcs_rows + num / jnp.maximum(den, 1.0)[:, None]
+        cached_rcs = (
+            jnp.zeros((w_max + 1, k), jnp.float32)
+            .at[:w_max]
+            .set(carry.cached_rcs)
+            .at[sel_idx]
+            .set(rcs_rows)[:w_max]
+        )
+        pad1 = lambda x, fillv: jnp.concatenate([x, jnp.full((1,), fillv, x.dtype)])
+        cached_ver_u = pad1(carry.cached_ver_u, -1).at[sel_idx].set(ver_u[sel_c])[:w_max]
+        cached_ver_v = pad1(carry.cached_ver_v, -1).at[sel_idx].set(ver_v[sel_c])[:w_max]
+        n_scored = jnp.sum(sel_live.astype(jnp.int32))
+        score_rows = carry.score_rows + n_scored
+
+        # ---- 4) Score matrix g = cached RCS + λ·B, masked. ----
+        bal = scoring.balance_score(carry.sizes, allowed, cfg.eps)
+        ok_p = allowed & (carry.sizes < cap)
+        g = cached_rcs + carry.lam * bal[None, :]
+        g = jnp.where(win_valid[:, None] & ok_p[None, :], g, NEG_INF)
+        # Candidate threshold Θ = g_avg + ε (§III-B) in RCS units — it gates
+        # the cached R+CS values, so exclude the λ·B term common to a column.
+        rcs_max = cached_rcs.max(axis=1)
+        nv = jnp.maximum(jnp.sum(win_valid.astype(jnp.float32)), 1.0)
+        theta = jnp.sum(jnp.where(win_valid, rcs_max, 0.0)) / nv + cfg.eps
+
+        # ---- 5) Assign the top-b vertex-disjoint window edges. ----
+        def pick(i, st):
+            g_m, ch_mask, ch_p, out_s, out_p, sum_gacc = st
+            flat = jnp.argmax(g_m)
+            slot = (flat // k).astype(jnp.int32)
+            p = (flat % k).astype(jnp.int32)
+            ok = g_m[slot, p] > NEG_INF / 2
+            out_s = out_s.at[i].set(jnp.where(ok, win_sidx[slot], -1))
+            out_p = out_p.at[i].set(jnp.where(ok, p, 0))
+            share = (u == u[slot]) | (u == v[slot]) | (v == u[slot]) | (v == v[slot])
+            g_m = jnp.where((share & ok)[:, None], NEG_INF, g_m)
+            ch_mask = ch_mask.at[slot].max(ok)
+            ch_p = ch_p.at[slot].set(jnp.where(ok, p, ch_p[slot]))
+            sum_gacc = sum_gacc + jnp.where(ok, g[slot, p], 0.0)
+            return (g_m, ch_mask, ch_p, out_s, out_p, sum_gacc)
+
+        st0 = (
+            g,
+            jnp.zeros((w_max,), bool),
+            jnp.zeros((w_max,), jnp.int32),
+            jnp.full((b,), -1, jnp.int32),
+            jnp.zeros((b,), jnp.int32),
+            jnp.zeros((), jnp.float32),
+        )
+        if b == 1:
+            st = pick(0, st0)
+        else:
+            st = jax.lax.fori_loop(0, b, pick, st0)
+        _, ch, ch_p, out_s, out_p, g_sum = st
+        n_ch = jnp.sum(ch.astype(jnp.int32))
+
+        # ---- 6) Apply assignments to the vertex cache / partition state. ----
+        chi = ch.astype(jnp.int32)
+        sizes = carry.sizes.at[ch_p].add(chi)  # adds 0 where not chosen
+        u_c = jnp.where(ch, u, v_dummy)
+        v_c = jnp.where(ch, v, v_dummy)
+        old_u = carry.replicas[u_c, ch_p]
+        old_v = carry.replicas[v_c, ch_p]
+        replicas = carry.replicas.at[u_c, ch_p].max(ch).at[v_c, ch_p].max(ch)
+        new_u = (ch & ~old_u).astype(jnp.int32)
+        new_v = (ch & ~old_v).astype(jnp.int32)
+        rep_version = carry.rep_version.at[u_c].add(new_u).at[v_c].add(new_v)
+        win_valid = win_valid & ~ch
+        n_valid = n_valid - n_ch
+        assigned = carry.assigned + n_ch
+
+        lam = scoring.lambda_update(
+            carry.lam, sizes, allowed, assigned, m_real, cfg.lam_lo, cfg.lam_hi
+        )
+
+        # ---- 7) Modeled latency + adaptive window controller (§III-A). ----
+        step_cost = n_scored.astype(jnp.float32) * jnp.float32(k) * carry.cost_per_score + carry.base_cost
+        budget_left = carry.budget_left - step_cost
+        lat_edge = step_cost / jnp.maximum(n_ch.astype(jnp.float32), 1.0)
+        lat_ema = jnp.where(
+            carry.assigned == 0, lat_edge, 0.9 * carry.lat_ema + 0.1 * lat_edge
+        )
+        c = carry.c + n_ch
+        sum_g = carry.sum_g + g_sum
+        trigger = jnp.asarray(cfg.adapt) & (c >= carry.w_cap)
+        avg_g = sum_g / jnp.maximum(c.astype(jnp.float32), 1.0)
+        c1 = (~carry.last_grew) | (avg_g >= carry.avg_g_prev)
+        if has_budget:
+            edges_left = jnp.maximum(m_real - assigned, 1).astype(jnp.float32)
+            c2 = lat_ema < budget_left / edges_left
+        else:
+            c2 = jnp.asarray(True)
+        grow = trigger & c1 & c2 & (carry.w_cap < w_max)
+        shrink = trigger & ~c2
+        w_lo = jnp.int32(max(1, b))
+        w_new = jnp.where(
+            grow,
+            jnp.minimum(2 * carry.w_cap, w_max),
+            jnp.where(shrink, jnp.maximum((carry.w_cap + 1) // 2, w_lo), carry.w_cap),
+        )
+        out = StepOut(sidx=out_s, p=out_p, w_cap=carry.w_cap, g_chosen=g_sum)
+        new_carry = Carry(
+            replicas=replicas,
+            rep_version=rep_version,
+            deg=deg,
+            max_deg=max_deg,
+            sizes=sizes,
+            lam=lam,
+            w_cap=w_new,
+            cursor=cursor,
+            n_valid=n_valid,
+            win_uv=win_uv,
+            win_sidx=win_sidx,
+            win_valid=win_valid,
+            cached_rcs=cached_rcs,
+            cached_ver_u=cached_ver_u,
+            cached_ver_v=cached_ver_v,
+            theta=theta,
+            assigned=assigned,
+            score_rows=score_rows,
+            c=jnp.where(trigger, 0, c),
+            sum_g=jnp.where(trigger, 0.0, sum_g),
+            avg_g_prev=jnp.where(trigger, avg_g, carry.avg_g_prev),
+            last_grew=jnp.where(trigger, grow, carry.last_grew),
+            budget_left=budget_left,
+            lat_ema=lat_ema,
+            cost_per_score=carry.cost_per_score,
+            base_cost=carry.base_cost,
+        )
+        return new_carry, out
+
+    return step
+
+
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "num_vertices", "r_sel", "n_steps", "has_budget"),
+)
+def _run_chunk(
+    carry: Carry,
+    stream: jax.Array,
+    m_real: jax.Array,
+    allowed: jax.Array,
+    cap: jax.Array,
+    *,
+    cfg: AdwiseConfig,
+    num_vertices: int,
+    r_sel: int,
+    n_steps: int,
+    has_budget: bool,
+) -> tuple[Carry, StepOut]:
+    step = _make_step(cfg, num_vertices, r_sel, stream, m_real, allowed, cap, has_budget)
+    return jax.lax.scan(step, carry, None, length=n_steps)
+
+
+def partition_stream(
+    edges: np.ndarray,
+    num_vertices: int,
+    cfg: AdwiseConfig,
+    *,
+    allowed: Optional[np.ndarray] = None,
+    n_chunks: int = 8,
+    cost_per_score: Optional[float] = None,
+) -> PartitionResult:
+    """Partition an edge stream with ADWISE (vectorized scan).
+
+    Args:
+      edges: (m, 2) int32 edge stream.
+      num_vertices: |V|.
+      cfg: AdwiseConfig.
+      allowed: optional bool (k,) mask of partitions this instance may fill
+        (spotlight spread). Default: all partitions.
+      n_chunks: stream is processed in this many scan calls; wall-clock
+        between chunks recalibrates the (C2) latency model.
+      cost_per_score: optional fixed seconds per (edge,partition) score
+        evaluation; overrides calibration (deterministic tests).
+
+    Returns: PartitionResult with assign (int32[m]) and stats.
+    """
+    m = int(len(edges))
+    k = cfg.k
+    if m == 0:
+        return PartitionResult(np.zeros((0,), np.int32), dict(k=k))
+    b = cfg.assign_batch
+    r_sel = cfg.window_max
+    if cfg.lazy:
+        r_sel = min(cfg.window_max, max(b, cfg.lazy_budget or max(8, cfg.window_max // 8)))
+    allowed_np = (
+        np.ones((k,), bool) if allowed is None else np.asarray(allowed, bool)
+    )
+    n_allowed = max(int(allowed_np.sum()), 1)
+    if cfg.cap_slack is not None:
+        cap_val = int(math.ceil(cfg.cap_slack * m / n_allowed)) + 1
+    else:
+        cap_val = int(_BIG_I32)
+
+    steps_total = -(-m // b) + -(-cfg.window_max // b) + 2
+    n_chunks = max(1, min(n_chunks, steps_total))
+    chunk_steps = -(-steps_total // n_chunks)
+    n_chunks = -(-steps_total // chunk_steps)
+
+    budget = cfg.latency_budget if cfg.latency_budget is not None else 0.0
+    has_budget = cfg.latency_budget is not None
+    carry = _init_carry(cfg, num_vertices, budget)
+    fixed_cost = cost_per_score is not None
+    if fixed_cost:
+        carry = carry._replace(cost_per_score=jnp.float32(cost_per_score))
+
+    stream = jnp.asarray(edges, jnp.int32)
+    m_real = jnp.int32(m)
+    allowed_j = jnp.asarray(allowed_np)
+    cap_j = jnp.int32(cap_val)
+
+    outs = []
+    t0 = time.perf_counter()
+    for _ in range(n_chunks):
+        carry, out = _run_chunk(
+            carry,
+            stream,
+            m_real,
+            allowed_j,
+            cap_j,
+            cfg=cfg,
+            num_vertices=num_vertices,
+            r_sel=r_sel,
+            n_steps=chunk_steps,
+            has_budget=has_budget,
+        )
+        outs.append(jax.tree.map(np.asarray, out))
+        if has_budget and not fixed_cost:
+            # Recalibrate the latency model against reality.
+            jax.block_until_ready(carry.score_rows)
+            wall = time.perf_counter() - t0
+            rows = max(int(carry.score_rows), 1)
+            carry = carry._replace(
+                cost_per_score=jnp.float32(wall / (rows * k)),
+                budget_left=jnp.float32(cfg.latency_budget - wall),
+            )
+    wall = time.perf_counter() - t0
+
+    sidx = np.concatenate([o.sidx.reshape(-1) for o in outs])
+    pout = np.concatenate([o.p.reshape(-1) for o in outs])
+    assign = np.full((m,), -1, np.int32)
+    live = sidx >= 0
+    assign[sidx[live]] = pout[live]
+    w_trace = np.concatenate([np.atleast_1d(o.w_cap) for o in outs])
+    stats = dict(
+        k=k,
+        name="adwise",
+        wall_time_s=wall,
+        score_count=int(carry.score_rows) * k,
+        score_rows=int(carry.score_rows),
+        final_w=int(carry.w_cap),
+        w_trace=w_trace,
+        lam_final=float(carry.lam),
+        assigned=int(carry.assigned),
+        r_sel=r_sel,
+        modeled_cost_per_score=float(carry.cost_per_score),
+    )
+    return PartitionResult(assign, stats)

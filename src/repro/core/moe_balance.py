@@ -1,0 +1,67 @@
+"""ADWISE-style adaptive balancing applied to MoE token routing (beyond-paper).
+
+The paper's partitioner balances edge→partition assignment with an *adaptive*
+weight λ(ι, α)·B(p) (Eq. 3/4) instead of a fixed balance coefficient. The
+token→expert assignment in a capacity-constrained MoE is the same bipartite
+streaming-assignment problem: tokens ≙ edges, experts ≙ partitions, expert
+overflow (dropped tokens) ≙ imbalance cost, router score ≙ replication score.
+
+`adwise_router_bias` maintains running expert loads across steps and returns
+the additive bias λ·B(e) for the router logits:
+
+  B(e) = (maxload − load_e) / (maxload − minload + ε)            (Eq. 3)
+  λ   += (ι − tolerance(α)),  clipped to [λ_lo, λ_hi]            (Eq. 4)
+
+with ι the current load imbalance and α the fraction of the training horizon
+elapsed (early in training the balance pressure is relaxed, exactly like the
+early stream phase in the paper). Benchmarked against plain top-k +
+aux-loss routing in `benchmarks/bench_moe_balance.py`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MoeBalanceState", "init_moe_balance", "adwise_router_bias"]
+
+
+class MoeBalanceState(NamedTuple):
+    loads: jax.Array  # (E,) f32 — cumulative routed tokens per expert
+    lam: jax.Array  # () f32
+
+
+def init_moe_balance(n_experts: int, lam_init: float = 1.0) -> MoeBalanceState:
+    return MoeBalanceState(
+        loads=jnp.zeros((n_experts,), jnp.float32), lam=jnp.float32(lam_init)
+    )
+
+
+LOAD_EMA = 0.65  # responsiveness of the load estimate (distribution drift)
+
+
+def adwise_router_bias(
+    state: MoeBalanceState,
+    progress: jax.Array,  # () f32 in [0, 1] — step / total_steps (the α analogue)
+    eps: float = 0.01,
+    lam_lo: float = 0.4,
+    lam_hi: float = 5.0,
+) -> Tuple[jax.Array, MoeBalanceState]:
+    """Returns (router bias (E,), state with updated λ). Call update_loads after."""
+    mx = jnp.max(state.loads)
+    mn = jnp.min(state.loads)
+    bal = (mx - state.loads) / (mx - mn + eps)
+    iota = jnp.where(mx > 0, (mx - mn) / jnp.maximum(mx, 1.0), 0.0)
+    tol = jnp.maximum(0.0, 1.0 - progress)
+    lam = jnp.clip(state.lam + (iota - tol), lam_lo, lam_hi)
+    return lam * bal, MoeBalanceState(loads=state.loads, lam=lam)
+
+
+def update_loads(state: MoeBalanceState, expert_counts: jax.Array) -> MoeBalanceState:
+    """EMA rather than a cumulative sum: the edge stream analogue is the
+    *current* partition fill, and an EMA tracks it under distribution drift
+    (a cumulative sum reacts ~1/steps too slowly — measured in
+    benchmarks/bench_moe_balance.py)."""
+    loads = LOAD_EMA * state.loads + (1.0 - LOAD_EMA) * expert_counts
+    return MoeBalanceState(loads=loads, lam=state.lam)

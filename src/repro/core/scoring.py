@@ -1,0 +1,125 @@
+"""Vectorized ADWISE scoring (Eq. 3-7) in pure jnp.
+
+These functions are shared by the lax.scan partitioner (`core/adwise.py`),
+the Pallas kernel oracle (`kernels/ref.py`) and the tests. Shapes:
+
+  W = window capacity (static), K = number of partitions (static).
+
+All scores are computed for the whole (W, K) grid; masking decides validity.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "balance_score",
+    "replication_score",
+    "clustering_terms",
+    "window_scores",
+    "lambda_update",
+]
+
+NEG_INF = -1e30
+
+
+def balance_score(sizes: jax.Array, allowed: jax.Array, eps: float) -> jax.Array:
+    """Eq. 3: B(p) = (maxsize - |p|) / (maxsize - minsize + eps), masked to allowed."""
+    mx = jnp.max(jnp.where(allowed, sizes, jnp.iinfo(jnp.int32).min))
+    mn = jnp.min(jnp.where(allowed, sizes, jnp.iinfo(jnp.int32).max))
+    return (mx - sizes).astype(jnp.float32) / (mx - mn + eps).astype(jnp.float32)
+
+
+def replication_score(
+    rep_u: jax.Array,  # (W, K) bool — replicas of u_i
+    rep_v: jax.Array,  # (W, K) bool
+    deg_u: jax.Array,  # (W,) int32 partial degrees
+    deg_v: jax.Array,  # (W,)
+    max_deg: jax.Array,  # () int32
+) -> jax.Array:
+    """Eq. 5 with the *absolute* degree normalisation Ψ_x = deg(x)/(2·maxDeg)."""
+    denom = 2.0 * jnp.maximum(max_deg, 1).astype(jnp.float32)
+    psi_u = deg_u.astype(jnp.float32) / denom
+    psi_v = deg_v.astype(jnp.float32) / denom
+    return rep_u * (2.0 - psi_u)[:, None] + rep_v * (2.0 - psi_v)[:, None]
+
+
+def clustering_terms(
+    win_uv: jax.Array,  # (W, 2) int32
+    win_valid: jax.Array,  # (W,) bool
+    rep_u: jax.Array,  # (W, K) f32/bool — replicas of u_j rows
+    rep_v: jax.Array,  # (W, K)
+) -> tuple[jax.Array, jax.Array]:
+    """Window-local clustering score CS (Eq. 6), multiset semantics.
+
+    For window slots i, j: edge j contributes its endpoint v_j to N(u_i)∪N(v_i)
+    iff u_j ∈ {u_i, v_i} (and symmetrically u_j if v_j matches). Returns
+    (numerator (W,K), denominator (W,)).
+
+    The O(W²) match matrices become two (W,W)x(W,K) matmuls — MXU food. This
+    is the computation the `window_score` Pallas kernel fuses.
+    """
+    u = win_uv[:, 0]
+    v = win_uv[:, 1]
+    vj = win_valid[None, :]
+    noti = ~jnp.eye(u.shape[0], dtype=bool)
+    # A[i, j]: u_j matches an endpoint of edge i  -> neighbour is v_j.
+    a = (u[None, :] == u[:, None]) | (u[None, :] == v[:, None])
+    # B[i, j]: v_j matches an endpoint of edge i  -> neighbour is u_j.
+    b = (v[None, :] == u[:, None]) | (v[None, :] == v[:, None])
+    a = (a & vj & noti).astype(jnp.float32)
+    b = (b & vj & noti).astype(jnp.float32)
+    num = a @ rep_v.astype(jnp.float32) + b @ rep_u.astype(jnp.float32)
+    den = jnp.sum(a, axis=1) + jnp.sum(b, axis=1)
+    return num, den
+
+
+@partial(jax.jit, static_argnames=("use_cs", "eps"))
+def window_scores(
+    win_uv: jax.Array,  # (W, 2)
+    win_valid: jax.Array,  # (W,)
+    rep_u: jax.Array,  # (W, K) bool
+    rep_v: jax.Array,  # (W, K) bool
+    deg_u: jax.Array,  # (W,)
+    deg_v: jax.Array,  # (W,)
+    max_deg: jax.Array,  # ()
+    sizes: jax.Array,  # (K,)
+    allowed: jax.Array,  # (K,) bool (spotlight spread / capacity mask)
+    lam: jax.Array,  # ()
+    *,
+    use_cs: bool = True,
+    eps: float = 0.01,
+) -> jax.Array:
+    """Full g(e,p) = λ·B(p) + R(e,p) + CS(e,p) (Eq. 7), (W, K), masked with -inf."""
+    bal = balance_score(sizes, allowed, eps)
+    g = lam * bal[None, :] + replication_score(rep_u, rep_v, deg_u, deg_v, max_deg)
+    if use_cs:
+        num, den = clustering_terms(win_uv, win_valid, rep_u, rep_v)
+        g = g + num / jnp.maximum(den, 1.0)[:, None]
+    g = jnp.where(win_valid[:, None], g, NEG_INF)
+    g = jnp.where(allowed[None, :], g, NEG_INF)
+    return g
+
+
+def lambda_update(
+    lam: jax.Array,
+    sizes: jax.Array,
+    allowed: jax.Array,
+    assigned: jax.Array,
+    m_total: jax.Array,
+    lo: float,
+    hi: float,
+) -> jax.Array:
+    """Adaptive balance weight (Eq. 4): λ += (ι − tolerance(α)), clipped.
+
+    ι = (maxsize − minsize)/maxsize over allowed partitions,
+    tolerance(α) = max(0, 1 − α), α = assigned/m.
+    """
+    mx = jnp.max(jnp.where(allowed, sizes, 0)).astype(jnp.float32)
+    mn = jnp.min(jnp.where(allowed, sizes, jnp.iinfo(jnp.int32).max)).astype(jnp.float32)
+    iota = jnp.where(mx > 0, (mx - mn) / jnp.maximum(mx, 1.0), 0.0)
+    alpha = assigned.astype(jnp.float32) / jnp.maximum(m_total.astype(jnp.float32), 1.0)
+    tol = jnp.maximum(0.0, 1.0 - alpha)
+    return jnp.clip(lam + (iota - tol), lo, hi)

@@ -1,0 +1,122 @@
+"""Spotlight partitioning (§III-D): reduce the *spread* of parallel partitioners.
+
+With ``z`` parallel partitioner instances and ``k`` global partitions, each
+instance ``i`` is restricted to a window ("spread") of ``s`` partitions
+starting at ``i * k/z`` (cyclic). ``s = k/z`` gives fully disjoint blocks —
+the configuration the paper recommends; ``s = k`` degenerates to the usual
+full-spread parallel loading. Spotlight composes with *any* streaming
+partitioner ("can be applied on top of any existing algorithm").
+
+Each instance consumes a disjoint contiguous chunk of the stream and keeps
+its **own** vertex cache (the paper's parallel loading model — no
+communication during partitioning).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import baselines
+from repro.core.adwise import partition_stream
+from repro.core.types import AdwiseConfig, PartitionResult
+from repro.graph.stream import EdgeStream
+
+__all__ = ["spread_mask", "spotlight_partition"]
+
+
+def spread_mask(k: int, z: int, instance: int, spread: int) -> np.ndarray:
+    """bool (k,): partitions instance ``i`` may fill — cyclic block of ``spread``."""
+    assert 1 <= spread <= k
+    start = (instance * k) // z
+    idx = (start + np.arange(spread)) % k
+    mask = np.zeros((k,), bool)
+    mask[idx] = True
+    return mask
+
+
+def _masked_hdrf(edges, num_vertices, k, allowed, seed):
+    """HDRF restricted to an allowed partition set (scores masked)."""
+    res = baselines.hdrf_partition(edges, num_vertices, int(allowed.sum()), seed=seed)
+    local_to_global = np.flatnonzero(allowed).astype(np.int32)
+    return PartitionResult(local_to_global[res.assign], res.stats)
+
+
+def _masked_dbh(edges, num_vertices, k, allowed, seed):
+    res = baselines.dbh_partition(edges, num_vertices, int(allowed.sum()), seed=seed)
+    local_to_global = np.flatnonzero(allowed).astype(np.int32)
+    return PartitionResult(local_to_global[res.assign], res.stats)
+
+
+def _masked_hash(edges, num_vertices, k, allowed, seed):
+    res = baselines.hash_partition(edges, num_vertices, int(allowed.sum()), seed=seed)
+    local_to_global = np.flatnonzero(allowed).astype(np.int32)
+    return PartitionResult(local_to_global[res.assign], res.stats)
+
+
+def spotlight_partition(
+    edges: np.ndarray,
+    num_vertices: int,
+    k: int,
+    z: int,
+    spread: int,
+    strategy: str = "adwise",
+    cfg: Optional[AdwiseConfig] = None,
+    seed: int = 0,
+    partitioner: Optional[Callable] = None,
+) -> PartitionResult:
+    """Run ``z`` parallel partitioner instances with a limited spread.
+
+    Args:
+      strategy: 'adwise' | 'hdrf' | 'dbh' | 'hash', or pass ``partitioner``:
+        callable (edges, num_vertices, k, allowed, seed) -> PartitionResult
+        with *global* partition ids.
+      cfg: AdwiseConfig for strategy='adwise' (k is overridden).
+      spread: partitions per instance; k/z = disjoint spotlight blocks.
+
+    Note: instances run sequentially here (single host); wall_time_s reports
+    the *parallel* model max(instance walls), matching the paper's cluster
+    setup where instances run on separate machines.
+    """
+    stream = EdgeStream(edges, num_vertices)
+    subs = stream.split(z)
+    m = stream.num_edges
+    assign = np.full((m,), -1, np.int32)
+    offsets = np.linspace(0, m, z + 1).astype(np.int64)
+    walls, score_counts = [], 0
+    t0 = time.perf_counter()
+    for i, sub in enumerate(subs):
+        allowed = spread_mask(k, z, i, spread)
+        if partitioner is not None:
+            res = partitioner(sub.edges, num_vertices, k, allowed, seed + i)
+        elif strategy == "adwise":
+            c = cfg or AdwiseConfig(k=k)
+            if c.k != k:
+                import dataclasses
+
+                c = dataclasses.replace(c, k=k)
+            # Per-instance latency budget: the budget is wall-clock and the
+            # instances run in parallel on the cluster, so each gets L.
+            res = partition_stream(sub.edges, num_vertices, c, allowed=allowed)
+        elif strategy == "hdrf":
+            res = _masked_hdrf(sub.edges, num_vertices, k, allowed, seed + i)
+        elif strategy == "dbh":
+            res = _masked_dbh(sub.edges, num_vertices, k, allowed, seed + i)
+        elif strategy == "hash":
+            res = _masked_hash(sub.edges, num_vertices, k, allowed, seed + i)
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+        assign[offsets[i] : offsets[i + 1]] = res.assign
+        walls.append(res.stats.get("wall_time_s", 0.0))
+        score_counts += res.stats.get("score_count", 0)
+    stats = dict(
+        k=k,
+        z=z,
+        spread=spread,
+        name=f"spotlight-{strategy}",
+        wall_time_s=max(walls) if walls else 0.0,
+        wall_time_serial_s=time.perf_counter() - t0,
+        score_count=score_counts,
+    )
+    return PartitionResult(assign, stats)

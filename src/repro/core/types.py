@@ -1,0 +1,81 @@
+"""Shared dataclasses for partitioner configuration and results."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+__all__ = ["AdwiseConfig", "PartitionResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdwiseConfig:
+    """Configuration of the ADWISE partitioner (paper §III defaults).
+
+    Attributes:
+      k: number of partitions.
+      window_max: W_max — static capacity of the window buffer. The logical
+        window size ``w`` adapts within [1, window_max].
+      window_init: initial logical window size (paper: 1).
+      latency_budget: latency preference L in seconds. None = no budget (the
+        window grows while C1 holds).
+      lam_init: initial adaptive balance weight λ (paper keeps λ ∈ [0.4, 5];
+        the initial value is unspecified — we use 1.0).
+      lam_lo / lam_hi: clip interval for λ (paper: [0.4, 5]).
+      eps: ε used in B(p) denominator and the candidate threshold Θ = g_avg+ε.
+      use_clustering: enable the clustering score CS (paper switches it off
+        for low-clustering graphs such as Orkut).
+      lazy: enable lazy window traversal (candidate/secondary sets).
+      lazy_budget: max number of window slots rescored per step under lazy
+        traversal (None = window_max // 8). Bounded staleness beyond the
+        paper's candidate mechanism — see DESIGN.md §3.
+      cap_slack: hard balance cap — partitions with more than
+        cap_slack * m / k edges are masked out of the argmax. Guarantees the
+        Eq. 2 constraint; set to None to rely purely on λ·B(p).
+      assign_batch: number of vertex-disjoint assignments per scoring round.
+        1 == paper-faithful sequential Algorithm 1. >1 is the beyond-paper
+        SIMD batching documented in DESIGN.md.
+      adapt: enable the adaptive window controller (C1/C2). When False the
+        window stays at window_init.
+      seed: tie-break seed.
+    """
+
+    k: int
+    window_max: int = 256
+    window_init: int = 1
+    latency_budget: Optional[float] = None
+    lam_init: float = 1.0
+    lam_lo: float = 0.4
+    lam_hi: float = 5.0
+    eps: float = 0.01
+    use_clustering: bool = True
+    lazy: bool = True
+    lazy_budget: Optional[int] = None
+    cap_slack: Optional[float] = 1.15
+    assign_batch: int = 1
+    adapt: bool = True
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        assert self.k >= 1
+        assert 1 <= self.window_init <= self.window_max
+        assert self.assign_batch >= 1
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    """Outcome of a partitioning run.
+
+    Attributes:
+      assign: int32[m] — partition id per edge, in the original stream order.
+      stats: counters — score computations, window-size trace, λ trace,
+        wall-clock partitioning latency, etc.
+    """
+
+    assign: np.ndarray
+    stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def k(self) -> int:
+        return int(self.stats.get("k", self.assign.max() + 1))

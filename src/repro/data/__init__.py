@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (shard-aware, resumable)."""
+from repro.data.pipeline import SyntheticTokens, make_batch_spec
+
+__all__ = ["SyntheticTokens", "make_batch_spec"]

@@ -1,0 +1,118 @@
+"""Gather-Apply-Scatter supersteps over `shard_map`.
+
+The engine executes vertex programs on a vertex-cut partitioned graph. Each
+device owns a slab of partitions (axis `parts`); one superstep is:
+
+  gather : per-partition edge aggregation into local vertex accumulators
+           (the `segment_sum` kernel's job on TPU; `.at[].add` under XLA)
+  sync   : replica synchronisation — combine accumulators across the
+           partitions a vertex is replicated on (lax.psum over `parts`)
+  apply  : vertex update function on the synchronised accumulator
+
+The dense psum is the XLA-friendly stand-in for the sparse point-to-point
+replica sync a cluster engine (GrapH) performs; the *modeled* traffic —
+what the paper's processing latency is driven by — is derived from the
+replica table in `latency_model.py`. On a real TPU pod the psum itself also
+shrinks with replication degree when the accumulator is masked to local
+replicas, which we do (zeros compress under sparse collectives; on GPU/IB
+clusters the mask is what a ragged all-to-all would send).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.engine.partitioned import PartitionedGraph
+
+__all__ = ["make_superstep", "engine_mesh", "gather_local"]
+
+
+def engine_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D engine mesh over all (or the first n) local devices."""
+    devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
+    return jax.make_mesh((len(devs),), ("parts",), devices=np.array(devs))
+
+
+BIG = jnp.float32(3.0e38)
+
+
+def gather_local(
+    edges: jax.Array,  # (kp, E, 2) — this shard's partitions
+    evalid: jax.Array,  # (kp, E)
+    vertex_data: jax.Array,  # (V, d) — replicated current state
+    degrees: jax.Array,  # (V,)
+    msg_fn: Callable,  # (x_u, x_v, deg_u, deg_v) -> (msg_to_v, msg_to_u)
+    num_vertices: int,
+    agg: str = "add",
+) -> jax.Array:
+    """Per-shard edge aggregation: (kp, V, d) local accumulators."""
+
+    def one_partition(e, valid):
+        u, v = e[:, 0], e[:, 1]
+        mu, mv = msg_fn(vertex_data[u], vertex_data[v], degrees[u], degrees[v])
+        if agg == "add":
+            w = valid[:, None].astype(mu.dtype)
+            acc = jnp.zeros((num_vertices, mu.shape[-1]), mu.dtype)
+            acc = acc.at[v].add(mu * w)  # message flowing u -> v
+            acc = acc.at[u].add(mv * w)  # message flowing v -> u (undirected)
+        elif agg == "min":
+            mu = jnp.where(valid[:, None], mu, BIG)
+            mv = jnp.where(valid[:, None], mv, BIG)
+            acc = jnp.full((num_vertices, mu.shape[-1]), BIG, mu.dtype)
+            acc = acc.at[v].min(mu)
+            acc = acc.at[u].min(mv)
+        else:
+            raise ValueError(agg)
+        return acc
+
+    return jax.vmap(one_partition)(edges, evalid)
+
+
+def make_superstep(
+    g: PartitionedGraph,
+    msg_fn: Callable,
+    apply_fn: Callable,  # (state, synced_acc, degrees) -> state
+    mesh: Mesh,
+    combine: str = "add",
+):
+    """Build a jitted superstep: state (V, d) -> state (V, d).
+
+    The partition axis of `g.edges` is sharded over the mesh's `parts` axis;
+    vertex state is replicated (small next to edges, the usual vertex-cut
+    regime). Accumulators are masked to each partition's replica set before
+    the cross-partition combine — the masked entries are the engine's real
+    traffic.
+    """
+    v, k = g.num_vertices, g.k
+    repl_t = jnp.asarray(np.asarray(g.replicas).T)  # (k, V)
+
+    def step(state, edges, evalid, replicas_t, degrees):
+        acc = gather_local(edges, evalid, state, degrees, msg_fn, v, agg=combine)
+        if combine == "add":
+            local = (acc * replicas_t[:, :, None]).sum(axis=0)  # mask to replicas
+            synced = jax.lax.psum(local, "parts")
+        elif combine == "min":
+            local = jnp.where(replicas_t[:, :, None] > 0, acc, BIG).min(axis=0)
+            synced = jax.lax.pmin(local, "parts")
+        else:
+            raise ValueError(combine)
+        return apply_fn(state, synced, degrees)
+
+    shard_step = jax.shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(P(), P("parts"), P("parts"), P("parts"), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def superstep(state):
+        return shard_step(state, g.edges, g.evalid, repl_t, g.degrees)
+
+    return superstep

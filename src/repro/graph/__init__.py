@@ -1,0 +1,32 @@
+"""Graph substrate: synthetic generators, edge streams, storage, metrics."""
+from repro.graph.generate import (
+    barabasi_albert,
+    erdos_renyi,
+    rmat,
+    watts_strogatz,
+    make_graph,
+    GRAPH_PRESETS,
+)
+from repro.graph.stream import EdgeStream
+from repro.graph.metrics import (
+    replication_degree,
+    partition_balance,
+    partition_sizes,
+    replica_sets_from_assignment,
+    sync_volume,
+)
+
+__all__ = [
+    "barabasi_albert",
+    "erdos_renyi",
+    "rmat",
+    "watts_strogatz",
+    "make_graph",
+    "GRAPH_PRESETS",
+    "EdgeStream",
+    "replication_degree",
+    "partition_balance",
+    "partition_sizes",
+    "replica_sets_from_assignment",
+    "sync_volume",
+]

@@ -1,0 +1,85 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each op takes `impl` ∈ {'auto', 'pallas', 'ref'}:
+  * 'pallas' — pl.pallas_call; on CPU this runs interpret=True (the container
+    has no TPU), on TPU it lowers for real.
+  * 'ref'    — the pure-jnp oracle (XLA). This is the default inside model /
+    partitioner code paths that must `.lower().compile()` on CPU host devices
+    (the multi-pod dry-run), where a TPU Pallas kernel cannot compile.
+  * 'auto'   — 'pallas' on TPU backends, 'ref' elsewhere.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.segment_sum import EB, SB, csr_block_layout, segment_sum_pallas
+from repro.kernels.window_score import window_score_pallas
+
+__all__ = ["window_score", "segment_sum_sorted", "flash_attention", "resolve_impl"]
+
+
+def resolve_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def window_score(
+    win_uv, win_valid, rep_u, rep_v, deg_u, deg_v, bal, allowed, lam, max_deg,
+    *, use_cs: bool = True, impl: str = "auto",
+):
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        return window_score_pallas(
+            win_uv, win_valid, rep_u, rep_v, deg_u, deg_v, bal, allowed,
+            jnp.asarray(lam), jnp.asarray(max_deg),
+            use_cs=use_cs, interpret=_interpret(),
+        )
+    return _ref.window_score_ref(
+        win_uv, win_valid, rep_u, rep_v, deg_u, deg_v, bal, allowed,
+        jnp.asarray(lam), jnp.asarray(max_deg), use_cs=use_cs,
+    )
+
+
+def segment_sum_sorted(
+    data: jax.Array,  # (E, D) — messages sorted by seg id
+    seg_ids: np.ndarray,  # (E,) sorted, HOST array (static layout per graph)
+    num_segments: int,
+    *, impl: str = "auto",
+):
+    """Segment sum where the segment layout is static (known per graph)."""
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        perm, loc, chunk_ptr, nchunks, e_pad = csr_block_layout(
+            np.asarray(seg_ids), num_segments, data.shape[1]
+        )
+        gather = jnp.where(perm[:, None] >= 0, data[jnp.maximum(perm, 0)], 0.0)
+        return segment_sum_pallas(
+            gather.astype(jnp.float32),
+            jnp.asarray(loc),
+            jnp.asarray(chunk_ptr),
+            jnp.asarray(nchunks),
+            num_segments,
+            max_chunks=int(nchunks.max()),
+            interpret=_interpret(),
+        )
+    return _ref.segment_sum_ref(data, jnp.asarray(seg_ids), num_segments)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None, impl: str = "auto"):
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale, interpret=_interpret()
+        )
+    return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated against
+(interpret=True on CPU, real lowering on TPU). They are also the fallback
+implementation used by the models / partitioner when `use_pallas=False`
+(the default on CPU, where Pallas TPU kernels cannot lower).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+__all__ = ["window_score_ref", "segment_sum_ref", "flash_attention_ref"]
+
+
+def window_score_ref(
+    win_uv: jax.Array,  # (W, 2) int32
+    win_valid: jax.Array,  # (W,) bool
+    rep_u: jax.Array,  # (W, K) bool/f32 — replica rows for u_i
+    rep_v: jax.Array,  # (W, K)
+    deg_u: jax.Array,  # (W,) int32
+    deg_v: jax.Array,  # (W,) int32
+    bal: jax.Array,  # (K,) f32 — precomputed balance scores B(p)
+    allowed: jax.Array,  # (K,) bool
+    lam: jax.Array,  # () f32
+    max_deg: jax.Array,  # () int32
+    *,
+    use_cs: bool = True,
+) -> jax.Array:
+    """ADWISE g(e,p) = λ·B(p) + R(e,p) + CS(e,p) over the full (W, K) grid.
+
+    Multiset window-local CS semantics (DESIGN.md §3). Invalid rows/partitions
+    masked to NEG_INF. This mirrors `repro.core.scoring.window_scores` but
+    takes B(p) precomputed so kernel and oracle share the exact same inputs.
+    """
+    w = win_uv.shape[0]
+    u, v = win_uv[:, 0], win_uv[:, 1]
+    denom = 2.0 * jnp.maximum(max_deg, 1).astype(jnp.float32)
+    psi_u = deg_u.astype(jnp.float32) / denom
+    psi_v = deg_v.astype(jnp.float32) / denom
+    repu_f = rep_u.astype(jnp.float32)
+    repv_f = rep_v.astype(jnp.float32)
+    g = repu_f * (2.0 - psi_u)[:, None] + repv_f * (2.0 - psi_v)[:, None]
+    if use_cs:
+        vj = win_valid[None, :]
+        noti = ~jnp.eye(w, dtype=bool)
+        a = ((u[None, :] == u[:, None]) | (u[None, :] == v[:, None])) & vj & noti
+        b = ((v[None, :] == u[:, None]) | (v[None, :] == v[:, None])) & vj & noti
+        af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+        num = af @ repv_f + bf @ repu_f
+        den = af.sum(axis=1) + bf.sum(axis=1)
+        g = g + num / jnp.maximum(den, 1.0)[:, None]
+    g = g + lam * bal[None, :]
+    g = jnp.where(win_valid[:, None] & allowed[None, :], g, NEG_INF)
+    return g
+
+
+def segment_sum_ref(
+    data: jax.Array,  # (E, D) f32 — per-edge messages, sorted by segment
+    seg_ids: jax.Array,  # (E,) int32 — destination segment per row (sorted)
+    num_segments: int,
+) -> jax.Array:
+    """(S, D) segment sum — the engine's edge→vertex accumulation."""
+    return jax.ops.segment_sum(data, seg_ids, num_segments=num_segments)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Hq, Tq, Dh)
+    k: jax.Array,  # (B, Hkv, Tk, Dh)
+    v: jax.Array,  # (B, Hkv, Tk, Dh)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """GQA softmax attention oracle (fp32 accumulation)."""
+    b, hq, tq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (dh**0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, hkv, group, tq, dh)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+    if causal:
+        tk = k.shape[2]
+        # Align causality to the *end* of the KV sequence (decode-friendly).
+        qpos = jnp.arange(tq) + (tk - tq)
+        mask = qpos[:, None] >= jnp.arange(tk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, tq, dh).astype(q.dtype)

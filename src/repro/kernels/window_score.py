@@ -1,0 +1,151 @@
+"""Pallas TPU kernel for the ADWISE window scoring hot loop.
+
+The partitioner's inner loop evaluates g(e,p) = λ·B(p) + R(e,p) + CS(e,p)
+for every (window edge, partition) pair — w × k scores per assignment. The
+paper's whole latency knob is this computation (§III-A/B), so it is the
+kernel-worthy hot spot.
+
+TPU adaptation (see DESIGN.md §3/§5): the clustering score's window-local
+neighbourhood test is an O(W²) endpoint-match which we phrase as two
+(BW, W) × (W, K) matmuls — MXU work — fused with the VPU-friendly R and
+λ·B terms, one pass over VMEM-resident window state:
+
+  grid  = (W / BW,)                       one program per row tile
+  VMEM  = u,v,deg,valid (1, W) rows; replica tables (W, K);
+          balance/allowed (1, K); out tile (BW, K)
+
+W and K are padded to multiples of (BW=128, 128) so matmul operands are
+MXU-aligned. Padded rows/columns carry valid=0 / allowed=0 and are masked to
+NEG_INF, exactly like the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+BW = 128  # row-tile size (MXU sublane-aligned)
+LANE = 128  # lane padding for K
+
+
+def _kernel(
+    u_ref,  # (1, W) int32
+    v_ref,  # (1, W) int32
+    valid_ref,  # (1, W) int32 (0/1)
+    degu_ref,  # (1, W) int32
+    degv_ref,  # (1, W) int32
+    repu_ref,  # (W, K) f32   replica rows of u_j
+    repv_ref,  # (W, K) f32
+    bal_ref,  # (1, K) f32   λ·B(p) already folded in host wrapper? no — raw B(p)
+    allowed_ref,  # (1, K) int32
+    scal_ref,  # (1, 2) f32   [lam, max_deg]
+    out_ref,  # (BW, K) f32
+    *,
+    use_cs: bool,
+):
+    i = pl.program_id(0)
+    w = u_ref.shape[1]
+    u = u_ref[0, :]
+    v = v_ref[0, :]
+    valid = valid_ref[0, :]
+    lam = scal_ref[0, 0]
+    max_deg = scal_ref[0, 1]
+
+    # Row tile of this program.
+    start = i * BW
+    u_i = jax.lax.dynamic_slice(u, (start,), (BW,))
+    v_i = jax.lax.dynamic_slice(v, (start,), (BW,))
+    valid_i = jax.lax.dynamic_slice(valid, (start,), (BW,))
+    deg_u = jax.lax.dynamic_slice(degu_ref[0, :], (start,), (BW,))
+    deg_v = jax.lax.dynamic_slice(degv_ref[0, :], (start,), (BW,))
+    repu_i = jax.lax.dynamic_slice(repu_ref[...], (start, 0), (BW, repu_ref.shape[1]))
+    repv_i = jax.lax.dynamic_slice(repv_ref[...], (start, 0), (BW, repv_ref.shape[1]))
+
+    # Degree-aware replication score R (Eq. 5), Ψ_x = deg(x)/(2·maxDeg).
+    denom = 2.0 * jnp.maximum(max_deg, 1.0)
+    psi_u = deg_u.astype(jnp.float32) / denom
+    psi_v = deg_v.astype(jnp.float32) / denom
+    g = repu_i * (2.0 - psi_u)[:, None] + repv_i * (2.0 - psi_v)[:, None]
+
+    if use_cs:
+        # Window-local neighbourhood match (CS, Eq. 6) as MXU matmuls.
+        col = jax.lax.broadcasted_iota(jnp.int32, (BW, w), 1)
+        row_gid = jax.lax.broadcasted_iota(jnp.int32, (BW, w), 0) + start
+        keep = (valid[None, :] > 0) & (col != row_gid)
+        a = ((u[None, :] == u_i[:, None]) | (u[None, :] == v_i[:, None])) & keep
+        b = ((v[None, :] == u_i[:, None]) | (v[None, :] == v_i[:, None])) & keep
+        af = a.astype(jnp.float32)
+        bf = b.astype(jnp.float32)
+        num = jax.lax.dot(af, repv_ref[...], preferred_element_type=jnp.float32)
+        num += jax.lax.dot(bf, repu_ref[...], preferred_element_type=jnp.float32)
+        den = af.sum(axis=1) + bf.sum(axis=1)
+        g = g + num / jnp.maximum(den, 1.0)[:, None]
+
+    # Adaptive balance term + validity masking.
+    g = g + lam * bal_ref[0, :][None, :]
+    ok = (valid_i[:, None] > 0) & (allowed_ref[0, :][None, :] > 0)
+    out_ref[...] = jnp.where(ok, g, NEG_INF)
+
+
+def window_score_pallas(
+    win_uv: jax.Array,  # (W, 2) int32
+    win_valid: jax.Array,  # (W,) bool
+    rep_u: jax.Array,  # (W, K) bool/f32
+    rep_v: jax.Array,  # (W, K)
+    deg_u: jax.Array,  # (W,) int32
+    deg_v: jax.Array,  # (W,) int32
+    bal: jax.Array,  # (K,) f32
+    allowed: jax.Array,  # (K,) bool
+    lam: jax.Array,  # () f32
+    max_deg: jax.Array,  # () int32
+    *,
+    use_cs: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Padded pallas_call wrapper; returns (W, K) f32 score matrix."""
+    w, k = rep_u.shape
+    w_pad = -(-w // BW) * BW
+    k_pad = -(-k // LANE) * LANE
+
+    def pad2(x, rows, cols, fill=0):
+        return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])), constant_values=fill)
+
+    def pad_row(x, cols, fill=0):
+        return jnp.pad(x, (0, cols - x.shape[0]), constant_values=fill)[None, :]
+
+    u = pad_row(win_uv[:, 0].astype(jnp.int32), w_pad, fill=-1)
+    v = pad_row(win_uv[:, 1].astype(jnp.int32), w_pad, fill=-2)
+    valid = pad_row(win_valid.astype(jnp.int32), w_pad)
+    dgu = pad_row(deg_u.astype(jnp.int32), w_pad)
+    dgv = pad_row(deg_v.astype(jnp.int32), w_pad)
+    ru = pad2(rep_u.astype(jnp.float32), w_pad, k_pad)
+    rv = pad2(rep_v.astype(jnp.float32), w_pad, k_pad)
+    bl = pad_row(bal.astype(jnp.float32), k_pad)
+    al = pad_row(allowed.astype(jnp.int32), k_pad)
+    scal = jnp.stack([lam.astype(jnp.float32), max_deg.astype(jnp.float32)])[None, :]
+
+    full_row = lambda i: (0, 0)
+    grid = (w_pad // BW,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, use_cs=use_cs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w_pad), full_row),  # u
+            pl.BlockSpec((1, w_pad), full_row),  # v
+            pl.BlockSpec((1, w_pad), full_row),  # valid
+            pl.BlockSpec((1, w_pad), full_row),  # deg_u
+            pl.BlockSpec((1, w_pad), full_row),  # deg_v
+            pl.BlockSpec((w_pad, k_pad), full_row),  # rep_u
+            pl.BlockSpec((w_pad, k_pad), full_row),  # rep_v
+            pl.BlockSpec((1, k_pad), full_row),  # bal
+            pl.BlockSpec((1, k_pad), full_row),  # allowed
+            pl.BlockSpec((1, 2), full_row),  # scalars
+        ],
+        out_specs=pl.BlockSpec((BW, k_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((w_pad, k_pad), jnp.float32),
+        interpret=interpret,
+    )(u, v, valid, dgu, dgv, ru, rv, bl, al, scal)
+    return out[:w, :k]

@@ -1,0 +1,1 @@
+"""Launchers: production meshes, sharding rules, dry-run, train/serve/partition."""

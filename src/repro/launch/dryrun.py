@@ -1,0 +1,356 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+CPU devices host the production mesh; every cell must `.lower().compile()`
+and report memory_analysis / cost_analysis / collective bytes.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+# The VERY FIRST lines — before any other import (jax locks the device count
+# on first init):
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from repro.data import make_batch_spec  # noqa: E402
+from repro.launch import sharding as shg  # noqa: E402
+from repro.launch.mesh import MODEL_PARALLEL, make_production_mesh  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.optim import adamw_init, adamw_update, cosine_schedule  # noqa: E402
+
+# TPU v5e hardware constants (roofline denominators).
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8}
+# `%name = <output types> <op>(operands...)`; async starts counted, dones not.
+_COLL_RE = re.compile(
+    r"=\s*(\(?[^=]*?)\s*(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str, trip_counts: dict | None = None) -> dict:
+    """Sum output bytes of every collective op in post-SPMD optimized HLO.
+
+    Bytes = per-device output size of each collective (the data each chip
+    receives). Ops inside `while` bodies are scaled by the loop trip count
+    when `trip_counts` maps computation-name → trips (unrolled dry-runs don't
+    need it).
+    """
+    out: dict = {}
+    scale = 1
+    for line in hlo_text.splitlines():
+        if trip_counts:
+            for comp, trips in trip_counts.items():
+                if line.strip().startswith(f"%{comp}") or line.strip().startswith(comp):
+                    scale = trips
+        m = _COLL_RE.search(line)
+        if not m or m.group(3) == "-done" or "-done(" in line:
+            continue
+        op = m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims else 1
+            nbytes += n * _DTYPE_BYTES.get(dt, 4)
+        out[op] = out.get(op, 0) + nbytes * scale
+    out["total"] = sum(v for k, v in out.items())
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Step builders (shared with launch.train / launch.serve)
+# ----------------------------------------------------------------------------
+
+def make_train_step(cfg, tp: int, unroll: bool = False, batch_axes=None):
+    lr_fn = cosine_schedule(3e-4, 100, 10_000)
+
+    def train_step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            partial(lm.loss_fn, cfg=cfg, tp=tp, unroll=unroll,
+                    batch_axes=batch_axes), has_aux=True
+        )(params, batch=batch)
+        params, opt = adamw_update(grads, opt, params, lr_fn(opt["step"]))
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_decode_step(cfg, tp: int, unroll: bool = False, batch_axes=None):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = lm.forward_cached(
+            params, cfg, cache, tokens, pos, tp=tp, unroll=unroll,
+            batch_axes=batch_axes,
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg, tp: int, unroll: bool = False, batch_axes=None):
+    def prefill_step(params, cache, tokens, frames=None, patches=None):
+        kw = {}
+        if frames is not None:
+            kw["frames"] = frames
+        if patches is not None:
+            kw["patches"] = patches
+        logits, cache = lm.forward_cached(
+            params, cfg, cache, tokens, jnp.zeros((), jnp.int32), tp=tp,
+            unroll=unroll, batch_axes=batch_axes, **kw
+        )
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+def cell_supported(cfg, shape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long:
+        return False, "full-attention arch: 500k decode needs sub-quadratic mixer"
+    return True, ""
+
+
+# ----------------------------------------------------------------------------
+# Lower + compile one cell
+# ----------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             serve_sharding: bool = False, ep_override=None,
+             scan_only: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    rec = dict(arch=arch, shape=shape_name, multi_pod=multi_pod,
+               serve_sharding=serve_sharding)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = MODEL_PARALLEL
+    dp_axes = shg.fsdp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    batch_axes = (
+        (dp_axes if len(dp_axes) > 1 else dp_axes[0])
+        if shape.global_batch % dp_size == 0
+        else None
+    )
+    t0 = time.time()
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_shape = jax.eval_shape(partial(lm.init_params, cfg, tp=tp), key)
+    mode = "serve" if (serve_sharding and shape.kind != "train") else "train"
+    pspecs = shg.param_specs(cfg, mesh, tp, params_shape, mode=mode,
+                             ep_override=ep_override)
+    pshard = shg.to_shardings(mesh, pspecs)
+
+    # Two compiles per cell:
+    #  * scan-over-layers (the production program): memory_analysis — XLA
+    #    reuses loop-body buffers, so temp/device is the deployable footprint;
+    #  * unrolled layers: cost_analysis + collective parse — HLO cost
+    #    analysis counts while bodies once, unrolling makes FLOPs/bytes exact.
+    # Multi-pod cells prove the 'pod' axis shards (scan compile only); the
+    # roofline table (exact unrolled cost analysis) is single-pod per spec.
+    # scan_only: for the largest configs (80-layer qwen110) the unrolled
+    # compile exceeds the container budget — compile-proof + memory stay
+    # valid, cost columns are marked non-exact.
+    modes = (False,) if (multi_pod or scan_only) else (False, True)
+    compiled_by_mode = {}
+    with mesh:
+        for unroll in modes:
+            if shape.kind == "train":
+                opt_shape = jax.eval_shape(adamw_init, params_shape)
+                ospecs = shg.opt_specs(cfg, mesh, tp, opt_shape, pspecs)
+                oshard = shg.to_shardings(mesh, ospecs)
+                batch_shape = make_batch_spec(cfg, shape)
+                bspecs = shg.batch_specs(cfg, mesh, batch_shape)
+                bshard = shg.to_shardings(mesh, bspecs)
+                step = make_train_step(cfg, tp, unroll=unroll, batch_axes=batch_axes)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(pshard, oshard, bshard),
+                    out_shardings=(pshard, oshard, None),
+                    donate_argnums=(0, 1),
+                )
+                lowered = jitted.lower(params_shape, opt_shape, batch_shape)
+                tokens_per_step = shape.global_batch * shape.seq_len
+                model_flops = 6 * cfg.active_param_count() * tokens_per_step
+            else:
+                cache_shape = jax.eval_shape(
+                    partial(lm.init_cache, cfg, shape.global_batch, shape.seq_len, tp=tp)
+                )
+                cspecs = shg.cache_specs(cfg, mesh, tp, cache_shape)
+                cshard = shg.to_shardings(mesh, cspecs)
+                if shape.kind == "decode":
+                    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+                    pos = jax.ShapeDtypeStruct((), jnp.int32)
+                    step = make_decode_step(cfg, tp, unroll=unroll, batch_axes=batch_axes)
+                    jitted = jax.jit(
+                        step,
+                        in_shardings=(pshard, cshard, shg.to_shardings(
+                            mesh, shg.batch_specs(cfg, mesh, {"tokens": tok})
+                        )["tokens"], None),
+                        out_shardings=(None, cshard),
+                        donate_argnums=(1,),
+                    )
+                    lowered = jitted.lower(params_shape, cache_shape, tok, pos)
+                    model_flops = 2 * cfg.active_param_count() * shape.global_batch
+                else:  # prefill
+                    spec = make_batch_spec(cfg, shape, extra_token=False)
+                    bspecs = shg.batch_specs(cfg, mesh, spec)
+                    bshard = shg.to_shardings(mesh, bspecs)
+                    step = make_prefill_step(cfg, tp, unroll=unroll, batch_axes=batch_axes)
+                    args = [params_shape, cache_shape, spec["tokens"]]
+                    in_sh = [pshard, cshard, bshard["tokens"]]
+                    kw = {}
+                    if cfg.family == "encdec":
+                        kw["frames"] = spec["frames"]
+                    if cfg.family == "vlm":
+                        kw["patches"] = spec["patches"]
+                    jitted = jax.jit(
+                        step,
+                        in_shardings=tuple(in_sh) + tuple(
+                            bshard[k] for k in kw
+                        ),
+                        out_shardings=(None, cshard),
+                        donate_argnums=(1,),
+                    )
+                    lowered = jitted.lower(*args, *kw.values())
+                    model_flops = (
+                        2 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+                    )
+                model_flops = float(model_flops)
+
+            compiled_by_mode[unroll] = lowered.compile()
+        t_compile = time.time() - t0
+        t_lower = 0.0
+
+    mem = compiled_by_mode[False].memory_analysis()  # production (scanned) program
+    compiled = compiled_by_mode[max(modes)]  # exact cost analysis when unrolled
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_chips = np.prod(mesh.devices.shape)
+
+    # cost_analysis() of the SPMD-partitioned module reports PER-DEVICE
+    # flops/bytes; the roofline terms divide by per-chip rates directly
+    # (equivalent to global量 / (chips × rate)).
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_hbm / HBM_BW
+    t_coll = coll["total"] / ICI_BW
+    dominant = max(
+        [("compute", t_comp), ("memory", t_mem), ("collective", t_coll)],
+        key=lambda kv: kv[1],
+    )[0]
+    rec.update(
+        status="ok",
+        cost_exact=bool(max(modes)),
+        n_chips=int(n_chips),
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        hlo_flops=flops,
+        hlo_bytes=bytes_hbm,
+        collective_bytes=coll,
+        model_flops=float(model_flops),
+        useful_flops_ratio=(
+            float(model_flops / (flops * n_chips)) if flops else None
+        ),
+        t_compute_s=t_comp,
+        t_memory_s=t_mem,
+        t_collective_s=t_coll,
+        dominant=dominant,
+        bytes_per_device=dict(  # memory_analysis is per-device under SPMD
+            argument=getattr(mem, "argument_size_in_bytes", 0),
+            output=getattr(mem, "output_size_in_bytes", 0),
+            alias=getattr(mem, "alias_size_in_bytes", 0),
+            temp=getattr(mem, "temp_size_in_bytes", 0),
+            peak=getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0),
+        ),
+    )
+    if verbose:
+        bpd = rec["bytes_per_device"]
+        print(
+            f"[{arch} × {shape_name} × {'2pod' if multi_pod else '1pod'}] OK "
+            f"compile={t_compile:.0f}s flops={flops:.3g} bytes={bytes_hbm:.3g} "
+            f"coll={coll['total']:.3g} dominant={dominant} "
+            f"arg/dev={bpd['argument']/1e9:.2f}GB temp/dev={bpd['temp']/1e9:.2f}GB"
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--serve-sharding", action="store_true",
+                    help="TP-only (replicated-over-data) weights for serving cells")
+    ap.add_argument("--no-ep", action="store_true",
+                    help="force expert-ff TP instead of expert parallelism (MoE)")
+    ap.add_argument("--scan-only", action="store_true",
+                    help="skip the unrolled cost-analysis compile (largest configs)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                meshes = [False, True] if args.both_meshes else [args.multi_pod]
+                for mp in meshes:
+                    cells.append((arch, shape, mp))
+    else:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        results = json.load(open(args.out))
+        done = {(r["arch"], r["shape"], r["multi_pod"]) for r in results}
+        cells = [c for c in cells if c not in done]
+
+    for arch, shape, mp in cells:
+        try:
+            rec = run_cell(arch, shape, mp, serve_sharding=args.serve_sharding,
+                           ep_override=False if args.no_ep else None,
+                           scan_only=args.scan_only)
+        except Exception as e:  # record the failure — it is a bug to fix
+            rec = dict(arch=arch, shape=shape, multi_pod=mp,
+                       status="error", error=f"{type(e).__name__}: {e}")
+            print(f"[{arch} × {shape} × {'2pod' if mp else '1pod'}] FAIL {rec['error']}")
+        results.append(rec)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            json.dump(results, open(args.out, "w"), indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"dry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,135 @@
+"""Graph partition→process launcher — the paper's pipeline as a job type.
+
+    PYTHONPATH=src python -m repro.launch.partition --graph brain_like --scale 0.1 \
+        --strategy adwise --k 32 --parallel 8 --spread 4 --budget 2.0 \
+        --workload pagerank --iters 100
+
+Runs: stream partitioning (ADWISE / HDRF / DBH / hash, optionally under
+spotlight parallel loading) → vertex-cut engine build → workload → total
+latency report (measured partitioning wall-clock + modeled cluster
+processing latency, cf. DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import (
+    AdwiseConfig,
+    dbh_partition,
+    hash_partition,
+    hdrf_partition,
+    partition_stream,
+    ref_adwise_partition,
+    spotlight_partition,
+)
+from repro.engine import (
+    PAPER_CLUSTER,
+    build_partitioned_graph,
+    coloring,
+    label_propagation,
+    pagerank,
+    process_latency,
+    triangle_count,
+)
+from repro.graph import make_graph, partition_balance, replica_sets_from_assignment, replication_degree
+
+
+def run_partition(edges, n, args):
+    if args.parallel > 1:
+        cfg = None
+        if args.strategy == "adwise":
+            cfg = AdwiseConfig(
+                k=args.k, window_max=args.window_max,
+                latency_budget=args.budget, use_clustering=not args.no_cs,
+            )
+        return spotlight_partition(
+            edges, n, args.k, z=args.parallel, spread=args.spread,
+            strategy=args.strategy, cfg=cfg, seed=args.seed,
+        )
+    if args.strategy == "adwise":
+        cfg = AdwiseConfig(
+            k=args.k, window_max=args.window_max,
+            latency_budget=args.budget, use_clustering=not args.no_cs,
+        )
+        if args.oracle:
+            return ref_adwise_partition(edges, n, cfg)
+        return partition_stream(edges, n, cfg)
+    fn = dict(hdrf=hdrf_partition, dbh=dbh_partition, hash=hash_partition)[args.strategy]
+    return fn(edges, n, args.k, seed=args.seed)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="brain_like")
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--strategy", default="adwise",
+                    choices=["adwise", "hdrf", "dbh", "hash"])
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--parallel", type=int, default=1, help="z partitioner instances")
+    ap.add_argument("--spread", type=int, default=4)
+    ap.add_argument("--budget", type=float, default=None, help="latency preference L (s)")
+    ap.add_argument("--window-max", type=int, default=256)
+    ap.add_argument("--no-cs", action="store_true", help="disable clustering score")
+    ap.add_argument("--oracle", action="store_true", help="sequential reference impl")
+    ap.add_argument("--workload", default="pagerank",
+                    choices=["pagerank", "coloring", "wcc", "triangles", "none"])
+    ap.add_argument("--iters", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    edges, n = make_graph(args.graph, seed=args.seed, scale=args.scale)
+    print(f"graph={args.graph} |V|={n} |E|={len(edges)} k={args.k}")
+
+    res = run_partition(edges, n, args)
+    rep = replica_sets_from_assignment(edges, res.assign, n, args.k)
+    rd = replication_degree(rep)
+    imb = partition_balance(res.assign, args.k)
+    t_part = res.stats.get("wall_time_s", 0.0)
+    print(f"partitioner={args.strategy} RD={rd:.3f} imbalance={imb:.4f} "
+          f"partition_latency={t_part:.2f}s")
+
+    out = dict(
+        graph=args.graph, strategy=args.strategy, k=args.k,
+        replication_degree=rd, imbalance=imb, partition_latency_s=t_part,
+        stats={k: v for k, v in res.stats.items()
+               if isinstance(v, (int, float, str))},
+    )
+    if args.workload != "none":
+        g = build_partitioned_graph(edges, res.assign, n, args.k)
+        t0 = time.perf_counter()
+        if args.workload == "pagerank":
+            _, info = pagerank(g, iters=min(args.iters, 30))
+            info["supersteps"] = args.iters
+        elif args.workload == "coloring":
+            _, info = coloring(g)
+        elif args.workload == "wcc":
+            _, info = label_propagation(g)
+        else:
+            _, info = triangle_count(g)
+        t_proc_local = time.perf_counter() - t0
+        model = process_latency(g, info["supersteps"], info["msg_width"], PAPER_CLUSTER)
+        total = t_part + model["t_total_s"]
+        print(
+            f"workload={args.workload} supersteps={info['supersteps']} "
+            f"modeled_processing={model['t_total_s']:.2f}s (cluster: {model['profile']}) "
+            f"local_exec={t_proc_local:.2f}s\n"
+            f"TOTAL latency (partition + modeled processing) = {total:.2f}s"
+        )
+        out.update(
+            workload=args.workload,
+            processing_model=model,
+            total_latency_s=total,
+        )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    main()

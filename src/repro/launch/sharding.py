@@ -1,0 +1,225 @@
+"""Sharding rules: DP/FSDP + TP (+ EP/SP) PartitionSpecs for every pytree.
+
+Policy (mesh axes ('pod',)? + ('data', 'model')):
+  * batch        → ('pod','data')  (DP)
+  * weights      → FSDP-shard the non-parallel dim over ('pod','data') AND
+                   TP-shard the parallel dim over 'model' (ZeRO-3-style fully
+                   sharded params; optimizer moments inherit the same specs =
+                   sharded optimizer). This is what fits grok-1/qwen-110B in
+                   16 GB/chip — see EXPERIMENTS.md §Dry-run memory table.
+  * attn heads   → 'model' when divisible (policy from ArchConfig.padded_heads:
+                   'shard'/'shard_q'/'pad'/'replicate')
+  * MoE experts  → 'model' on the expert dim when n_experts % tp == 0 (EP,
+                   granite), else 'model' on d_ff inside each expert (grok)
+  * KV cache     → batch over ('pod','data') when divisible, sequence over
+                   'model' (SP — this is what makes decode_32k/long_500k fit;
+                   softmax over the sharded axis becomes a psum, flash-
+                   decoding style)
+  * SSM state    → heads over 'model', batch over ('pod','data') if divisible
+
+All rules are mesh-shape agnostic (elastic re-mesh re-derives them).
+"""
+from __future__ import annotations
+
+import fnmatch
+from functools import partial
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import lm
+
+__all__ = [
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "opt_specs",
+    "to_shardings",
+    "fsdp_axes",
+]
+
+
+def fsdp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp(mesh: Mesh):
+    ax = fsdp_axes(mesh)
+    return ax if len(ax) > 1 else ax[0]
+
+
+def _rules(cfg: ArchConfig, mesh: Mesh, tp: int, ep_override=None):
+    F = _dp(mesh)  # FSDP axes for weight sharding
+    _, _, policy = cfg.padded_heads(tp)
+    kv_shard = "model" if policy == "shard" else None
+    q_shard = "model" if policy in ("shard", "shard_q", "pad") else None
+    ep = cfg.moe is not None and cfg.moe.n_experts % tp == 0
+    if ep_override is not None:
+        ep = ep_override
+    # (pattern, base_spec) — first match wins; leading stack dims padded later.
+    return [
+        # Embed: vocab over 'model' ONLY — FSDP-sharding its d_model dim over
+        # 'data' would make the gather output's feature dim compete with the
+        # batch dim for the data axis and GSPMD replicates the batch instead
+        # (measured: 40 GB/device logits buffers). See EXPERIMENTS.md §Perf.
+        ("embed", P("model", None)),
+        ("head", P(F, "model")),
+        ("vit_proj", P(F, None)),
+        # Attention projections.
+        ("*attn/wq", P(F, q_shard)),
+        ("*attn/wk", P(F, kv_shard)),
+        ("*attn/wv", P(F, kv_shard)),
+        ("*attn/wo", P(q_shard, F)),
+        ("*attn/bq", P(q_shard)),
+        ("*attn/bk", P(kv_shard)),
+        ("*attn/bv", P(kv_shard)),
+        # Dense MLP.
+        ("*mlp/w_gate", P(F, "model")),
+        ("*mlp/w_up", P(F, "model")),
+        ("*mlp/w_down", P("model", F)),
+        # MoE.
+        ("*moe/router", P(F, None)),
+        ("*moe/w_gate", P("model", F, None) if ep else P(None, F, "model")),
+        ("*moe/w_up", P("model", F, None) if ep else P(None, F, "model")),
+        ("*moe/w_down", P("model", None, F) if ep else P(None, "model", F)),
+        # RWKV-6 time-mix / channel-mix.
+        ("*att/wr", P(F, "model")),
+        ("*att/wk", P(F, "model")),
+        ("*att/wv", P(F, "model")),
+        ("*att/wg", P(F, "model")),
+        ("*att/wo", P("model", F)),
+        ("*att/w_a", P(F, None)),
+        ("*att/w_b", P(None, F)),
+        ("*att/u", P("model", None) if cfg.n_heads % tp == 0 else P(None, None)),
+        ("*cm/wk", P(F, "model")),
+        ("*cm/wv", P("model", F)),
+        ("*cm/wr", P(F, "model")),
+        # Mamba-2: head-aligned TP (z/x out dims are head-major H·P; dt is H).
+        # B/C are shared across heads (N=64) — replicated. §Perf iteration C'.
+        ("*mamba/w_z", P(F, "model")),
+        ("*mamba/w_x", P(F, "model")),
+        ("*mamba/w_B", P(F, None)),
+        ("*mamba/w_C", P(F, None)),
+        ("*mamba/w_dt", P(F, "model")),
+        ("*mamba/a_log", P("model")),
+        ("*mamba/dt_bias", P("model")),
+        ("*mamba/d_skip", P("model")),
+        ("*mamba/norm", P("model")),
+        ("*mamba/w_out", P("model", F)),
+        # Everything small (norms, mixes, decays, biases): replicated.
+        ("*", P()),
+    ]
+
+
+def _match(path: str, shape, rules, axis_sizes):
+    for pat, spec in rules:
+        if fnmatch.fnmatch(path, pat) or fnmatch.fnmatch(path, "*/" + pat):
+            base = tuple(spec)
+            if len(base) > len(shape):  # 1-D bias matched by 2-D-ish rule
+                base = base[-len(shape):] if len(shape) else ()
+            pad = (None,) * (len(shape) - len(base))
+            full = list(pad + base)
+            # jit input shardings must divide the dim evenly; drop the
+            # assignment otherwise (e.g. whisper/granite vocab % 16 != 0 →
+            # embedding replicated, a few tens of MB).
+            for i, ax in enumerate(full):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                total = int(np.prod([axis_sizes[a] for a in axes]))
+                if shape[i] % total != 0:
+                    full[i] = None
+            return P(*full)
+    return P()
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
+    )
+
+
+def param_specs(
+    cfg: ArchConfig, mesh: Mesh, tp: int, params_shape: Any,
+    mode: str = "train", ep_override=None,
+) -> Any:
+    """mode='train': FSDP+TP (fully sharded params — optimizer must fit).
+    mode='serve': TP-only — weights replicated across the data axis. A decode
+    step reads EVERY weight once per token, so FSDP sharding would all-gather
+    the full model every step; serving replicas trade HBM for zero
+    weight-gather traffic (§Perf hillclimb B)."""
+    rules = _rules(cfg, mesh, tp, ep_override=ep_override)
+    axis_sizes = dict(mesh.shape)
+
+    def drop_fsdp(spec):
+        fs = set(fsdp_axes(mesh))
+        out = []
+        for entry in spec:
+            if entry is None:
+                out.append(None)
+            elif isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a not in fs)
+                out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+            else:
+                out.append(None if entry in fs else entry)
+        return P(*out)
+
+    def one(path, leaf):
+        spec = _match(_path_str(path), leaf.shape, rules, axis_sizes)
+        return drop_fsdp(spec) if mode == "serve" else spec
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_specs(cfg: ArchConfig, mesh: Mesh, tp: int, opt_shape: Any, pspecs: Any) -> Any:
+    """Adam moments inherit the param specs; step is replicated."""
+    return dict(m=pspecs, v=pspecs, step=P())
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch_shape: Any) -> Any:
+    dp = _dp(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in fsdp_axes(mesh)]))
+
+    def one(path, leaf):
+        b = leaf.shape[0]
+        lead = dp if b % dp_size == 0 else None
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, tp: int, cache_shape: Any) -> Any:
+    dp = _dp(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in fsdp_axes(mesh)]))
+    heads_ok = cfg.n_heads % tp == 0
+
+    def one(path, leaf):
+        p = _path_str(path)
+        shp = leaf.shape
+        if p.startswith("kv") or p.startswith("xkv"):
+            if len(shp) == 5:  # (L, B, KV, S, Dh): sequence over 'model'.
+                bdim = dp if shp[1] % dp_size == 0 else None
+                return P(None, bdim, None, "model", None)
+            # per-app leaf (B, KV, S, Dh) — hybrid shared-attn caches.
+            bdim = dp if shp[0] % dp_size == 0 else None
+            return P(bdim, None, "model", None)
+        bdim = dp if shp[1] % dp_size == 0 else None
+        if p.startswith("s"):
+            # (L, B, H, N, P): heads over 'model'.
+            return P(None, bdim, "model" if heads_ok else None, None, None)
+        if p.startswith("lx"):
+            return P(None, bdim, None)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def to_shardings(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,297 @@
+"""Transformer building blocks (pure-functional, GSPMD-friendly).
+
+Everything is a function over nested-dict param pytrees; sharding is decided
+entirely by `repro.launch.sharding` PartitionSpecs — no sharding logic here.
+Attention uses a q-block-scanned online-softmax formulation so the compiled
+memory footprint stays bounded for 32k prefill (XLA path; the Pallas
+flash_attention kernel is the TPU-native alternative validated in tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------------
+# Initializers / norms / rope
+# ----------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype) * gamma
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., T, H, Dh); positions: (T,) or (B, T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # Broadcast over the head axis: (..., T, 1, half).
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Attention (GQA; q-block scanned softmax; optional KV cache)
+# ----------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, h: int, kv: int, dh: int, dtype, qkv_bias: bool):
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=dense_init(ks[0], (d_model, h * dh), dtype),
+        wk=dense_init(ks[1], (d_model, kv * dh), dtype),
+        wv=dense_init(ks[2], (d_model, kv * dh), dtype),
+        wo=dense_init(ks[3], (h * dh, d_model), dtype),
+    )
+    if qkv_bias:
+        p.update(
+            bq=jnp.zeros((h * dh,), dtype),
+            bk=jnp.zeros((kv * dh,), dtype),
+            bv=jnp.zeros((kv * dh,), dtype),
+        )
+    return p
+
+
+def _blocked_softmax_attn(
+    q: jax.Array,  # (B, H, Tq, Dh) — already scaled & roped
+    k: jax.Array,  # (B, KV, Tk, Dh)
+    v: jax.Array,  # (B, KV, Tk, Dh)
+    causal: bool,
+    q_offset,  # int or () array: absolute position of q[0]
+    q_block: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Online-softmax over q blocks: bounds live logits to (B,H,BQ,Tk) fp32.
+
+    `unroll=True` (dry-run) python-loops over at most 8 larger q blocks so
+    XLA cost analysis sees every matmul (lax.map hides loop-body flops)."""
+    b, h, tq, dh = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    tk = k.shape[2]
+    if unroll:
+        q_block = max(q_block, -(-tq // 8))
+    qb = min(q_block, tq)
+    n_blocks = -(-tq // qb)
+    tq_pad = n_blocks * qb
+    if tq_pad != tq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, tq_pad - tq), (0, 0)))
+    qs = q.reshape(b, h, n_blocks, qb, dh).transpose(2, 0, 1, 3, 4)
+    kg = k.astype(jnp.float32)
+    vg = v.astype(jnp.float32)
+
+    def one_block(i, qi):
+        qi = qi.reshape(b, kvh, group, qb, dh).astype(jnp.float32)
+        logits = jnp.einsum("bkgqd,bksd->bkgqs", qi, kg)
+        if causal:
+            qpos = q_offset + i * qb + jnp.arange(qb)
+            mask = qpos[:, None] >= jnp.arange(tk)[None, :]
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgqs,bksd->bkgqd", probs, vg)
+        return out.reshape(b, h, qb, dh)
+
+    if unroll:
+        outs = jnp.stack([one_block(i, qs[i]) for i in range(n_blocks)])
+    else:
+        outs = jax.lax.map(lambda args: one_block(*args), (jnp.arange(n_blocks), qs))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, tq_pad, dh)
+    return out[:, :, :tq].astype(v.dtype)
+
+
+def attention(
+    params: Params,
+    x: jax.Array,  # (B, T, D)
+    *,
+    h: int,
+    kv: int,
+    dh: int,
+    rope_theta: float | None,
+    causal: bool = True,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (k,v): (B, KV, S, Dh)
+    cache_pos: Optional[jax.Array] = None,  # () int32 — write offset
+    xattn_kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attention K/V
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """GQA attention. Returns (out (B,T,D), updated cache)."""
+    b, t, d = x.shape
+    q = x @ params["wq"]
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(b, t, h, dh)
+
+    if xattn_kv is not None:
+        kk, vv = xattn_kv
+        new_cache = None
+        pos = jnp.zeros((), jnp.int32)
+    else:
+        kx = x @ params["wk"]
+        vx = x @ params["wv"]
+        if "bk" in params:
+            kx, vx = kx + params["bk"], vx + params["bv"]
+        kx = kx.reshape(b, t, kv, dh).transpose(0, 2, 1, 3)  # (B, KV, T, Dh)
+        vx = vx.reshape(b, t, kv, dh).transpose(0, 2, 1, 3)
+        pos = cache_pos if cache_pos is not None else jnp.zeros((), jnp.int32)
+        if rope_theta:
+            kpos = pos + jnp.arange(t)
+            kx = rope(kx.transpose(0, 2, 1, 3), kpos, rope_theta).transpose(0, 2, 1, 3)
+        if cache is not None:
+            ck, cv = cache
+            ck = jax.lax.dynamic_update_slice(ck, kx.astype(ck.dtype), (0, 0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(cv, vx.astype(cv.dtype), (0, 0, pos, 0))
+            kk, vv = ck, cv
+            new_cache = (ck, cv)
+        else:
+            kk, vv = kx, vx
+            new_cache = None
+
+    if rope_theta and xattn_kv is None:
+        qpos = pos + jnp.arange(t)
+        q = rope(q, qpos, rope_theta)
+    q = (q * (dh**-0.5)).transpose(0, 2, 1, 3)  # (B, H, T, Dh)
+
+    if cache is not None and t > 1:
+        # Prefill-from-zero: attend within the fresh segment via the blocked
+        # path (the cache is only *written*). Chunked prefill (pos > 0 with
+        # t > 1) is intentionally unsupported — see DESIGN.md.
+        out = _blocked_softmax_attn(q, kx, vx, causal, 0, unroll=unroll)
+    elif cache is not None:
+        # Decode: single new token attends the whole cache ≤ pos.
+        # No dtype casts on the cache operands: einsum accumulates fp32 via
+        # preferred_element_type — casting kk/vv materialized TWO full fp32
+        # copies of the cache per layer (measured 17.9 GB/device on zamba2
+        # long_500k; see EXPERIMENTS.md §Perf). Unwritten cache positions are
+        # zeros (init) and excluded by the NEG_INF mask.
+        s = kk.shape[2]
+        live = jnp.arange(s) < (pos + t)
+        logits_mask = jnp.where(live, 0.0, NEG_INF)
+        group = h // kv
+        qg = q.reshape(b, kv, group, t, dh)
+        logits = jnp.einsum(
+            "bkgqd,bksd->bkgqs", qg, kk, preferred_element_type=jnp.float32
+        )
+        logits = logits + logits_mask[None, None, None, None, :]
+        if causal and t > 1:
+            qpos = pos + jnp.arange(t)
+            cmask = qpos[:, None] >= jnp.arange(s)[None, :]
+            logits = jnp.where(cmask[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum(
+            "bkgqs,bksd->bkgqd", probs.astype(vv.dtype), vv,
+            preferred_element_type=jnp.float32,
+        )
+        out = out.reshape(b, h, t, dh).astype(x.dtype)
+    else:
+        out = _blocked_softmax_attn(
+            q, kk, vv, causal and xattn_kv is None, 0, unroll=unroll
+        )
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+    return out @ params["wo"], new_cache
+
+
+# ----------------------------------------------------------------------------
+# MLP (SwiGLU) and MoE
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(
+        w_gate=dense_init(k1, (d_model, d_ff), dtype),
+        w_up=dense_init(k2, (d_model, d_ff), dtype),
+        w_down=dense_init(k3, (d_ff, d_model), dtype),
+    )
+
+
+def mlp(params: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return dict(
+        router=dense_init(k1, (d_model, n_experts), jnp.float32),
+        w_gate=dense_init(k2, (n_experts, d_model, d_ff), dtype),
+        w_up=dense_init(k3, (n_experts, d_model, d_ff), dtype),
+        w_down=dense_init(k4, (n_experts, d_ff, d_model), dtype, scale=d_ff**-0.5),
+    )
+
+
+def moe_ffn(
+    params: Params,
+    x: jax.Array,  # (B, T, D)
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    router_bias: Optional[jax.Array] = None,  # (E,) — ADWISE-balance hook
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort-based capacity-constrained top-k MoE (token-drop on overflow).
+
+    Returns (out (B,T,D), aux_loss (), expert_load (E,)).
+    `router_bias` lets `repro.core.moe_balance` inject the paper-style
+    adaptive balance score into routing (beyond-paper integration).
+    """
+    b, t, d = x.shape
+    n_tok = b * t
+    e, k = n_experts, top_k
+    cap = int(capacity_factor * n_tok * k / e)
+    cap = max(8, -(-cap // 8) * 8)
+    xf = x.reshape(n_tok, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    if router_bias is not None:
+        logits = logits + router_bias[None, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch): E · Σ_e f_e · p_e.
+    me = probs.mean(axis=0)
+    onehot_top1 = jax.nn.one_hot(gate_idx[:, 0], e)
+    fe = onehot_top1.mean(axis=0)
+    aux = e * jnp.sum(fe * me)
+
+    flat_e = gate_idx.reshape(-1)  # (T·k,)
+    flat_t = jnp.repeat(jnp.arange(n_tok), k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n_tok * k) - starts[se]
+    keep = rank < cap
+    dest = jnp.where(keep, se * cap + rank, e * cap)  # overflow -> dump row
+
+    xs = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(xf[st_])
+    xs = xs[:-1].reshape(e, cap, d)
+    hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, params["w_gate"]))
+    hidden = hidden * jnp.einsum("ecd,edf->ecf", xs, params["w_up"])
+    ys = jnp.einsum("ecf,efd->ecd", hidden, params["w_down"])  # (E, C, D)
+
+    y_rows = ys.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None], y_rows[jnp.minimum(dest, e * cap - 1)], 0.0)
+    out = (
+        jnp.zeros((n_tok, d), jnp.float32)
+        .at[st_]
+        .add(gathered.astype(jnp.float32) * sw[:, None])
+    )
+    return out.reshape(b, t, d).astype(x.dtype), aux, counts.astype(jnp.float32)

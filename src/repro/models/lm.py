@@ -1,0 +1,551 @@
+"""Unified LM supporting all assigned architecture families.
+
+  dense / moe / vlm : scanned GQA decoder blocks (SwiGLU or top-k MoE FFN)
+  ssm (rwkv6)       : scanned RWKV-6 blocks (time-mix + channel-mix)
+  hybrid (zamba2)   : Mamba-2 SSD layers + one shared-weight attention block
+                      applied every `shared_every` layers
+  encdec (whisper)  : bidirectional encoder over stub frame embeddings +
+                      causal decoder with cross-attention
+
+Three entry points (all pure functions of a nested-dict param pytree):
+  init_params(cfg, key, tp)                      — tp: tensor-parallel degree,
+                                                   only used for head padding
+  forward_train(params, cfg, batch, tp)          — logits for next-token loss
+  init_cache(cfg, batch, max_seq, tp) +
+  forward_cached(params, cfg, cache, tokens, pos, ...) — prefill/decode
+
+Layers are scanned (stacked params, lax.scan) so the HLO stays compact for
+80-layer configs; train blocks are wrapped in jax.checkpoint (remat).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+
+def _constrain(x, batch_axes):
+    """Anchor activation sharding: batch over the DP axes, rest replicated
+    (the feature/vocab dims re-shard where the consumer demands — this only
+    pins the batch dim so GSPMD never trades DP for parameter sharding)."""
+    if batch_axes is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        x, P(batch_axes, *([None] * (x.ndim - 1)))
+    )
+
+
+def _maybe_scan(f, init, xs, unroll: bool):
+    """lax.scan, or a Python unroll (exact XLA cost analysis for dry-runs)."""
+    if not unroll:
+        return jax.lax.scan(f, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDims:
+    h: int
+    kv: int
+    dh: int
+    policy: str  # 'shard' | 'shard_q' | 'pad' | 'replicate'
+
+
+def model_dims(cfg: ArchConfig, tp: int = 1) -> ModelDims:
+    h, kv, policy = cfg.padded_heads(tp)
+    return ModelDims(h, kv, cfg.d_head, policy)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, dims: ModelDims, cross: bool = False):
+    """One decoder block's params (attention + FFN [+ cross-attn])."""
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = dict(
+        ln1=jnp.ones((cfg.d_model,), dt),
+        attn=L.init_attention(
+            ks[0], cfg.d_model, dims.h, dims.kv, dims.dh, dt, cfg.qkv_bias
+        ),
+        ln2=jnp.ones((cfg.d_model,), dt),
+    )
+    if cfg.moe:
+        p["moe"] = L.init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.moe.n_experts, dt)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,), dt)
+        p["xattn"] = L.init_attention(
+            ks[2], cfg.d_model, dims.h, dims.kv, dims.dh, dt, cfg.qkv_bias
+        )
+    if dims.policy == "pad" and cfg.n_heads < dims.h:
+        # Extra padded heads must not change the function: zero their wo rows.
+        wo = p["attn"]["wo"]
+        mask = (jnp.arange(dims.h) < cfg.n_heads).repeat(dims.dh)
+        p["attn"]["wo"] = wo * mask[:, None].astype(wo.dtype)
+        if cross:
+            p["xattn"]["wo"] = p["xattn"]["wo"] * mask[:, None].astype(wo.dtype)
+    return p
+
+
+def _stack(keys, fn):
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, tp: int = 1) -> Params:
+    dt = _dtype(cfg)
+    dims = model_dims(cfg, tp)
+    keys = jax.random.split(key, 8)
+    params: Params = dict(
+        embed=L.dense_init(keys[0], (cfg.vocab, cfg.d_model), dt, scale=0.02),
+        ln_f=jnp.ones((cfg.d_model,), dt),
+    )
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(keys[1], (cfg.d_model, cfg.vocab), dt)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        params["blocks"] = _stack(lkeys, lambda k: _init_block(k, cfg, dims))
+        if cfg.family == "vlm":
+            params["vit_proj"] = L.dense_init(keys[3], (cfg.d_model, cfg.d_model), dt)
+    elif cfg.family == "ssm":
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            return dict(
+                ln1=jnp.ones((cfg.d_model,), dt),
+                att=S.init_rwkv6(k1, cfg.d_model, cfg.n_heads, cfg.d_head, dt),
+                ln2=jnp.ones((cfg.d_model,), dt),
+                cm=S.init_rwkv6_cm(k2, cfg.d_model, cfg.d_ff, dt),
+            )
+
+        params["blocks"] = _stack(jax.random.split(keys[2], cfg.n_layers), one)
+    elif cfg.family == "hybrid":
+        def one(k):
+            return dict(
+                ln=jnp.ones((cfg.d_model,), dt),
+                mamba=S.init_mamba2(k, cfg.d_model, cfg.n_heads, cfg.ssm_state, dt),
+            )
+
+        params["blocks"] = _stack(jax.random.split(keys[2], cfg.n_layers), one)
+        params["shared"] = _init_block(keys[3], cfg, dims)  # ONE shared block
+    elif cfg.family == "encdec":
+        params["enc_blocks"] = _stack(
+            jax.random.split(keys[2], cfg.n_enc_layers),
+            lambda k: _init_block(k, cfg, dims),
+        )
+        params["enc_ln_f"] = jnp.ones((cfg.d_model,), dt)
+        params["blocks"] = _stack(
+            jax.random.split(keys[3], cfg.n_layers),
+            lambda k: _init_block(k, cfg, dims, cross=True),
+        )
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ----------------------------------------------------------------------------
+# Blocks (shared by train and cached paths)
+# ----------------------------------------------------------------------------
+
+def _attn_block(
+    p, x, cfg: ArchConfig, dims: ModelDims, *, causal=True,
+    cache=None, pos=None, xattn_kv=None, enc_out=None, rope=True, unroll=False,
+):
+    """Residual attention + FFN block. Returns (x, new_cache, aux)."""
+    h = L.rms_norm(x, p["ln1"])
+    out, new_kv = L.attention(
+        p["attn"], h, h=dims.h, kv=dims.kv, dh=dims.dh,
+        rope_theta=cfg.rope_theta if rope else None,
+        causal=causal, cache=cache, cache_pos=pos, unroll=unroll,
+    )
+    x = x + out
+    if "xattn" in p and (xattn_kv is not None or enc_out is not None):
+        hx = L.rms_norm(x, p["ln_x"])
+        if xattn_kv is None:
+            ek = (enc_out @ p["xattn"]["wk"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], dims.kv, dims.dh
+            ).transpose(0, 2, 1, 3)
+            ev = (enc_out @ p["xattn"]["wv"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], dims.kv, dims.dh
+            ).transpose(0, 2, 1, 3)
+            xattn_kv = (ek, ev)
+        xout, _ = L.attention(
+            p["xattn"], hx, h=dims.h, kv=dims.kv, dh=dims.dh,
+            rope_theta=None, causal=False, xattn_kv=xattn_kv, unroll=unroll,
+        )
+        x = x + xout
+    h2 = L.rms_norm(x, p["ln2"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        f, aux, _ = L.moe_ffn(
+            p["moe"], h2, n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+        )
+    else:
+        f = L.mlp(p["mlp"], h2)
+    return x + f, new_kv, aux, xattn_kv
+
+
+def _rwkv_block(p, x, cfg, *, state=None, lx_att=None, lx_cm=None):
+    h = L.rms_norm(x, p["ln1"])
+    out, s_new, lxa = S.rwkv6_mixer(
+        p["att"], h, n_heads=cfg.n_heads, dh=cfg.d_head, state=state, last_x=lx_att
+    )
+    x = x + out
+    h2 = L.rms_norm(x, p["ln2"])
+    out2, lxc = S.rwkv6_channel_mix(p["cm"], h2, last_x=lx_cm)
+    return x + out2, s_new, lxa, lxc
+
+
+def _mamba_block(p, x, cfg, *, state=None):
+    h = L.rms_norm(x, p["ln"])
+    out, s_new = S.mamba2_mixer(
+        p["mamba"], h, n_heads=cfg.n_heads, d_state=cfg.ssm_state, state=state
+    )
+    return x + out, s_new
+
+
+# ----------------------------------------------------------------------------
+# Train forward
+# ----------------------------------------------------------------------------
+
+def forward_train(
+    params: Params,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    tp: int = 1,
+    remat: bool = True,
+    unroll: bool = False,
+    batch_axes=None,
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V), moe_aux_loss ()); hidden states if asked."""
+    dims = model_dims(cfg, tp)
+    tokens = batch["tokens"]  # (B, S)
+    x = _constrain(params["embed"][tokens], batch_axes)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "vlm":
+        patches = batch["patches"] @ params["vit_proj"]  # (B, P, D) stub frontend
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, p):
+            xc, aux = carry
+            xn, _, a, _ = _attn_block(p, xc, cfg, dims, unroll=unroll)
+            return (_constrain(xn, batch_axes), aux + a), None
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = _maybe_scan(fn, (x, aux_total), params["blocks"], unroll)
+
+    elif cfg.family == "ssm":
+        def body(xc, p):
+            xn, _, _, _ = _rwkv_block(p, xc, cfg)
+            return _constrain(xn, batch_axes), None
+
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = _maybe_scan(fn, x, params["blocks"], unroll)
+
+    elif cfg.family == "hybrid":
+        def body(xc, p):
+            xn, _ = _mamba_block(p, xc, cfg)
+            return _constrain(xn, batch_axes), None
+
+        fn = jax.checkpoint(body) if remat else body
+        se = cfg.shared_every
+        n_apps = cfg.n_layers // se
+        blocks = params["blocks"]
+        for g in range(n_apps):
+            seg = jax.tree.map(lambda a: a[g * se : (g + 1) * se], blocks)
+            x, _ = _maybe_scan(fn, x, seg, unroll)
+            x, _, _, _ = _attn_block(params["shared"], x, cfg, dims, unroll=unroll)
+        rem = cfg.n_layers - n_apps * se
+        if rem:
+            seg = jax.tree.map(lambda a: a[n_apps * se :], blocks)
+            x, _ = _maybe_scan(fn, x, seg, unroll)
+
+    elif cfg.family == "encdec":
+        frames = batch["frames"].astype(x.dtype)  # (B, S_enc, D) stub embeddings
+
+        def enc_body(xc, p):
+            xn, _, _, _ = _attn_block(p, xc, cfg, dims, causal=False, unroll=unroll)
+            return _constrain(xn, batch_axes), None
+
+        enc_fn = jax.checkpoint(enc_body) if remat else enc_body
+        enc_out, _ = _maybe_scan(enc_fn, frames, params["enc_blocks"], unroll)
+        enc_out = L.rms_norm(enc_out, params["enc_ln_f"])
+
+        def dec_body(xc, p):
+            xn, _, _, _ = _attn_block(p, xc, cfg, dims, enc_out=enc_out, unroll=unroll)
+            return _constrain(xn, batch_axes), None
+
+        dec_fn = jax.checkpoint(dec_body) if remat else dec_body
+        x, _ = _maybe_scan(dec_fn, x, params["blocks"], unroll)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["ln_f"])
+    if cfg.family == "vlm":
+        x = x[:, batch["patches"].shape[1] :]  # text positions only
+    if return_hidden:
+        return x, aux_total
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x @ head, aux_total
+
+
+def loss_fn(
+    params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array], tp: int = 1,
+    remat: bool = True, aux_weight: float = 0.01, unroll: bool = False,
+    batch_axes=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross-entropy (+ MoE aux). batch['tokens']: (B, S+1)."""
+    inp = dict(batch)
+    inp["tokens"] = batch["tokens"][:, :-1]
+    labels = batch["tokens"][:, 1:]
+    hidden, aux = forward_train(
+        params, cfg, inp, tp=tp, remat=remat, unroll=unroll,
+        batch_axes=batch_axes, return_hidden=True,
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    ce = _chunked_ce(hidden, head, labels, remat=remat)
+    return ce + aux_weight * aux, dict(ce=ce, moe_aux=aux)
+
+
+def _chunked_ce(
+    hidden: jax.Array,  # (B, S, D)
+    head: jax.Array,  # (D, V) — vocab-sharded
+    labels: jax.Array,  # (B, S)
+    n_chunks: int = 8,
+    remat: bool = True,
+) -> jax.Array:
+    """Sequence-chunked cross-entropy.
+
+    The (B, S, V) logits tensor is the largest buffer in LM training; it is
+    never needed whole. Chunking the head matmul + CE over S and remat-ing
+    each chunk keeps only one (B, S/n, V) slice live (fwd AND bwd), at the
+    cost of recomputing the chunk matmul in the backward pass — the standard
+    fused/chunked-CE memory optimization. Vocab stays 'model'-sharded; the
+    fused one-hot reduction below avoids a vocab-dim gather (which would
+    all-gather logits under GSPMD)."""
+    b, s, d = hidden.shape
+    n_chunks = min(n_chunks, s)
+    cs = -(-s // n_chunks)
+
+    def chunk_loss(x_c, y_c):
+        logits = (x_c @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.sum(jnp.where(vocab_iota == y_c[..., None], logits, 0.0), -1)
+        return jnp.sum(logz - gold)
+
+    fn = jax.checkpoint(chunk_loss) if remat else chunk_loss
+    total = jnp.zeros((), jnp.float32)
+    for i in range(n_chunks):
+        lo = i * cs
+        hi = min(s, lo + cs)
+        total = total + fn(hidden[:, lo:hi], labels[:, lo:hi])
+    return total / (b * s)
+
+
+# ----------------------------------------------------------------------------
+# Serving: cache init + prefill/decode forward
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, tp: int = 1) -> Params:
+    dims = model_dims(cfg, tp)
+    dt = _dtype(cfg)
+    lg = cfg.n_layers
+
+    def kv(n, s):
+        return (
+            jnp.zeros((n, batch, dims.kv, s, dims.dh), dt),
+            jnp.zeros((n, batch, dims.kv, s, dims.dh), dt),
+        )
+
+    if cfg.family in ("dense", "moe"):
+        return dict(kv=kv(lg, max_seq))
+    if cfg.family == "vlm":
+        return dict(kv=kv(lg, max_seq + cfg.vlm_patches))
+    if cfg.family == "ssm":
+        return dict(
+            s=jnp.zeros((lg, batch, cfg.n_heads, cfg.d_head, cfg.d_head), jnp.float32),
+            lx_att=jnp.zeros((lg, batch, cfg.d_model), dt),
+            lx_cm=jnp.zeros((lg, batch, cfg.d_model), dt),
+        )
+    if cfg.family == "hybrid":
+        n_apps = cfg.n_layers // cfg.shared_every
+        d_in = 2 * cfg.d_model
+        # Shared-attn caches as per-application LEAVES (not one stacked
+        # array): prevents XLA from hoisting dtype conversions / updates over
+        # the whole (n_apps, ...) stack (§Perf A2).
+        one = lambda: (
+            jnp.zeros((batch, dims.kv, max_seq, dims.dh), dt),
+            jnp.zeros((batch, dims.kv, max_seq, dims.dh), dt),
+        )
+        return dict(
+            s=jnp.zeros(
+                (lg, batch, cfg.n_heads, cfg.ssm_state, d_in // cfg.n_heads),
+                jnp.float32,
+            ),
+            kv=[one() for _ in range(n_apps)],
+        )
+    if cfg.family == "encdec":
+        s_enc = max(max_seq // 2, 1)
+        return dict(kv=kv(lg, max_seq), xkv=kv(lg, s_enc))
+    raise ValueError(cfg.family)
+
+
+def forward_cached(
+    params: Params,
+    cfg: ArchConfig,
+    cache: Params,
+    tokens: jax.Array,  # (B, T) — T=1 decode, T>1 prefill
+    pos: jax.Array,  # () int32 — absolute position of tokens[:, 0]
+    tp: int = 1,
+    frames: Optional[jax.Array] = None,  # whisper prefill
+    patches: Optional[jax.Array] = None,  # vlm prefill
+    unroll: bool = False,
+    batch_axes=None,
+) -> Tuple[jax.Array, Params]:
+    """Returns (logits (B, T', V), new cache)."""
+    dims = model_dims(cfg, tp)
+    x = _constrain(params["embed"][tokens], batch_axes)
+
+    if cfg.family == "vlm" and patches is not None:
+        proj = patches @ params["vit_proj"]
+        x = jnp.concatenate([proj.astype(x.dtype), x], axis=1)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            xc, p_ = carry
+            blk, (ck, cv) = xs
+            xn, new_kv, _, _ = _attn_block(
+                blk, xc, cfg, dims, cache=(ck, cv), pos=p_, unroll=unroll
+            )
+            return (_constrain(xn, batch_axes), p_), new_kv
+
+        (x, _), new_kv = _maybe_scan(
+            body, (x, pos), (params["blocks"], cache["kv"]), unroll
+        )
+        new_cache = dict(kv=new_kv)
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            xc = carry
+            blk, s0, lxa0, lxc0 = xs
+            xn, s1, lxa, lxc = _rwkv_block(
+                blk, xc, cfg, state=s0, lx_att=lxa0, lx_cm=lxc0
+            )
+            return _constrain(xn, batch_axes), (s1, lxa, lxc)
+
+        x, (s1, lxa, lxc) = _maybe_scan(
+            body, x, (params["blocks"], cache["s"], cache["lx_att"], cache["lx_cm"]),
+            unroll,
+        )
+        new_cache = dict(s=s1, lx_att=lxa, lx_cm=lxc)
+
+    elif cfg.family == "hybrid":
+        se = cfg.shared_every
+        n_apps = cfg.n_layers // se
+        s_all = []
+        new_kv = []
+
+        def body(xc, xs):
+            blk, s0 = xs
+            xn, s1 = _mamba_block(blk, xc, cfg, state=s0)
+            return _constrain(xn, batch_axes), s1
+
+        for g in range(n_apps):
+            sl = lambda a: a[g * se : (g + 1) * se]
+            x, s1 = _maybe_scan(
+                body, x, (jax.tree.map(sl, params["blocks"]), sl(cache["s"])), unroll
+            )
+            s_all.append(s1)
+            x, nkv, _, _ = _attn_block(
+                params["shared"], x, cfg, dims, cache=cache["kv"][g], pos=pos,
+                unroll=unroll,
+            )
+            new_kv.append(nkv)
+        rem = cfg.n_layers - n_apps * se
+        if rem:
+            sl = lambda a: a[n_apps * se :]
+            x, s1 = _maybe_scan(
+                body, x, (jax.tree.map(sl, params["blocks"]), sl(cache["s"])), unroll
+            )
+            s_all.append(s1)
+        new_cache = dict(s=jnp.concatenate(s_all, axis=0), kv=new_kv)
+
+    elif cfg.family == "encdec":
+        xk, xv = cache["xkv"]
+        if frames is not None:  # prefill: run the encoder, fill cross cache
+            def enc_body(xc, p):
+                xn, _, _, _ = _attn_block(
+                    p, xc, cfg, dims, causal=False, unroll=unroll
+                )
+                return xn, None
+
+            enc_out, _ = _maybe_scan(
+                enc_body, frames.astype(x.dtype), params["enc_blocks"], unroll
+            )
+            enc_out = L.rms_norm(enc_out, params["enc_ln_f"])
+
+            def proj_kv(blk):
+                b_, t_ = enc_out.shape[:2]
+                ek = (enc_out @ blk["xattn"]["wk"]).reshape(
+                    b_, t_, dims.kv, dims.dh
+                ).transpose(0, 2, 1, 3)
+                ev = (enc_out @ blk["xattn"]["wv"]).reshape(
+                    b_, t_, dims.kv, dims.dh
+                ).transpose(0, 2, 1, 3)
+                return ek, ev
+
+            xk, xv = jax.vmap(proj_kv)(params["blocks"])
+
+        def body(carry, xs):
+            xc, p_ = carry
+            blk, (ck, cv), (exk, exv) = xs
+            xn, new_kv, _, _ = _attn_block(
+                blk, xc, cfg, dims, cache=(ck, cv), pos=p_, xattn_kv=(exk, exv),
+                unroll=unroll,
+            )
+            return (_constrain(xn, batch_axes), p_), new_kv
+
+        (x, _), new_kv = _maybe_scan(
+            body, (x, pos), (params["blocks"], cache["kv"], (xk, xv)), unroll
+        )
+        new_cache = dict(kv=new_kv, xkv=(xk, xv))
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head
+    if cfg.family == "vlm" and patches is not None:
+        logits = logits[:, patches.shape[1] :]
+    return logits, new_cache

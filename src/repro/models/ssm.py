@@ -1,0 +1,269 @@
+"""Linear-recurrence sequence mixers: RWKV-6 (Finch) and Mamba-2 (SSD).
+
+Both are implemented in the chunked-parallel form (the TPU-native adaptation:
+intra-chunk work becomes MXU matmuls, inter-chunk state is a short lax.scan),
+plus a single-token recurrent step for decode. fp32 state/decay numerics.
+
+RWKV-6: per-channel data-dependent decay w_t ∈ (0,1)^{Dh} per head,
+  S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ,   o_t = S_{t-1}ᵀ r_t + (r_t·(u⊙k_t)) v_t
+
+Mamba-2 (SSD): scalar per-head decay a_t,
+  h_t = a_t·h_{t-1} + B_t (Δ_t x_t)ᵀ,   y_t = C_tᵀ h_t + D ⊙ x_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+# ----------------------------------------------------------------------------
+# RWKV-6
+# ----------------------------------------------------------------------------
+
+def init_rwkv6(key, d_model: int, n_heads: int, dh: int, dtype):
+    ks = jax.random.split(key, 8)
+    lora = 64
+    return dict(
+        mu=0.5 * jnp.ones((5, d_model), dtype),  # token-shift mixes (r,k,v,g,w)
+        w0=jnp.full((d_model,), -0.6, jnp.float32),  # decay base (log-log space)
+        w_a=dense_init(ks[0], (d_model, lora), jnp.float32, scale=1e-2),
+        w_b=dense_init(ks[1], (lora, d_model), jnp.float32, scale=1e-2),
+        u=dense_init(ks[2], (n_heads, dh), jnp.float32, scale=0.5),
+        wr=dense_init(ks[3], (d_model, d_model), dtype),
+        wk=dense_init(ks[4], (d_model, d_model), dtype),
+        wv=dense_init(ks[5], (d_model, d_model), dtype),
+        wg=dense_init(ks[6], (d_model, d_model), dtype),
+        wo=dense_init(ks[7], (d_model, d_model), dtype),
+        ln_x=jnp.ones((d_model,), jnp.float32),
+    )
+
+
+def _rwkv6_chunk_scan(r, k, v, logw, u, s0, chunk: int):
+    """Chunked GLA with per-channel decay.
+
+    r,k,v,logw: (B, T, H, N) fp32 (logw ≤ 0);  u: (H, N);  s0: (B, H, N, N).
+    Returns (o (B,T,H,N), s_final).
+
+    All O(T·C) / O(T·N) matmul work is vectorized over chunks OUTSIDE the
+    scan; the lax.scan body is only the tiny state recurrence
+    S ← exp(p_last)·S + contrib. This is both the TPU-efficient form (bigger
+    MXU ops, trivial sequential tail) and keeps XLA cost analysis exact
+    (while-loop bodies are counted once by HLO cost analysis).
+    """
+    b, t, h, n = r.shape
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        z = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))  # logw=0: no decay
+    csh = (b, nc, chunk, h, n)
+    rc, kc, vc, wc = (x.reshape(csh) for x in (r, k, v, logw))
+    pcum = jnp.cumsum(wc, axis=2)  # inclusive Σ log w
+    pprev = pcum - wc  # exclusive
+    plast = pcum[:, :, -1]  # (B, NC, H, N)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower: j < t
+    r_in = rc * jnp.exp(pprev)
+    k_in = kc * jnp.exp(-pcum)
+
+    # Intra-chunk attention + diagonal bonus (vectorized over chunks).
+    a = jnp.einsum("bcthn,bcshn->bchts", r_in, k_in)
+    a = jnp.where(tri[None, None, None], a, 0.0)
+    o = jnp.einsum("bchts,bcshn->bcthn", a, vc)
+    bonus = jnp.einsum("bcthn,hn,bcthn->bcth", rc, u, kc)
+    o = o + bonus[..., None] * vc
+
+    # Per-chunk state contributions (decay-to-end ≤ 1: stable).
+    k_end = kc * jnp.exp(plast[:, :, None] - pcum)
+    contrib = jnp.einsum("bcthn,bcthm->bchnm", k_end, vc)  # (B, NC, H, N, N)
+    decay = jnp.exp(plast)  # (B, NC, H, N)
+
+    # Tiny sequential recurrence; ys = state at each chunk START.
+    def body(s, xs):
+        d, c_ = xs
+        return d[..., None] * s + c_, s
+
+    s_fin, s_starts = jax.lax.scan(
+        body,
+        s0,
+        (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(contrib, 1, 0)),
+    )
+    s_starts = jnp.moveaxis(s_starts, 0, 1)  # (B, NC, H, N, N)
+
+    # Inter-chunk contribution (vectorized over chunks).
+    o = o + jnp.einsum("bcthn,bchnm->bcthm", r_in, s_starts)
+    o = o.reshape(b, nc * chunk, h, n)
+    return o[:, :t], s_fin
+
+
+def rwkv6_mixer(
+    params,
+    x: jax.Array,  # (B, T, D)
+    *,
+    n_heads: int,
+    dh: int,
+    state: Optional[jax.Array] = None,  # (B, H, N, N) fp32
+    last_x: Optional[jax.Array] = None,  # (B, D) — token-shift carry
+    chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out (B,T,D), new_state, new_last_x)."""
+    b, t, d = x.shape
+    prev = jnp.zeros((b, 1, d), x.dtype) if last_x is None else last_x[:, None]
+    xx = jnp.concatenate([prev, x[:, :-1]], axis=1)  # token shift
+
+    def mixed(i):
+        return x + (xx - x) * params["mu"][i]
+
+    heads = lambda y: y.reshape(b, t, n_heads, dh)
+    r = heads(mixed(0) @ params["wr"]).astype(jnp.float32)
+    k = heads(mixed(1) @ params["wk"]).astype(jnp.float32)
+    v = heads(mixed(2) @ params["wv"]).astype(jnp.float32)
+    g = mixed(3) @ params["wg"]
+    w_raw = (
+        params["w0"]
+        + jnp.tanh(mixed(4).astype(jnp.float32) @ params["w_a"]) @ params["w_b"]
+    )
+    logw = -jnp.exp(w_raw).reshape(b, t, n_heads, dh)  # log w ≤ 0
+
+    s0 = (
+        jnp.zeros((b, n_heads, dh, dh), jnp.float32) if state is None else state
+    )
+    o, s_fin = _rwkv6_chunk_scan(r, k, v, logw, params["u"], s0, chunk)
+    o = o.reshape(b, t, d)
+    o = rms_norm(o.astype(x.dtype), params["ln_x"].astype(x.dtype))
+    o = o * jax.nn.silu(g)
+    return o @ params["wo"], s_fin, x[:, -1]
+
+
+def init_rwkv6_cm(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(
+        mu=0.5 * jnp.ones((2, d_model), dtype),  # (k, r) token-shift mixes
+        wk=dense_init(k1, (d_model, d_ff), dtype),
+        wv=dense_init(k2, (d_ff, d_model), dtype),
+        wr=dense_init(k3, (d_model, d_model), dtype),
+    )
+
+
+def rwkv6_channel_mix(params, x, last_x=None):
+    """RWKV channel-mix: squared-ReLU MLP with token shift and r-gate."""
+    b, t, d = x.shape
+    prev = jnp.zeros((b, 1, d), x.dtype) if last_x is None else last_x[:, None]
+    xx = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xk = x + (xx - x) * params["mu"][0]
+    xr = x + (xx - x) * params["mu"][1]
+    kk = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    return jax.nn.sigmoid(xr @ params["wr"]) * (kk @ params["wv"]), x[:, -1]
+
+
+# ----------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ----------------------------------------------------------------------------
+
+def init_mamba2(key, d_model: int, n_heads: int, d_state: int, dtype, expand: int = 2):
+    """Projections kept SEPARATE (not one fused w_in) so the head-major dims
+    (z/x: d_in = H·P, dt: H) can be TP-sharded on head boundaries — a fused
+    in-projection has mixed-layout columns that cannot shard (§Perf C)."""
+    d_in = expand * d_model
+    ks = jax.random.split(key, 6)
+    return dict(
+        w_z=dense_init(ks[0], (d_model, d_in), dtype),
+        w_x=dense_init(ks[1], (d_model, d_in), dtype),
+        w_B=dense_init(ks[2], (d_model, d_state), dtype),
+        w_C=dense_init(ks[3], (d_model, d_state), dtype),
+        w_dt=dense_init(ks[4], (d_model, n_heads), dtype),
+        a_log=jnp.zeros((n_heads,), jnp.float32),  # A = -exp(a_log) = -1
+        dt_bias=jnp.full((n_heads,), -2.0, jnp.float32),  # softplus(-2) ≈ 0.13
+        d_skip=jnp.ones((n_heads,), jnp.float32),
+        norm=jnp.ones((d_in,), jnp.float32),
+        w_out=dense_init(ks[5], (d_in, d_model), dtype),
+    )
+
+
+def _ssd_chunk_scan(xh, bc, cc, loga, s0, chunk: int):
+    """Chunked SSD. xh: (B,T,H,P) Δ-scaled inputs; bc/cc: (B,T,N); loga: (B,T,H).
+
+    s0: (B,H,N,P). Returns (y (B,T,H,P), s_final). Diagonal included (j ≤ t).
+    """
+    b, t, h, p = xh.shape
+    n = bc.shape[-1]
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bc = jnp.pad(bc, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+    xc = xh.reshape(b, nc, chunk, h, p)
+    bcc = bc.reshape(b, nc, chunk, n)
+    ccc = cc.reshape(b, nc, chunk, n)
+    lac = loga.reshape(b, nc, chunk, h)
+    pcum = jnp.cumsum(lac, axis=2)  # (B, NC, C, H) inclusive
+    plast = pcum[:, :, -1]  # (B, NC, H)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))  # j ≤ t
+
+    # Intra-chunk (vectorized over chunks; see _rwkv6_chunk_scan note).
+    ldiff = pcum[:, :, :, None, :] - pcum[:, :, None, :, :]  # (B, NC, C, C, H)
+    lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(ldiff), 0.0)
+    scores = jnp.einsum("bctn,bcsn->bcts", ccc, bcc)  # shared across heads
+    y = jnp.einsum("bcts,bctsh,bcshp->bcthp", scores, lmat, xc)
+
+    # Per-chunk state contributions.
+    wgt = jnp.exp(plast[:, :, None] - pcum)  # (B, NC, C, H)
+    contrib = jnp.einsum("bctn,bcth,bcthp->bchnp", bcc, wgt, xc)
+    decay = jnp.exp(plast)  # (B, NC, H)
+
+    def body(s, xs):
+        d, c_ = xs
+        return d[..., None, None] * s + c_, s
+
+    s_fin, s_starts = jax.lax.scan(
+        body, s0, (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(contrib, 1, 0))
+    )
+    s_starts = jnp.moveaxis(s_starts, 0, 1)  # (B, NC, H, N, P)
+
+    y = y + jnp.einsum("bctn,bcth,bchnp->bcthp", ccc, jnp.exp(pcum), s_starts)
+    y = y.reshape(b, nc * chunk, h, p)
+    return y[:, :t], s_fin
+
+
+def mamba2_mixer(
+    params,
+    x: jax.Array,  # (B, T, D)
+    *,
+    n_heads: int,
+    d_state: int,
+    state: Optional[jax.Array] = None,  # (B, H, N, P)
+    chunk: int = 64,
+    expand: int = 2,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,T,D), new_state)."""
+    b, t, d = x.shape
+    d_in = expand * d
+    p = d_in // n_heads
+    z = x @ params["w_z"]
+    xs = x @ params["w_x"]
+    bc = x @ params["w_B"]
+    cc = x @ params["w_C"]
+    dt = x @ params["w_dt"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,T,H)
+    loga = -jnp.exp(params["a_log"])[None, None] * dt  # ≤ 0
+    xh = xs.reshape(b, t, n_heads, p).astype(jnp.float32) * dt[..., None]
+    s0 = (
+        jnp.zeros((b, n_heads, d_state, p), jnp.float32) if state is None else state
+    )
+    y, s_fin = _ssd_chunk_scan(
+        xh, bc.astype(jnp.float32), cc.astype(jnp.float32), loga, s0, chunk
+    )
+    y = y + params["d_skip"][None, None, :, None] * xs.reshape(b, t, n_heads, p).astype(
+        jnp.float32
+    )
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"].astype(x.dtype))
+    return y @ params["w_out"], s_fin

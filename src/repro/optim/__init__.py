@@ -1,0 +1,11 @@
+"""Optimizer substrate: AdamW + schedules + gradient compression."""
+from repro.optim.adamw import adamw_init, adamw_update, cosine_schedule, global_norm
+from repro.optim.compress import topk_compress_allreduce
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "global_norm",
+    "topk_compress_allreduce",
+]

@@ -1,0 +1,61 @@
+"""Gradient compression for data-parallel reduction (top-k + error feedback).
+
+On bandwidth-bound DP meshes the gradient all-reduce dominates step time.
+`topk_compress_allreduce` keeps the top ρ fraction of gradient magnitudes per
+leaf, all-reduces only those (as a dense masked tensor under GSPMD — the
+sparsity is what a ring implementation would exploit; the *selection* math
+and error-feedback residual are the real algorithm), and accumulates the
+rest into a residual carried in optimizer state (error feedback, Karimireddy
+et al. 2019 — prevents compression bias).
+
+Exposed as `--grad-compress ρ` in `launch/train.py`; OFF by default (exact
+reduction). Tests verify error feedback recovers the exact gradient sum over
+steps in expectation.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["topk_compress_allreduce"]
+
+
+def _topk_mask(x: jax.Array, k: int) -> jax.Array:
+    flat = jnp.abs(x.reshape(-1))
+    if k >= flat.size:
+        return jnp.ones_like(flat, bool).reshape(x.shape)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh)
+
+
+def topk_compress_allreduce(
+    grads: Any,
+    residual: Any,
+    axis_name: str | None,
+    ratio: float = 0.05,
+) -> Tuple[Any, Any]:
+    """Returns (reduced_grads, new_residual).
+
+    Inside shard_map/pmap pass `axis_name` of the DP axis; with `None` the
+    reduction is assumed implicit (pjit) and only selection+residual run.
+    """
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        k = max(1, int(ratio * g.size))
+        mask = _topk_mask(g, k)
+        sel = jnp.where(mask, g, 0.0)
+        new_r = g - sel
+        if axis_name is not None:
+            sel = jax.lax.pmean(sel, axis_name)
+        return sel, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        treedef.unflatten([o[0] for o in outs]),
+        treedef.unflatten([o[1] for o in outs]),
+    )

@@ -1,0 +1,12 @@
+"""Distributed runtime: failure handling, elastic re-mesh, stragglers."""
+from repro.runtime.fault import FaultTolerantLoop, StepFailure
+from repro.runtime.elastic import plan_mesh, replan_after_failure
+from repro.runtime.straggler import StragglerMonitor
+
+__all__ = [
+    "FaultTolerantLoop",
+    "StepFailure",
+    "plan_mesh",
+    "replan_after_failure",
+    "StragglerMonitor",
+]

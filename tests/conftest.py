@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only launch/dryrun.py forces 512."""
+import numpy as np
+import pytest
+
+from repro.graph import make_graph
+
+
+@pytest.fixture(scope="session")
+def tiny_graph():
+    edges, n = make_graph("tiny_clustered", seed=1)
+    return edges, n
+
+
+@pytest.fixture(scope="session")
+def tiny_social():
+    edges, n = make_graph("tiny_social", seed=2)
+    return edges, n
+
+
+def random_edges(rng: np.random.Generator, n: int, m: int) -> np.ndarray:
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    keep = u != v
+    return np.stack([u[keep], v[keep]], axis=1).astype(np.int32)

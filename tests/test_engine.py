@@ -1,0 +1,130 @@
+"""Vertex-cut engine: algorithms vs oracles; latency model properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hdrf_partition, hash_partition
+from repro.engine import (
+    PAPER_CLUSTER,
+    build_partitioned_graph,
+    coloring,
+    label_propagation,
+    pagerank,
+    process_latency,
+    triangle_count,
+)
+from repro.graph import make_graph, replica_sets_from_assignment, replication_degree
+
+from conftest import random_edges
+
+
+def _partitioned(edges, n, k=4, seed=0):
+    res = hdrf_partition(edges, n, k, seed=seed)
+    return build_partitioned_graph(edges, res.assign, n, k)
+
+
+def _pagerank_oracle(edges, n, iters, damping=0.85):
+    deg = np.zeros(n)
+    np.add.at(deg, edges[:, 0], 1)
+    np.add.at(deg, edges[:, 1], 1)
+    x = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        acc = np.zeros(n)
+        np.add.at(acc, edges[:, 1], x[edges[:, 0]] / np.maximum(deg[edges[:, 0]], 1))
+        np.add.at(acc, edges[:, 0], x[edges[:, 1]] / np.maximum(deg[edges[:, 1]], 1))
+        x = (1 - damping) / n + damping * acc
+    return x
+
+
+def _wcc_oracle(edges, n):
+    parent = list(range(n))
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    for u, v in edges:
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            parent[ru] = rv
+    return {find(v) for v in np.unique(edges)}
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), k=st.sampled_from([2, 4, 8]))
+def test_pagerank_matches_oracle(seed, k):
+    rng = np.random.default_rng(seed)
+    edges = random_edges(rng, 80, 300)
+    if len(edges) == 0:
+        return
+    g = _partitioned(edges, 80, k, seed)
+    pr, _ = pagerank(g, iters=8)
+    expect = _pagerank_oracle(edges, 80, 8)
+    np.testing.assert_allclose(pr, expect, rtol=1e-4, atol=1e-7)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_wcc_matches_union_find(seed):
+    rng = np.random.default_rng(seed)
+    edges = random_edges(rng, 120, 100)
+    if len(edges) == 0:
+        return
+    g = _partitioned(edges, 120, 4, seed)
+    cc, _ = label_propagation(g, max_iters=128)
+    present = np.unique(edges)
+    assert len(np.unique(cc[present])) == len(_wcc_oracle(edges, 120))
+    # Endpoints of every edge share a component label.
+    assert (cc[edges[:, 0]] == cc[edges[:, 1]]).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_coloring_is_proper(seed):
+    rng = np.random.default_rng(seed)
+    edges = random_edges(rng, 60, 200)
+    if len(edges) == 0:
+        return
+    g = _partitioned(edges, 60, 4, seed)
+    col, info = coloring(g, max_colors=64)
+    e = edges[edges[:, 0] != edges[:, 1]]
+    assert (col[e[:, 0]] != col[e[:, 1]]).all()
+
+
+def test_triangles_exact(tiny_graph):
+    edges, n = tiny_graph
+    g = _partitioned(edges, n, 4)
+    got, _ = triangle_count(g, sketch_bits=-(-n // 128) * 128)
+    adj = [set() for _ in range(n)]
+    for u, v in edges:
+        if u != v:
+            adj[u].add(v)
+            adj[v].add(u)
+    expect = sum(len(adj[u] & adj[v]) for u, v in edges if u != v) // 3
+    assert got == expect
+
+
+def test_partition_quality_drives_modeled_latency(tiny_graph):
+    """The engine cost model must preserve the paper's causal chain:
+    lower replication degree ⇒ lower sync traffic ⇒ lower processing
+    latency."""
+    edges, n = tiny_graph
+    k = 16
+    g_good = build_partitioned_graph(edges, hdrf_partition(edges, n, k).assign, n, k)
+    g_bad = build_partitioned_graph(edges, hash_partition(edges, n, k).assign, n, k)
+    assert g_good.replication_degree < g_bad.replication_degree
+    m_good = process_latency(g_good, 100, 1, PAPER_CLUSTER)
+    m_bad = process_latency(g_bad, 100, 1, PAPER_CLUSTER)
+    assert m_good["t_total_s"] < m_bad["t_total_s"]
+    assert m_good["sync_bytes_per_step"] < m_bad["sync_bytes_per_step"]
+
+
+def test_replication_degree_bounds(tiny_graph):
+    edges, n = tiny_graph
+    k = 8
+    res = hdrf_partition(edges, n, k)
+    rep = replica_sets_from_assignment(edges, res.assign, n, k)
+    rd = replication_degree(rep)
+    assert 1.0 <= rd <= k

@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.segment_sum import csr_block_layout, EB, SB
+
+
+# ----------------------------------------------------------------------------
+# window_score
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w,k,use_cs", [
+    (1, 2, True), (7, 3, True), (128, 32, True), (200, 20, True),
+    (130, 64, False), (64, 5, False),
+])
+def test_window_score_shapes(w, k, use_cs):
+    rng = np.random.default_rng(w * 31 + k)
+    v = 200
+    uv = rng.integers(0, v, (w, 2)).astype(np.int32)
+    valid = rng.random(w) < 0.85
+    repu = rng.random((w, k)) < 0.2
+    repv = rng.random((w, k)) < 0.2
+    degu = rng.integers(1, 40, w).astype(np.int32)
+    degv = rng.integers(1, 40, w).astype(np.int32)
+    bal = rng.random(k).astype(np.float32)
+    allowed = rng.random(k) < 0.9
+    args = (uv, valid, repu, repv, degu, degv, bal, allowed,
+            jnp.float32(1.3), jnp.int32(40))
+    a = ops.window_score(*args, use_cs=use_cs, impl="pallas")
+    b = ops.window_score(*args, use_cs=use_cs, impl="ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), w=st.integers(1, 80), k=st.integers(1, 40))
+def test_window_score_property(seed, w, k):
+    rng = np.random.default_rng(seed)
+    uv = rng.integers(0, 50, (w, 2)).astype(np.int32)
+    valid = rng.random(w) < 0.7
+    repu = rng.random((w, k)) < 0.3
+    repv = rng.random((w, k)) < 0.3
+    degu = rng.integers(1, 10, w).astype(np.int32)
+    degv = rng.integers(1, 10, w).astype(np.int32)
+    bal = rng.random(k).astype(np.float32)
+    allowed = np.ones(k, bool)
+    args = (uv, valid, repu, repv, degu, degv, bal, allowed,
+            jnp.float32(0.7), jnp.int32(10))
+    a = np.asarray(ops.window_score(*args, impl="pallas"))
+    b = np.asarray(ops.window_score(*args, impl="ref"))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    # Masking invariant: invalid rows / disallowed cols are -inf-ish.
+    assert (a[~valid] < -1e29).all()
+
+
+# ----------------------------------------------------------------------------
+# segment_sum
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,d,s,dtype", [
+    (10, 8, 5, np.float32), (1000, 64, 300, np.float32),
+    (3000, 32, 700, np.float32), (513, 128, 129, np.float32),
+    (2048, 16, 256, np.float16),
+])
+def test_segment_sum_shapes(e, d, s, dtype):
+    rng = np.random.default_rng(e + d)
+    seg = np.sort(rng.integers(0, s, e)).astype(np.int32)
+    data = rng.normal(size=(e, d)).astype(dtype)
+    a = ops.segment_sum_sorted(jnp.asarray(data), seg, s, impl="pallas")
+    # Oracle in fp32: the kernel accumulates in fp32 regardless of input dtype
+    # (MXU-style mixed precision), so compare against the fp32 reference.
+    b = ops.segment_sum_sorted(jnp.asarray(data, jnp.float32), seg, s, impl="ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_csr_block_layout_invariants():
+    rng = np.random.default_rng(0)
+    e, s = 5000, 1000
+    seg = np.sort(rng.integers(0, s, e)).astype(np.int32)
+    perm, loc, chunk_ptr, nchunks, e_pad = csr_block_layout(seg, s, 4)
+    live = perm >= 0
+    assert live.sum() == e
+    assert sorted(perm[live]) == list(range(e))  # a permutation of all edges
+    assert (loc[live] >= 0).all() and (loc[live] < SB).all()
+    assert e_pad % EB == 0
+    # Each block's chunks hold exactly its edges.
+    for b in range(len(chunk_ptr)):
+        lo, hi = chunk_ptr[b] * EB, (chunk_ptr[b] + nchunks[b]) * EB
+        rows = perm[lo:hi]
+        segs = seg[rows[rows >= 0]]
+        if len(segs):
+            assert (segs // SB == b).all()
+
+
+# ----------------------------------------------------------------------------
+# flash_attention
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,tq,tk,dh,dtype", [
+    (1, 1, 1, 8, 8, 32, np.float32),
+    (2, 4, 2, 130, 130, 64, np.float32),
+    (1, 8, 1, 256, 256, 128, np.float32),   # MQA
+    (2, 4, 4, 64, 64, 64, np.float16),
+    (1, 4, 2, 1, 513, 64, np.float32),      # decode append
+    (1, 2, 2, 100, 356, 32, np.float32),    # chunked continuation
+])
+def test_flash_attention_shapes(b, hq, hkv, tq, tk, dh, dtype):
+    rng = np.random.default_rng(b * 7 + tq)
+    q = rng.normal(size=(b, hq, tq, dh)).astype(dtype)
+    k = rng.normal(size=(b, hkv, tk, dh)).astype(dtype)
+    v = rng.normal(size=(b, hkv, tk, dh)).astype(dtype)
+    a = ops.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            impl="pallas")
+    b_ = ops.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                             impl="ref")
+    tol = 5e-3 if dtype == np.float16 else 2e-3
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b_, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_ref_is_softmax_attention():
+    """The oracle itself vs a literal softmax implementation."""
+    rng = np.random.default_rng(3)
+    b, h, t, dh = 1, 2, 16, 8
+    q = rng.normal(size=(b, h, t, dh)).astype(np.float32)
+    k = rng.normal(size=(b, h, t, dh)).astype(np.float32)
+    v = rng.normal(size=(b, h, t, dh)).astype(np.float32)
+    out = np.asarray(kref.flash_attention_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True))
+    for bb in range(b):
+        for hh in range(h):
+            logits = q[bb, hh] @ k[bb, hh].T / np.sqrt(dh)
+            mask = np.tril(np.ones((t, t), bool))
+            logits = np.where(mask, logits, -1e30)
+            p = np.exp(logits - logits.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            np.testing.assert_allclose(out[bb, hh], p @ v[bb, hh], rtol=1e-4,
+                                       atol=1e-5)

@@ -1,0 +1,210 @@
+"""ADWISE core: invariants (property-based), oracle agreement, adaptivity."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AdwiseConfig,
+    dbh_partition,
+    greedy_partition,
+    grid_partition,
+    hash_partition,
+    hdrf_partition,
+    partition_stream,
+    ref_adwise_partition,
+    spotlight_partition,
+    spread_mask,
+)
+from repro.graph import (
+    make_graph,
+    partition_balance,
+    replica_sets_from_assignment,
+    replication_degree,
+)
+
+from conftest import random_edges
+
+
+def _rd(edges, assign, n, k):
+    return replication_degree(replica_sets_from_assignment(edges, assign, n, k))
+
+
+# ----------------------------------------------------------------------------
+# Property tests: every streaming partitioner's hard invariants
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(8, 200),
+    m=st.integers(1, 400),
+    k=st.sampled_from([2, 4, 7, 16]),
+)
+def test_invariants_adwise_scan(seed, n, m, k):
+    rng = np.random.default_rng(seed)
+    edges = random_edges(rng, n, m)
+    if len(edges) == 0:
+        return
+    cfg = AdwiseConfig(k=k, window_max=16, lazy=True, adapt=True)
+    res = partition_stream(edges, n, cfg)
+    # Every edge assigned exactly once, to a valid partition.
+    assert res.assign.shape == (len(edges),)
+    assert (res.assign >= 0).all() and (res.assign < k).all()
+    # Hard capacity cap (Eq. 2 guarantee) honoured.
+    sizes = np.bincount(res.assign, minlength=k)
+    cap = int(np.ceil(cfg.cap_slack * len(edges) / k)) + 1
+    assert sizes.max() <= cap
+    # Replica sets consistent: every vertex of an edge is in R_v of that part.
+    rep = replica_sets_from_assignment(edges, res.assign, n, k)
+    for (u, v), p in zip(edges[:50], res.assign[:50]):
+        assert rep[u, p] and rep[v, p]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.sampled_from([2, 4, 8]))
+def test_invariants_oracle(seed, k):
+    rng = np.random.default_rng(seed)
+    edges = random_edges(rng, 60, 150)
+    if len(edges) == 0:
+        return
+    cfg = AdwiseConfig(k=k, window_max=8)
+    res = ref_adwise_partition(edges, 60, cfg)
+    assert (res.assign >= 0).all() and (res.assign < k).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_invariants_baselines(seed):
+    rng = np.random.default_rng(seed)
+    edges = random_edges(rng, 100, 300)
+    if len(edges) == 0:
+        return
+    n, k = 100, 8
+    for fn in (hdrf_partition, dbh_partition, hash_partition, grid_partition,
+               greedy_partition):
+        res = fn(edges, n, k)
+        assert (res.assign >= 0).all() and (res.assign < k).all()
+        assert res.assign.shape == (len(edges),)
+
+
+# ----------------------------------------------------------------------------
+# Quality / semantics
+# ----------------------------------------------------------------------------
+
+def test_adwise_beats_single_edge_on_clustered(tiny_graph):
+    edges, n = tiny_graph
+    k = 8
+    cfg = AdwiseConfig(k=k, window_max=64)
+    rd_adwise = _rd(edges, partition_stream(edges, n, cfg).assign, n, k)
+    rd_hdrf = _rd(edges, hdrf_partition(edges, n, k).assign, n, k)
+    rd_dbh = _rd(edges, dbh_partition(edges, n, k).assign, n, k)
+    # Paper's headline quality ordering (Fig. 7g-i).
+    assert rd_adwise < rd_hdrf < rd_dbh
+
+
+def test_scan_matches_oracle_quality(tiny_graph):
+    """Vectorized scan and sequential Algorithm-1 oracle produce partitionings
+    of equivalent quality (identical argmax semantics up to fp tie-breaks)."""
+    edges, n = tiny_graph
+    edges = edges[:1200]
+    cfg = AdwiseConfig(k=4, window_max=16, lazy=False, adapt=False, window_init=16)
+    rd_scan = _rd(edges, partition_stream(edges, n, cfg).assign, n, 4)
+    rd_ref = _rd(edges, ref_adwise_partition(edges, n, cfg).assign, n, 4)
+    assert abs(rd_scan - rd_ref) / rd_ref < 0.03
+
+
+def test_window_one_is_single_edge_streaming(tiny_graph):
+    """w=1, no adaptation ⇒ degenerates to single-edge streaming (≈HDRF-like
+    quality, much worse than windowed)."""
+    edges, n = tiny_graph
+    edges = edges[:2000]
+    k = 8
+    w1 = AdwiseConfig(k=k, window_max=1, window_init=1, adapt=False,
+                      use_clustering=False)
+    w64 = AdwiseConfig(k=k, window_max=64, window_init=64, adapt=False)
+    rd1 = _rd(edges, partition_stream(edges, n, w1).assign, n, k)
+    rd64 = _rd(edges, partition_stream(edges, n, w64).assign, n, k)
+    assert rd64 < rd1
+
+
+def test_larger_window_improves_quality(tiny_graph):
+    edges, n = tiny_graph
+    edges = edges[:2000]
+    k = 8
+    rds = []
+    for w in (1, 16, 128):
+        cfg = AdwiseConfig(k=k, window_max=w, window_init=w, adapt=False)
+        rds.append(_rd(edges, partition_stream(edges, n, cfg).assign, n, k))
+    assert rds[2] < rds[0]
+    assert rds[1] <= rds[0] + 1e-9
+
+
+def test_adaptive_window_grows_without_budget(tiny_graph):
+    edges, n = tiny_graph
+    cfg = AdwiseConfig(k=4, window_max=64, window_init=1, adapt=True)
+    res = partition_stream(edges[:1500], n, cfg)
+    assert res.stats["final_w"] > 1  # (C1)/(C2) grew the window
+
+
+def test_tight_budget_shrinks_window_to_one():
+    """Paper: 'if the latency preference is too tight the algorithm decreases
+    w until w=1 — single-edge streaming'. Deterministic via cost model."""
+    edges, n = make_graph("tiny_social", seed=3)
+    cfg = AdwiseConfig(k=4, window_max=64, window_init=64,
+                       latency_budget=1e-9, adapt=True)
+    res = partition_stream(edges, n, cfg, cost_per_score=1.0)
+    assert res.stats["final_w"] == 1
+
+
+def test_lazy_traversal_reduces_score_computations(tiny_graph):
+    edges, n = tiny_graph
+    edges = edges[:1500]
+    lazy = AdwiseConfig(k=4, window_max=64, window_init=64, adapt=False, lazy=True)
+    full = dataclasses.replace(lazy, lazy=False)
+    r_lazy = partition_stream(edges, n, lazy)
+    r_full = partition_stream(edges, n, full)
+    assert r_lazy.stats["score_rows"] < 0.5 * r_full.stats["score_rows"]
+    # ...at a bounded quality cost.
+    rd_l = _rd(edges, r_lazy.assign, n, 4)
+    rd_f = _rd(edges, r_full.assign, n, 4)
+    assert rd_l < rd_f * 1.25
+
+
+# ----------------------------------------------------------------------------
+# Spotlight (§III-D)
+# ----------------------------------------------------------------------------
+
+def test_spread_mask_partition_of_partitions():
+    k, z = 32, 8
+    masks = [spread_mask(k, z, i, k // z) for i in range(z)]
+    stacked = np.stack(masks)
+    assert (stacked.sum(axis=0) == 1).all()  # disjoint cover
+
+
+def test_spotlight_respects_spread(tiny_graph):
+    edges, n = tiny_graph
+    k, z, spread = 16, 4, 4
+    res = spotlight_partition(edges, n, k, z=z, spread=spread, strategy="hdrf")
+    m = len(edges)
+    bounds = np.linspace(0, m, z + 1).astype(int)
+    for i in range(z):
+        allowed = np.flatnonzero(spread_mask(k, z, i, spread))
+        got = np.unique(res.assign[bounds[i]:bounds[i + 1]])
+        assert set(got) <= set(allowed)
+
+
+@pytest.mark.parametrize("strategy", ["hdrf", "dbh"])
+def test_spotlight_improves_replication(tiny_graph, strategy):
+    """Paper Fig. 8: smaller spread ⇒ lower replication degree, any strategy."""
+    edges, n = tiny_graph
+    k, z = 32, 8
+    rd_full = _rd(edges, spotlight_partition(
+        edges, n, k, z=z, spread=k, strategy=strategy).assign, n, k)
+    rd_spot = _rd(edges, spotlight_partition(
+        edges, n, k, z=z, spread=k // z, strategy=strategy).assign, n, k)
+    assert rd_spot < rd_full
+    # Balance is preserved under equal chunks.
+    res = spotlight_partition(edges, n, k, z=z, spread=k // z, strategy=strategy)
+    assert partition_balance(res.assign, k) < 0.5

@@ -1,0 +1,106 @@
+"""Scoring function semantics (Eq. 3-7) — vectorized vs pen-and-paper."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scoring
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 12))
+def test_balance_score_eq3(seed, k):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(0, 100, k)
+    allowed = np.ones(k, bool)
+    b = np.asarray(scoring.balance_score(jnp.asarray(sizes), jnp.asarray(allowed), 0.01))
+    mx, mn = sizes.max(), sizes.min()
+    expect = (mx - sizes) / (mx - mn + 0.01)
+    np.testing.assert_allclose(b, expect, rtol=1e-5)
+    # Emptiest partition gets the max score; fullest gets ~0.
+    assert b[sizes.argmin()] == b.max()
+    assert b[sizes.argmax()] == b.min()
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_replication_score_eq5(seed):
+    rng = np.random.default_rng(seed)
+    w, k = 6, 4
+    rep_u = rng.random((w, k)) < 0.4
+    rep_v = rng.random((w, k)) < 0.4
+    deg_u = rng.integers(1, 20, w)
+    deg_v = rng.integers(1, 20, w)
+    max_deg = max(int(deg_u.max()), int(deg_v.max()))
+    r = np.asarray(scoring.replication_score(
+        jnp.asarray(rep_u), jnp.asarray(rep_v),
+        jnp.asarray(deg_u), jnp.asarray(deg_v), jnp.int32(max_deg)))
+    for i in range(w):
+        psi_u = deg_u[i] / (2 * max_deg)
+        psi_v = deg_v[i] / (2 * max_deg)
+        for p in range(k):
+            expect = rep_u[i, p] * (2 - psi_u) + rep_v[i, p] * (2 - psi_v)
+            assert abs(r[i, p] - expect) < 1e-5
+
+
+def test_replication_prefers_high_degree_replication():
+    """Eq. 5 intuition (Fig. 5): replicating the HIGH-degree vertex scores
+    higher ⇒ the partitioner cuts through hubs."""
+    rep = jnp.asarray([[True]])
+    lo = scoring.replication_score(rep, jnp.asarray([[False]]),
+                                   jnp.asarray([2]), jnp.asarray([2]), jnp.int32(10))
+    hi = scoring.replication_score(rep, jnp.asarray([[False]]),
+                                   jnp.asarray([10]), jnp.asarray([2]), jnp.int32(10))
+    # Low-degree u already on p ⇒ HIGHER score than high-degree u on p:
+    # assigning here keeps low-degree vertices local, replicates hubs.
+    assert float(lo[0, 0]) > float(hi[0, 0])
+
+
+def test_clustering_score_eq6_example():
+    """Figure 6 of the paper: u has 3 window-neighbours replicated on p1, one
+    on p2 ⇒ CS(e, p1) > CS(e, p2)."""
+    # window: edge 0 = (u=0, v=1); edges 1-3 connect u to 2,3,4; edge 4: u-5.
+    win_uv = jnp.asarray([[0, 1], [0, 2], [0, 3], [0, 4], [0, 5]])
+    win_valid = jnp.ones(5, bool)
+    k = 2
+    # Neighbour replica rows: rep_v[j] = replicas of v_j (2,3,4 on p0; 5 on p1).
+    rep_v = jnp.asarray([[0, 0], [1, 0], [1, 0], [1, 0], [0, 1]], jnp.float32)
+    rep_u = jnp.zeros((5, k), jnp.float32)
+    num, den = scoring.clustering_terms(win_uv, win_valid, rep_u, rep_v)
+    cs = np.asarray(num / np.maximum(np.asarray(den)[:, None], 1.0))
+    assert cs[0, 0] > cs[0, 1]
+    assert abs(cs[0, 0] - 3 / 4) < 1e-6  # 3 of 4 window-neighbours on p0
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_lambda_update_eq4(seed):
+    rng = np.random.default_rng(seed)
+    k = 8
+    sizes = rng.integers(0, 1000, k)
+    assigned = int(rng.integers(1, 2000))
+    m = 2000
+    lam0 = 1.0
+    lam1 = float(scoring.lambda_update(
+        jnp.float32(lam0), jnp.asarray(sizes), jnp.ones(k, bool),
+        jnp.int32(assigned), jnp.int32(m), 0.4, 5.0))
+    mx, mn = sizes.max(), sizes.min()
+    iota = (mx - mn) / mx if mx > 0 else 0.0
+    tol = max(0.0, 1.0 - assigned / m)
+    expect = np.clip(lam0 + (iota - tol), 0.4, 5.0)
+    assert abs(lam1 - expect) < 1e-5
+    assert 0.4 <= lam1 <= 5.0
+
+
+def test_lambda_dynamics_monotone():
+    """Early stream + balanced ⇒ λ decreases; late stream + imbalanced ⇒ λ
+    increases (the paper's two requirements in §III-C)."""
+    k = 4
+    balanced = jnp.asarray([100, 100, 100, 100])
+    imbalanced = jnp.asarray([400, 10, 10, 10])
+    allowed = jnp.ones(k, bool)
+    early_bal = float(scoring.lambda_update(
+        jnp.float32(1.0), balanced, allowed, jnp.int32(10), jnp.int32(1000), 0.4, 5.0))
+    late_imb = float(scoring.lambda_update(
+        jnp.float32(1.0), imbalanced, allowed, jnp.int32(990), jnp.int32(1000), 0.4, 5.0))
+    assert early_bal < 1.0
+    assert late_imb > 1.0

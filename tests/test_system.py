@@ -1,0 +1,118 @@
+"""End-to-end system behaviour: the paper's pipeline and the LM framework."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import AdwiseConfig, hdrf_partition, partition_stream
+from repro.engine import (
+    PAPER_CLUSTER,
+    build_partitioned_graph,
+    pagerank,
+    process_latency,
+)
+from repro.graph import make_graph, replica_sets_from_assignment, replication_degree
+
+
+def _total_latency(edges, n, k, res, iters=300):
+    g = build_partitioned_graph(edges, res.assign, n, k)
+    model = process_latency(g, iters, 1, PAPER_CLUSTER)
+    return res.stats["wall_time_s"], model["t_total_s"], g.replication_degree
+
+
+def test_partition_process_pipeline_end_to_end(tiny_graph):
+    """The paper's main claim in miniature: investing partitioning latency
+    (ADWISE window) buys lower replication degree and thus lower modeled
+    processing latency than single-edge streaming."""
+    edges, n = tiny_graph
+    k = 8
+    res_adwise = partition_stream(edges, n, AdwiseConfig(k=k, window_max=64))
+    res_hdrf = hdrf_partition(edges, n, k)
+    _, proc_a, rd_a = _total_latency(edges, n, k, res_adwise)
+    _, proc_h, rd_h = _total_latency(edges, n, k, res_hdrf)
+    assert rd_a < rd_h
+    assert proc_a < proc_h
+
+
+def test_pagerank_correct_after_adwise_partitioning(tiny_graph):
+    """PageRank on an ADWISE-partitioned graph equals the dense oracle —
+    partitioning must never change workload results."""
+    edges, n = tiny_graph
+    edges = edges[:2000]
+    k = 4
+    res = partition_stream(edges, n, AdwiseConfig(k=k, window_max=32))
+    g = build_partitioned_graph(edges, res.assign, n, k)
+    pr, _ = pagerank(g, iters=5)
+    deg = np.zeros(n)
+    np.add.at(deg, edges[:, 0], 1)
+    np.add.at(deg, edges[:, 1], 1)
+    x = np.full(n, 1.0 / n)
+    for _ in range(5):
+        acc = np.zeros(n)
+        np.add.at(acc, edges[:, 1], x[edges[:, 0]] / np.maximum(deg[edges[:, 0]], 1))
+        np.add.at(acc, edges[:, 0], x[edges[:, 1]] / np.maximum(deg[edges[:, 1]], 1))
+        x = 0.15 / n + 0.85 * acc
+    np.testing.assert_allclose(pr, x, rtol=1e-4, atol=1e-7)
+
+
+def test_train_cli_loss_decreases(tmp_path):
+    from repro.launch.train import main
+
+    losses = main([
+        "--arch", "qwen1.5-0.5b", "--reduced", "--steps", "25",
+        "--batch", "8", "--seq", "32", "--lr", "1e-2",
+        "--ckpt-dir", str(tmp_path / "ck"),
+    ])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_train_cli_resume_continues(tmp_path):
+    from repro.launch.train import main
+
+    main(["--arch", "qwen1.5-0.5b", "--reduced", "--steps", "10",
+          "--batch", "4", "--seq", "16", "--ckpt-dir", str(tmp_path / "ck"),
+          "--ckpt-every", "5"])
+    losses = main(["--arch", "qwen1.5-0.5b", "--reduced", "--steps", "5",
+                   "--batch", "4", "--seq", "16",
+                   "--ckpt-dir", str(tmp_path / "ck"), "--resume"])
+    assert len(losses) == 5
+
+
+def test_train_cli_grad_compression_works(tmp_path):
+    from repro.launch.train import main
+
+    losses = main(["--arch", "qwen1.5-0.5b", "--reduced", "--steps", "15",
+                   "--batch", "8", "--seq", "32", "--lr", "1e-2",
+                   "--grad-compress", "0.1"])
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+def test_serve_cli_generates():
+    from repro.launch.serve import main
+
+    gen = main(["--arch", "qwen1.5-0.5b", "--reduced", "--batch", "2",
+                "--prompt-len", "8", "--gen", "6"])
+    assert gen.shape == (2, 6)
+    assert (gen >= 0).all()
+
+
+def test_partition_cli_reports_total_latency(tmp_path, capsys):
+    from repro.launch.partition import main
+
+    out = main(["--graph", "tiny_clustered", "--strategy", "adwise",
+                "--k", "8", "--workload", "pagerank", "--iters", "50",
+                "--window-max", "32",
+                "--json", str(tmp_path / "out.json")])
+    assert out["replication_degree"] > 1.0
+    assert out["total_latency_s"] > 0
+    assert (tmp_path / "out.json").exists()
+
+
+def test_spotlight_cli_parallel_loading():
+    from repro.launch.partition import main
+
+    out = main(["--graph", "tiny_clustered", "--strategy", "hdrf",
+                "--k", "16", "--parallel", "4", "--spread", "4",
+                "--workload", "none"])
+    assert out["replication_degree"] > 0
