@@ -1,7 +1,12 @@
 """Fig. 7a-f analogue: total latency (partition + processing) vs latency
 preference L, per graph × workload, ADWISE vs HDRF vs DBH.
 
-    PYTHONPATH=src python -m benchmarks.bench_total_latency --scale 0.08
+    PYTHONPATH=src python -m benchmarks.bench_total_latency --scale 0.08 \
+        --baselines dbh hdrf greedy
+
+Baselines may be any names from the partitioner registry
+(`repro.core.available_strategies()`); ADWISE rows sweep the window sizes
+given by --windows (Fig. 7's invested-latency x-axis).
 """
 from __future__ import annotations
 
@@ -9,6 +14,7 @@ import argparse
 import json
 
 from benchmarks.common import run_strategy
+from repro.core import available_strategies
 from repro.engine import PAPER_CLUSTER, build_partitioned_graph, partition_latency, process_latency
 from repro.graph import make_graph
 
@@ -26,6 +32,11 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=32)
     ap.add_argument("--graphs", nargs="+",
                     default=["brain_like", "web_like", "orkut_like"])
+    ap.add_argument("--baselines", nargs="+", default=["dbh", "hdrf"],
+                    choices=[s for s in available_strategies() if s != "adwise"],
+                    help="single-edge strategies to compare ADWISE against")
+    ap.add_argument("--windows", nargs="+", type=int, default=[16, 64, 256],
+                    help="ADWISE window sizes (increasing invested latency)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
 
@@ -36,13 +47,11 @@ def main(argv=None):
         use_cs = preset != "orkut_like"  # paper switches CS off on Orkut
         # Partition ONCE per (strategy, window) and reuse across workloads.
         parts = []
-        for strategy, budgets in [
-            ("dbh", [None]),
-            ("hdrf", [None]),
-            # Increasing windows = increasing invested partitioning latency
-            # (Fig. 7 x-axis; paper guideline ≈ 2-4x single-edge).
-            ("adwise", [16, 64, 256]),
-        ]:
+        # Increasing windows = increasing invested partitioning latency
+        # (Fig. 7 x-axis; paper guideline ≈ 2-4x single-edge).
+        sweep = [(s, [None]) for s in args.baselines]
+        sweep.append(("adwise", args.windows))
+        for strategy, budgets in sweep:
             for L in budgets:
                 res, rd = run_strategy(edges, n, args.k, strategy, budget=L,
                                        use_cs=use_cs)

@@ -1,14 +1,14 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers.
+
+Strategies are resolved through `repro.core.registry`, so every registered
+partitioner (adwise / hdrf / dbh / greedy / hash / grid / future entries)
+can be benchmarked by name with no bench-side dispatch code.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (
-    AdwiseConfig,
-    dbh_partition,
-    hdrf_partition,
-    partition_stream,
-)
+from repro.core import run_partitioner
 from repro.engine import (
     PAPER_CLUSTER,
     build_partitioned_graph,
@@ -26,17 +26,12 @@ def run_strategy(edges, n, k, strategy, budget=None, window_max=256, use_cs=True
     benchmark rows are labeled by the resulting MODELED partitioning latency,
     which is Fig. 7's x-axis semantics ("latency invested").
     """
+    cfg = {}
     if strategy == "adwise":
         wm = window_max if budget is None else int(budget)
-        cfg = AdwiseConfig(k=k, window_max=wm, window_init=max(1, wm // 4),
-                           use_clustering=use_cs)
-        res = partition_stream(edges, n, cfg)
-    elif strategy == "hdrf":
-        res = hdrf_partition(edges, n, k, seed=seed)
-    elif strategy == "dbh":
-        res = dbh_partition(edges, n, k, seed=seed)
-    else:
-        raise ValueError(strategy)
+        cfg = dict(window_max=wm, window_init=max(1, wm // 4),
+                   use_clustering=use_cs)
+    res = run_partitioner(strategy, edges, n, k, seed=seed, **cfg)
     rd = replication_degree(replica_sets_from_assignment(edges, res.assign, n, k))
     return res, rd
 

@@ -1,7 +1,12 @@
 """Run every benchmark at smoke scale. One section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run            # smoke scale (CI)
-    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale proxies
+    PYTHONPATH=src python -m benchmarks.run --smoke   # every entrypoint, seconds
+    PYTHONPATH=src python -m benchmarks.run           # smoke scale (CI)
+    PYTHONPATH=src python -m benchmarks.run --full    # paper-scale proxies
+
+--smoke exists so CI (and the test suite) can prove every bench entrypoint
+still *runs* — tiny graphs, k=8, minimal steps — without paying benchmark
+wall-clock.
 """
 from __future__ import annotations
 
@@ -13,7 +18,11 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fastest possible pass over every bench entrypoint")
     args = ap.parse_args(argv)
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
     scale = 0.08 if args.full else 0.012
     t0 = time.time()
 
@@ -26,6 +35,27 @@ def main(argv=None):
         bench_window,
         roofline,
     )
+
+    if args.smoke:
+        k = ["--k", "8"]
+        print("=== Fig.7a-f: total latency (smoke) ===")
+        bench_total_latency.main(["--scale", "0.006", *k,
+                                  "--graphs", "brain_like",
+                                  "--windows", "8", "--baselines", "dbh"])
+        print("\n=== Fig.7g-i: replication degree (smoke) ===")
+        bench_replication.main(["--scale", "0.006", *k, "--graphs", "brain_like"])
+        print("\n=== Fig.8: spotlight spread sweep (smoke) ===")
+        bench_spotlight.main(["--scale", "0.01", *k, "--z", "4"])
+        print("\n=== §III ablations (smoke) ===")
+        bench_window.main(["--scale", "0.004", *k])
+        print("\n=== ADWISE-balance MoE routing (smoke) ===")
+        bench_moe_balance.main(["--steps", "3", "--tokens", "128", "--d", "16"])
+        print("\n=== kernels (smoke) ===")
+        bench_kernels.main(["--quick"])
+        print("\n=== roofline table ===")
+        roofline.main([])
+        print(f"\nsmoke pass over all bench entrypoints done in {time.time()-t0:.0f}s")
+        return 0
 
     print("=== Fig.7a-f: total latency (partition + modeled processing) ===")
     bench_total_latency.main(["--scale", str(scale)])

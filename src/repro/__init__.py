@@ -1,2 +1,12 @@
-"""repro: ADWISE streaming edge partitioning + multi-pod JAX LM framework."""
+"""repro: ADWISE streaming edge partitioning + multi-pod JAX LM framework.
+
+Layout landmarks:
+  repro.compat        — JAX version-portability layer (shard_map location +
+                        replication-check kwarg, make_mesh fallback, Pallas
+                        availability probe). All engine/kernel/launch code
+                        reaches JAX's moving surfaces through it.
+  repro.core.registry — partitioner strategy registry: adwise and every
+                        baseline behind one (edges, n, k, seed, **cfg) ->
+                        PartitionResult signature, resolved by name.
+"""
 __version__ = "0.1.0"

@@ -1,0 +1,144 @@
+"""repro.compat — JAX version-portability layer.
+
+The repo must run on whatever JAX the container ships, and the surfaces we
+depend on have moved between releases:
+
+  * ``shard_map``: new JAX exposes ``jax.shard_map`` with a ``check_vma``
+    kwarg; 0.4.x has ``jax.experimental.shard_map.shard_map`` with
+    ``check_rep`` instead. :func:`shard_map` resolves the callable once at
+    import and adapts the replication-check kwarg by signature inspection.
+  * ``make_mesh``: newer convenience constructor; older JAX only has
+    ``jax.sharding.Mesh``. :func:`make_mesh` prefers the former and falls
+    back to reshaping the device list into a ``Mesh`` by hand.
+  * Pallas: the kernels in :mod:`repro.kernels` lower for real only on TPU;
+    elsewhere they run in interpret mode — and on installs where
+    ``jax.experimental.pallas`` is absent entirely they must be skipped in
+    favour of the XLA reference ops. :data:`HAS_PALLAS` /
+    :func:`pallas_interpret` are the probe the kernel wrappers consult.
+
+Everything engine/kernel/launch code needs from JAX's moving surface goes
+through here; nothing else in the repo should touch
+``jax.experimental.shard_map`` or version-sniff JAX directly.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = [
+    "shard_map",
+    "SHARD_MAP_ORIGIN",
+    "REP_CHECK_KWARG",
+    "make_mesh",
+    "HAS_PALLAS",
+    "HAS_PALLAS_TPU",
+    "HAS_PREFETCH_GRID",
+    "has_pallas",
+    "pallas_interpret",
+    "pallas",
+    "pallas_tpu",
+]
+
+
+# ----------------------------------------------------------------------------
+# shard_map resolution
+# ----------------------------------------------------------------------------
+
+def _resolve_shard_map() -> tuple[Callable, str]:
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, "jax.shard_map"
+    from jax.experimental.shard_map import shard_map as fn  # JAX <= 0.4.x
+    return fn, "jax.experimental.shard_map.shard_map"
+
+
+_SHARD_MAP_RAW, SHARD_MAP_ORIGIN = _resolve_shard_map()
+
+
+def _rep_check_kwarg() -> str | None:
+    try:
+        params = inspect.signature(_SHARD_MAP_RAW).parameters
+    except (TypeError, ValueError):  # e.g. C-accelerated wrapper
+        return None
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return name
+    return None
+
+
+REP_CHECK_KWARG = _rep_check_kwarg()
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_replication: bool = True):
+    """Version-portable ``shard_map``.
+
+    ``check_replication`` maps onto whichever of ``check_vma`` (new JAX) /
+    ``check_rep`` (0.4.x) the installed version accepts, and is dropped
+    silently if neither exists.
+    """
+    kwargs = {}
+    if REP_CHECK_KWARG is not None:
+        kwargs[REP_CHECK_KWARG] = check_replication
+    return _SHARD_MAP_RAW(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+# ----------------------------------------------------------------------------
+# Mesh construction
+# ----------------------------------------------------------------------------
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    devices: Sequence | np.ndarray | None = None,
+) -> Mesh:
+    """``jax.make_mesh`` when available, else a hand-rolled ``Mesh``."""
+    shape = tuple(int(s) for s in axis_shapes)
+    mk = getattr(jax, "make_mesh", None)
+    if mk is not None:
+        try:
+            return mk(shape, tuple(axis_names), devices=devices)
+        except TypeError:  # very old make_mesh without the devices kwarg
+            if devices is None:
+                return mk(shape, tuple(axis_names))
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n] if devices is None else devices)
+    if devs.size != n:
+        raise ValueError(f"need {n} devices for mesh {shape}, got {devs.size}")
+    return Mesh(devs.reshape(shape), tuple(axis_names))
+
+
+# ----------------------------------------------------------------------------
+# Pallas availability probe
+# ----------------------------------------------------------------------------
+
+try:
+    from jax.experimental import pallas  # noqa: F401
+    HAS_PALLAS = True
+except Exception:  # pragma: no cover - missing/broken pallas install
+    pallas = None
+    HAS_PALLAS = False
+
+try:
+    from jax.experimental.pallas import tpu as pallas_tpu  # noqa: F401
+    HAS_PALLAS_TPU = True
+except Exception:  # pragma: no cover
+    pallas_tpu = None
+    HAS_PALLAS_TPU = False
+
+# Deprecated upstream; segment_sum's ragged-block steering still needs it.
+HAS_PREFETCH_GRID = HAS_PALLAS_TPU and hasattr(pallas_tpu, "PrefetchScalarGridSpec")
+
+
+def has_pallas(require_tpu_support: bool = False) -> bool:
+    return HAS_PALLAS_TPU if require_tpu_support else HAS_PALLAS
+
+
+def pallas_interpret() -> bool:
+    """True when Pallas kernels must run in interpret mode (non-TPU backend)."""
+    return jax.default_backend() != "tpu"

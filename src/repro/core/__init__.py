@@ -6,6 +6,9 @@ Public API:
   ref_adwise_partition                    — sequential Algorithm-1 oracle
   hdrf_partition, dbh_partition, ...      — single-edge streaming baselines
   spotlight_partition, spread_mask        — §III-D parallel-loading optimization
+  run_partitioner, available_strategies   — strategy registry (registry.py):
+                                            all partitioners behind one
+                                            (edges, n, k, seed, **cfg) API
 """
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.core.adwise import partition_stream
@@ -16,6 +19,12 @@ from repro.core.baselines import (
     greedy_partition,
     hash_partition,
     grid_partition,
+)
+from repro.core.registry import (
+    available_strategies,
+    get_partitioner,
+    register,
+    run_partitioner,
 )
 from repro.core.spotlight import spotlight_partition, spread_mask
 
@@ -31,4 +40,8 @@ __all__ = [
     "grid_partition",
     "spotlight_partition",
     "spread_mask",
+    "available_strategies",
+    "get_partitioner",
+    "register",
+    "run_partitioner",
 ]

@@ -1,0 +1,130 @@
+"""Partitioner strategy registry.
+
+Every streaming partitioner — ADWISE and the baselines it is compared
+against — is registered here under one uniform call signature:
+
+    fn(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult
+
+This is the framing of 2PS (Mayer et al.) and Buffered Streaming Edge
+Partitioning (Chhabra et al.): partitioners are interchangeable strategies
+behind one interface, so launchers, benchmarks and spotlight parallel
+loading resolve strategies by *name* and new partitioners (or re-streaming
+variants) land as registry entries, not CLI surgery.
+
+Strategy-specific knobs travel in ``**cfg``; the adwise entry forwards them
+into :class:`AdwiseConfig` (``window_max=``, ``latency_budget=``,
+``use_clustering=``, ``oracle=True`` for the sequential Algorithm-1
+reference, ...), baselines accept their own keyword args (e.g. HDRF's
+``lam``). Unknown keys raise ``TypeError`` — a misspelled knob never gets
+silently dropped.
+
+Usage:
+    from repro.core.registry import run_partitioner, available_strategies
+    res = run_partitioner("adwise", edges, n, k=8, window_max=64)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core import baselines
+from repro.core.adwise import partition_stream
+from repro.core.reference import ref_adwise_partition
+from repro.core.types import AdwiseConfig, PartitionResult
+
+__all__ = [
+    "register",
+    "get_partitioner",
+    "run_partitioner",
+    "available_strategies",
+    "PartitionerFn",
+]
+
+PartitionerFn = Callable[..., PartitionResult]
+
+_REGISTRY: Dict[str, PartitionerFn] = {}
+
+
+def register(name: str) -> Callable[[PartitionerFn], PartitionerFn]:
+    """Decorator: register ``fn`` as strategy ``name``."""
+
+    def deco(fn: PartitionerFn) -> PartitionerFn:
+        if name in _REGISTRY:
+            raise ValueError(f"strategy {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def available_strategies() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_partitioner(name: str) -> PartitionerFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown partitioner strategy {name!r}; "
+            f"available: {', '.join(available_strategies())}"
+        ) from None
+
+
+def run_partitioner(
+    name: str,
+    edges: np.ndarray,
+    num_vertices: int,
+    k: int,
+    seed: int = 0,
+    **cfg,
+) -> PartitionResult:
+    """Resolve ``name`` and run it under the uniform signature."""
+    return get_partitioner(name)(edges, num_vertices, k, seed=seed, **cfg)
+
+
+# ----------------------------------------------------------------------------
+# Built-in strategies
+# ----------------------------------------------------------------------------
+
+_ADWISE_FIELDS = {f.name for f in dataclasses.fields(AdwiseConfig)}
+
+
+@register("adwise")
+def _adwise(edges, num_vertices, k, seed=0, *, oracle=False, **cfg) -> PartitionResult:
+    """ADWISE (paper §III). cfg keys = AdwiseConfig fields; oracle=True runs
+    the sequential Algorithm-1 reference instead of the vectorized scan."""
+    unknown = set(cfg) - _ADWISE_FIELDS
+    if unknown:
+        raise TypeError(f"adwise: unknown config keys {sorted(unknown)}")
+    acfg = AdwiseConfig(k=k, seed=seed, **cfg)
+    if oracle:
+        return ref_adwise_partition(edges, num_vertices, acfg)
+    return partition_stream(edges, num_vertices, acfg)
+
+
+@register("hdrf")
+def _hdrf(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult:
+    return baselines.hdrf_partition(edges, num_vertices, k, seed=seed, **cfg)
+
+
+@register("dbh")
+def _dbh(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult:
+    return baselines.dbh_partition(edges, num_vertices, k, seed=seed, **cfg)
+
+
+@register("greedy")
+def _greedy(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult:
+    return baselines.greedy_partition(edges, num_vertices, k, seed=seed, **cfg)
+
+
+@register("hash")
+def _hash(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult:
+    return baselines.hash_partition(edges, num_vertices, k, seed=seed, **cfg)
+
+
+@register("grid")
+def _grid(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult:
+    return baselines.grid_partition(edges, num_vertices, k, seed=seed, **cfg)

@@ -18,7 +18,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core import baselines
+from repro.core import registry
 from repro.core.adwise import partition_stream
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.graph.stream import EdgeStream
@@ -36,21 +36,27 @@ def spread_mask(k: int, z: int, instance: int, spread: int) -> np.ndarray:
     return mask
 
 
-def _masked_hdrf(edges, num_vertices, k, allowed, seed):
-    """HDRF restricted to an allowed partition set (scores masked)."""
-    res = baselines.hdrf_partition(edges, num_vertices, int(allowed.sum()), seed=seed)
-    local_to_global = np.flatnonzero(allowed).astype(np.int32)
-    return PartitionResult(local_to_global[res.assign], res.stats)
+# Strategies whose placement structure breaks under the small local k the
+# spread mask induces: grid's floor(sqrt(k)) collapses to 1 for k < 4, making
+# every instance dump its whole chunk on one partition.
+_SPOTLIGHT_INCOMPATIBLE = {"grid"}
 
 
-def _masked_dbh(edges, num_vertices, k, allowed, seed):
-    res = baselines.dbh_partition(edges, num_vertices, int(allowed.sum()), seed=seed)
-    local_to_global = np.flatnonzero(allowed).astype(np.int32)
-    return PartitionResult(local_to_global[res.assign], res.stats)
+def _masked_strategy(strategy, edges, num_vertices, allowed, seed):
+    """Run a registry strategy on the allowed partition subset only.
 
-
-def _masked_hash(edges, num_vertices, k, allowed, seed):
-    res = baselines.hash_partition(edges, num_vertices, int(allowed.sum()), seed=seed)
+    The strategy partitions into ``|allowed|`` local parts; local ids are then
+    mapped back to the global ids the mask selects. Works for any registered
+    strategy whose placement depends only on k (all the baselines)."""
+    if strategy in _SPOTLIGHT_INCOMPATIBLE:
+        raise ValueError(
+            f"strategy {strategy!r} does not compose with spotlight spread "
+            "masking (its placement structure degenerates at small local k); "
+            "use hash/dbh/hdrf/greedy or adwise"
+        )
+    res = registry.run_partitioner(
+        strategy, edges, num_vertices, int(allowed.sum()), seed=seed
+    )
     local_to_global = np.flatnonzero(allowed).astype(np.int32)
     return PartitionResult(local_to_global[res.assign], res.stats)
 
@@ -69,7 +75,9 @@ def spotlight_partition(
     """Run ``z`` parallel partitioner instances with a limited spread.
 
     Args:
-      strategy: 'adwise' | 'hdrf' | 'dbh' | 'hash', or pass ``partitioner``:
+      strategy: any name in ``registry.available_strategies()`` ('adwise'
+        gets its native allowed-mask path; baselines run on the local subset
+        and are remapped), or pass ``partitioner``:
         callable (edges, num_vertices, k, allowed, seed) -> PartitionResult
         with *global* partition ids.
       cfg: AdwiseConfig for strategy='adwise' (k is overridden).
@@ -99,14 +107,8 @@ def spotlight_partition(
             # Per-instance latency budget: the budget is wall-clock and the
             # instances run in parallel on the cluster, so each gets L.
             res = partition_stream(sub.edges, num_vertices, c, allowed=allowed)
-        elif strategy == "hdrf":
-            res = _masked_hdrf(sub.edges, num_vertices, k, allowed, seed + i)
-        elif strategy == "dbh":
-            res = _masked_dbh(sub.edges, num_vertices, k, allowed, seed + i)
-        elif strategy == "hash":
-            res = _masked_hash(sub.edges, num_vertices, k, allowed, seed + i)
         else:
-            raise ValueError(f"unknown strategy {strategy!r}")
+            res = _masked_strategy(strategy, sub.edges, num_vertices, allowed, seed + i)
         assign[offsets[i] : offsets[i + 1]] = res.assign
         walls.append(res.stats.get("wall_time_s", 0.0))
         score_counts += res.stats.get("score_count", 0)

@@ -10,6 +10,10 @@
 
 Each returns (result, info) where info carries superstep counts the latency
 model converts into cluster processing latency.
+
+When no mesh is passed, each workload builds one via `engine_mesh(k=g.k)`
+(see `repro.compat` for the version-portable mesh/shard_map plumbing), which
+trims the device count so the partition axis always shards evenly.
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ __all__ = ["pagerank", "label_propagation", "coloring", "triangle_count"]
 def pagerank(
     g: PartitionedGraph, iters: int = 20, damping: float = 0.85, mesh: Mesh | None = None
 ) -> Tuple[np.ndarray, dict]:
-    mesh = mesh or engine_mesh()
+    mesh = mesh or engine_mesh(k=g.k)
     v = g.num_vertices
 
     def msg(x_u, x_v, deg_u, deg_v):
@@ -50,7 +54,7 @@ def label_propagation(
     g: PartitionedGraph, max_iters: int = 64, mesh: Mesh | None = None
 ) -> Tuple[np.ndarray, dict]:
     """Connected components by min-label flooding; converged when stable."""
-    mesh = mesh or engine_mesh()
+    mesh = mesh or engine_mesh(k=g.k)
     v = g.num_vertices
 
     def msg(x_u, x_v, deg_u, deg_v):
@@ -87,7 +91,7 @@ def coloring(
     so synced_a = −(max unfinalized neighbour prio+1) and synced_b_j = 0 iff
     some finalized neighbour holds color j.
     """
-    mesh = mesh or engine_mesh()
+    mesh = mesh or engine_mesh(k=g.k)
     v, c = g.num_vertices, max_colors
     rng = np.random.default_rng(0)
     prio = jnp.asarray((rng.permutation(v) + 1).astype(np.float32))
@@ -135,7 +139,7 @@ def triangle_count(
     (sketch_bits ≥ V). Models the paper's SI/clique workloads: wide messages
     (msg_width = sketch_bits/32 words ≫ PageRank's 1) and heavy per-edge work.
     """
-    mesh = mesh or engine_mesh()
+    mesh = mesh or engine_mesh(k=g.k)
     v, b = g.num_vertices, sketch_bits
     slot = np.arange(v) % b  # vertex -> sketch bit (exact when b >= V)
 

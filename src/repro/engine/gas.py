@@ -16,6 +16,10 @@ replica table in `latency_model.py`. On a real TPU pod the psum itself also
 shrinks with replication degree when the accumulator is masked to local
 replicas, which we do (zeros compress under sparse collectives; on GPU/IB
 clusters the mask is what a ragged all-to-all would send).
+
+All JAX version-variant surfaces (`shard_map` location and its
+replication-check kwarg, `make_mesh`) are reached through `repro.compat`, so
+the engine runs unchanged on 0.4.x and current JAX, single- or multi-device.
 """
 from __future__ import annotations
 
@@ -27,15 +31,29 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.engine.partitioned import PartitionedGraph
 
 __all__ = ["make_superstep", "engine_mesh", "gather_local"]
 
 
-def engine_mesh(n_devices: int | None = None) -> Mesh:
-    """1-D engine mesh over all (or the first n) local devices."""
+def engine_mesh(n_devices: int | None = None, k: int | None = None) -> Mesh:
+    """1-D engine mesh over the local devices.
+
+    Args:
+      n_devices: cap on the device count (default: all local devices).
+      k: number of graph partitions about to be sharded over the mesh. The
+        `parts` axis length must divide k, so when given, the mesh is trimmed
+        to the largest device count that does — e.g. k=6 on 4 devices yields
+        a 3-device mesh, and k < n_devices yields a k-device mesh.
+    """
     devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
-    return jax.make_mesh((len(devs),), ("parts",), devices=np.array(devs))
+    n = len(devs)
+    if k is not None:
+        while n > 1 and k % n != 0:
+            n -= 1
+        devs = devs[:n]
+    return compat.make_mesh((len(devs),), ("parts",), devices=np.array(devs))
 
 
 BIG = jnp.float32(3.0e38)
@@ -103,12 +121,12 @@ def make_superstep(
             raise ValueError(combine)
         return apply_fn(state, synced, degrees)
 
-    shard_step = jax.shard_map(
+    shard_step = compat.shard_map(
         step,
         mesh=mesh,
         in_specs=(P(), P("parts"), P("parts"), P("parts"), P()),
         out_specs=P(),
-        check_vma=False,
+        check_replication=False,
     )
 
     @jax.jit

@@ -19,12 +19,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-try:  # TPU scratch memory spaces (unused under interpret=True on CPU)
-    from jax.experimental.pallas import tpu as pltpu
-except Exception:  # pragma: no cover
-    pltpu = None
+# TPU scratch memory spaces are unused under interpret=True on CPU; both are
+# None on installs without pallas (ops.py then routes to the XLA reference).
+from repro.compat import pallas as pl, pallas_tpu as pltpu
 
 NEG_INF = -1e30
 BQ = 128

@@ -7,15 +7,21 @@ Each op takes `impl` ∈ {'auto', 'pallas', 'ref'}:
     partitioner code paths that must `.lower().compile()` on CPU host devices
     (the multi-pod dry-run), where a TPU Pallas kernel cannot compile.
   * 'auto'   — 'pallas' on TPU backends, 'ref' elsewhere.
+
+Pallas availability is probed through `repro.compat`: on installs without
+`jax.experimental.pallas`, 'auto' *and* 'pallas' both degrade to the XLA
+reference so callers never crash on import or dispatch.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.segment_sum import EB, SB, csr_block_layout, segment_sum_pallas
@@ -24,21 +30,61 @@ from repro.kernels.window_score import window_score_pallas
 __all__ = ["window_score", "segment_sum_sorted", "flash_attention", "resolve_impl"]
 
 
-def resolve_impl(impl: str) -> str:
+_WARNED_DOWNGRADES: set[str] = set()
+
+
+def _downgrade(op: str, reason: str) -> str:
+    """Explicit 'pallas' request that cannot run: degrade loudly to 'ref'."""
+    if op not in _WARNED_DOWNGRADES:
+        _WARNED_DOWNGRADES.add(op)
+        warnings.warn(
+            f"{op}: impl='pallas' requested but {reason}; running the XLA "
+            "reference instead — reported timings are NOT pallas timings",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+    return "ref"
+
+
+def resolve_impl(
+    impl: str,
+    *,
+    require_tpu_support: bool = False,
+    require_prefetch_grid: bool = False,
+    op: str = "op",
+) -> str:
+    """Resolve 'auto'/'pallas' to what can actually run on this install.
+
+    ``require_tpu_support``: the op needs `jax.experimental.pallas.tpu`
+    (e.g. VMEM scratch spaces), not just base pallas.
+    ``require_prefetch_grid``: the op additionally needs the (deprecated
+    upstream) `PrefetchScalarGridSpec`. An explicit 'pallas' request that
+    cannot be honoured degrades to 'ref' with a RuntimeWarning so benchmark
+    columns are never silently mislabeled.
+    """
+    available = compat.has_pallas(require_tpu_support)
+    if require_prefetch_grid:
+        available = available and compat.HAS_PREFETCH_GRID
+    if impl == "pallas":
+        if available:
+            return impl
+        return _downgrade(op, "this install lacks the pallas support it needs")
     if impl != "auto":
         return impl
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if jax.default_backend() == "tpu" and available:
+        return "pallas"
+    return "ref"
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return compat.pallas_interpret()
 
 
 def window_score(
     win_uv, win_valid, rep_u, rep_v, deg_u, deg_v, bal, allowed, lam, max_deg,
     *, use_cs: bool = True, impl: str = "auto",
 ):
-    impl = resolve_impl(impl)
+    impl = resolve_impl(impl, op="window_score")
     if impl == "pallas":
         return window_score_pallas(
             win_uv, win_valid, rep_u, rep_v, deg_u, deg_v, bal, allowed,
@@ -58,7 +104,8 @@ def segment_sum_sorted(
     *, impl: str = "auto",
 ):
     """Segment sum where the segment layout is static (known per graph)."""
-    impl = resolve_impl(impl)
+    impl = resolve_impl(impl, require_tpu_support=True,
+                        require_prefetch_grid=True, op="segment_sum_sorted")
     if impl == "pallas":
         perm, loc, chunk_ptr, nchunks, e_pad = csr_block_layout(
             np.asarray(seg_ids), num_segments, data.shape[1]
@@ -77,7 +124,7 @@ def segment_sum_sorted(
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale=None, impl: str = "auto"):
-    impl = resolve_impl(impl)
+    impl = resolve_impl(impl, require_tpu_support=True, op="flash_attention")
     if impl == "pallas":
         return flash_attention_pallas(
             q, k, v, causal=causal, scale=scale, interpret=_interpret()

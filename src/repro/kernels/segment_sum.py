@@ -23,8 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import pallas as pl, pallas_tpu as pltpu  # None when absent
 
 SB = 128  # segment (output row) block
 EB = 512  # edge chunk
@@ -90,6 +90,11 @@ def segment_sum_pallas(
     interpret: bool = True,
 ) -> jax.Array:
     """(S_pad, D) blocked segment sum; rows ≥ num_segments are zero padding."""
+    if pl is None or pltpu is None or not hasattr(pltpu, "PrefetchScalarGridSpec"):
+        raise RuntimeError(
+            "pallas/pallas-TPU unavailable — use ops.segment_sum_sorted"
+            " (impl='ref'/'auto'), which falls back to the XLA oracle"
+        )
     e_pad, d = data_padded.shape
     n_sblocks = chunk_ptr.shape[0]
     n_total_chunks = e_pad // EB

@@ -24,7 +24,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.compat import pallas as pl  # None when pallas is unavailable
 
 NEG_INF = -1e30
 BW = 128  # row-tile size (MXU sublane-aligned)
@@ -106,6 +107,11 @@ def window_score_pallas(
     interpret: bool = True,
 ) -> jax.Array:
     """Padded pallas_call wrapper; returns (W, K) f32 score matrix."""
+    if pl is None:
+        raise RuntimeError(
+            "jax.experimental.pallas unavailable — use ops.window_score"
+            " (impl='ref'/'auto'), which falls back to the XLA oracle"
+        )
     w, k = rep_u.shape
     w_pad = -(-w // BW) * BW
     k_pad = -(-k // LANE) * LANE

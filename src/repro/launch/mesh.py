@@ -3,11 +3,15 @@
 Everything is a function (no module-level jax device-state access) so imports
 never lock the device count — the dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax use.
+Mesh construction goes through `repro.compat.make_mesh` so the same code
+works on JAX versions without `jax.make_mesh`.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
+
+from repro import compat
 
 __all__ = ["make_production_mesh", "make_local_mesh", "MODEL_PARALLEL"]
 
@@ -19,11 +23,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return compat.make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1):
     """Mesh over the actually-available local devices (tests, examples)."""
     n = jax.device_count()
     assert n % model_parallel == 0
-    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+    return compat.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

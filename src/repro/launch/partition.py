@@ -4,10 +4,12 @@
         --strategy adwise --k 32 --parallel 8 --spread 4 --budget 2.0 \
         --workload pagerank --iters 100
 
-Runs: stream partitioning (ADWISE / HDRF / DBH / hash, optionally under
-spotlight parallel loading) → vertex-cut engine build → workload → total
-latency report (measured partitioning wall-clock + modeled cluster
-processing latency, cf. DESIGN.md §3).
+Runs: stream partitioning (any strategy in the `repro.core.registry` —
+adwise / hdrf / dbh / greedy / hash / grid — optionally under spotlight
+parallel loading) → vertex-cut engine build → workload → total latency
+report (measured partitioning wall-clock + modeled cluster processing
+latency, cf. DESIGN.md §3). New partitioners registered in
+`repro/core/registry.py` show up in `--strategy` automatically.
 """
 from __future__ import annotations
 
@@ -19,11 +21,8 @@ import numpy as np
 
 from repro.core import (
     AdwiseConfig,
-    dbh_partition,
-    hash_partition,
-    hdrf_partition,
-    partition_stream,
-    ref_adwise_partition,
+    available_strategies,
+    run_partitioner,
     spotlight_partition,
 )
 from repro.engine import (
@@ -38,28 +37,28 @@ from repro.engine import (
 from repro.graph import make_graph, partition_balance, replica_sets_from_assignment, replication_degree
 
 
+def adwise_cfg_kwargs(args) -> dict:
+    return dict(
+        window_max=args.window_max,
+        latency_budget=args.budget,
+        use_clustering=not args.no_cs,
+    )
+
+
 def run_partition(edges, n, args):
     if args.parallel > 1:
         cfg = None
         if args.strategy == "adwise":
-            cfg = AdwiseConfig(
-                k=args.k, window_max=args.window_max,
-                latency_budget=args.budget, use_clustering=not args.no_cs,
-            )
+            cfg = AdwiseConfig(k=args.k, **adwise_cfg_kwargs(args))
         return spotlight_partition(
             edges, n, args.k, z=args.parallel, spread=args.spread,
             strategy=args.strategy, cfg=cfg, seed=args.seed,
         )
+    cfg = {}
     if args.strategy == "adwise":
-        cfg = AdwiseConfig(
-            k=args.k, window_max=args.window_max,
-            latency_budget=args.budget, use_clustering=not args.no_cs,
-        )
-        if args.oracle:
-            return ref_adwise_partition(edges, n, cfg)
-        return partition_stream(edges, n, cfg)
-    fn = dict(hdrf=hdrf_partition, dbh=dbh_partition, hash=hash_partition)[args.strategy]
-    return fn(edges, n, args.k, seed=args.seed)
+        cfg = adwise_cfg_kwargs(args)
+        cfg["oracle"] = args.oracle
+    return run_partitioner(args.strategy, edges, n, args.k, seed=args.seed, **cfg)
 
 
 def main(argv=None):
@@ -67,7 +66,7 @@ def main(argv=None):
     ap.add_argument("--graph", default="brain_like")
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--strategy", default="adwise",
-                    choices=["adwise", "hdrf", "dbh", "hash"])
+                    choices=available_strategies())
     ap.add_argument("--k", type=int, default=32)
     ap.add_argument("--parallel", type=int, default=1, help="z partitioner instances")
     ap.add_argument("--spread", type=int, default=4)

@@ -1,0 +1,175 @@
+"""Vendored no-network fallback for `hypothesis`.
+
+The offline CI container has no `hypothesis` package, but the property-test
+modules are written against its API. This shim implements the small subset
+they use — `given` / `settings` / `strategies` (integers, sampled_from,
+booleans, floats, just) plus `assume` — backed by seeded random sampling, so
+the same invariants run (deterministically) with or without the real
+library. `tests/conftest.py` installs it into `sys.modules["hypothesis"]`
+only when the real package is missing.
+
+Semantics: `@given(name=strategy, ...)` draws `max_examples` (default 20,
+settable via `@settings(max_examples=N)`) independent examples per test from
+an RNG seeded by the test's qualified name, and runs the test body once per
+example. There is no shrinking — on failure the pytest error message carries
+the drawn arguments instead.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+__all__ = ["given", "settings", "strategies", "assume", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False): skip this example, draw another."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Strategy:
+    def draw(self, rng: random.Random):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def map(self, fn):
+        outer = self
+
+        class _Mapped(_Strategy):
+            def draw(self, rng):
+                return fn(outer.draw(rng))
+
+        return _Mapped()
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2**31) if min_value is None else int(min_value)
+        self.hi = 2**31 - 1 if max_value is None else int(max_value)
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty collection")
+
+    def draw(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Booleans(_Strategy):
+    def draw(self, rng):
+        return rng.random() < 0.5
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value=0.0, max_value=1.0, **_):
+        self.lo = float(min_value)
+        self.hi = float(max_value)
+
+    def draw(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Just(_Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def draw(self, rng):
+        return self.value
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements, min_size=0, max_size=10, **_):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size
+
+    def draw(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.draw(rng) for _ in range(n)]
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _Integers
+strategies.sampled_from = _SampledFrom
+strategies.booleans = _Booleans
+strategies.floats = _Floats
+strategies.just = _Just
+strategies.lists = _Lists
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Decorator: records max_examples on the test (deadline etc. ignored)."""
+
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+# Accepted-and-ignored attribute so `suppress_health_check=[...]` parses.
+HealthCheck = types.SimpleNamespace(
+    too_slow="too_slow", data_too_large="data_too_large", filter_too_much="filter_too_much"
+)
+
+
+def given(*args, **strategy_kwargs):
+    """Decorator: run the test once per drawn example (kwargs style only)."""
+    if args:
+        raise TypeError("propcheck given() supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            max_examples = getattr(
+                wrapper, "_propcheck_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            base = zlib.crc32(fn.__qualname__.encode())
+            drawn = None
+            attempts = 0
+            ran = 0
+            while ran < max_examples and attempts < max_examples * 50:
+                rng = random.Random(base * 1_000_003 + attempts)
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                attempts += 1
+                try:
+                    fn(*call_args, **call_kwargs, **drawn)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"propcheck example #{ran} failed with drawn args "
+                        f"{drawn!r}: {e}"
+                    ) from e
+                ran += 1
+            if ran < max_examples:
+                # Mirror hypothesis' filter_too_much health check: never let
+                # an over-restrictive assume() pass a test vacuously.
+                raise AssertionError(
+                    f"propcheck: only {ran}/{max_examples} examples satisfied "
+                    f"assume() after {attempts} attempts"
+                )
+
+        # Hide the drawn parameters from pytest's fixture resolution while
+        # keeping any real fixtures the test also takes.
+        sig = inspect.signature(fn)
+        params = [p for p in sig.parameters.values() if p.name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+
+    return deco

@@ -5,15 +5,29 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro import compat
 from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.kernels.segment_sum import csr_block_layout, EB, SB
+
+# The pallas-vs-ref comparisons below are meaningless if resolve_impl would
+# degrade the explicit 'pallas' request to 'ref' (the two sides would be the
+# same code) — skip rather than pass vacuously on such installs.
+requires_pallas = pytest.mark.skipif(
+    not compat.has_pallas(), reason="jax.experimental.pallas unavailable")
+requires_pallas_tpu = pytest.mark.skipif(
+    not compat.has_pallas(require_tpu_support=True),
+    reason="jax.experimental.pallas.tpu unavailable")
+requires_prefetch_grid = pytest.mark.skipif(
+    not (compat.has_pallas(require_tpu_support=True) and compat.HAS_PREFETCH_GRID),
+    reason="pltpu.PrefetchScalarGridSpec unavailable")
 
 
 # ----------------------------------------------------------------------------
 # window_score
 # ----------------------------------------------------------------------------
 
+@requires_pallas
 @pytest.mark.parametrize("w,k,use_cs", [
     (1, 2, True), (7, 3, True), (128, 32, True), (200, 20, True),
     (130, 64, False), (64, 5, False),
@@ -36,6 +50,7 @@ def test_window_score_shapes(w, k, use_cs):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
 
 
+@requires_pallas
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000), w=st.integers(1, 80), k=st.integers(1, 40))
 def test_window_score_property(seed, w, k):
@@ -61,6 +76,7 @@ def test_window_score_property(seed, w, k):
 # segment_sum
 # ----------------------------------------------------------------------------
 
+@requires_prefetch_grid
 @pytest.mark.parametrize("e,d,s,dtype", [
     (10, 8, 5, np.float32), (1000, 64, 300, np.float32),
     (3000, 32, 700, np.float32), (513, 128, 129, np.float32),
@@ -101,6 +117,7 @@ def test_csr_block_layout_invariants():
 # flash_attention
 # ----------------------------------------------------------------------------
 
+@requires_pallas_tpu
 @pytest.mark.parametrize("b,hq,hkv,tq,tk,dh,dtype", [
     (1, 1, 1, 8, 8, 32, np.float32),
     (2, 4, 2, 130, 130, 64, np.float32),

@@ -35,6 +35,7 @@ def _rd(edges, assign, n, k):
 # Property tests: every streaming partitioner's hard invariants
 # ----------------------------------------------------------------------------
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(
     seed=st.integers(0, 10_000),

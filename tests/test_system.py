@@ -1,8 +1,14 @@
-"""End-to-end system behaviour: the paper's pipeline and the LM framework."""
+"""End-to-end system behaviour: the paper's pipeline and the LM framework.
+
+Everything here is marked `slow` (full CLI runs, multi-minute together);
+the quick profile is `pytest -m "not slow"`.
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.core import AdwiseConfig, hdrf_partition, partition_stream
 from repro.engine import (
