@@ -1,0 +1,79 @@
+"""Re-streaming sweep: replication degree / balance / latency vs pass count.
+
+    PYTHONPATH=src python -m benchmarks.bench_restream --scale 0.02 --passes 3
+
+One row per (graph, pass): `adwise-restream` is run once with the maximum
+pass count and its per-pass stats are unrolled, so the table shows the
+quality bought by each extra pass over the same stream. A `2ps` row and a
+single-edge `hdrf` row anchor the two ends (two-phase vs one-pass).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import run_strategy
+from repro.core import run_partitioner
+from repro.engine import partition_latency
+from repro.graph import make_graph, partition_balance
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--graphs", nargs="+",
+                    default=["brain_like", "web_like"])
+    ap.add_argument("--passes", type=int, default=3,
+                    help="max re-streaming pass count")
+    ap.add_argument("--window", type=int, default=64,
+                    help="window_max for every ADWISE pass")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    print("graph,strategy,passes,RD,imbalance,partition_model_s,partition_wall_s")
+
+    def emit(graph, strategy, passes, rd, imb, t_model, t_wall):
+        rows.append(dict(graph=graph, strategy=strategy, passes=passes,
+                         replication_degree=rd, imbalance=imb,
+                         t_partition_s=t_model, t_partition_wall_s=t_wall))
+        print(f"{graph},{strategy},{passes},{rd:.3f},{imb:.4f},"
+              f"{t_model:.3f},{t_wall:.3f}")
+
+    for preset in args.graphs:
+        edges, n = make_graph(preset, seed=0, scale=args.scale)
+        res = run_partitioner(
+            "adwise-restream", edges, n, args.k, passes=args.passes,
+            keep_best=False, window_max=args.window,
+            window_init=max(1, args.window // 4),
+        )
+        # Unroll per-pass quality; the modeled latency at pass p is the
+        # cumulative score work of passes 1..p (invested latency is additive).
+        cum_rows, cum_wall = 0, 0.0
+        for p in range(1, args.passes + 1):
+            cum_rows += res.stats["pass_score_rows"][p - 1]
+            cum_wall += res.stats["pass_wall_s"][p - 1]
+            t_model = partition_latency(
+                dict(score_rows=cum_rows), len(edges) * p, args.k)
+            emit(preset, "adwise-restream", p, res.stats["pass_rd"][p - 1],
+                 res.stats["pass_imbalance"][p - 1], t_model, cum_wall)
+
+        res2, rd2 = run_strategy(edges, n, args.k, "2ps")
+        # 2PS reads the stream twice (clustering pass + scoring pass).
+        emit(preset, "2ps", 2, rd2, partition_balance(res2.assign, args.k),
+             partition_latency(res2.stats, 2 * len(edges), args.k),
+             res2.stats.get("wall_time_s", 0.0))
+
+        resh, rdh = run_strategy(edges, n, args.k, "hdrf")
+        emit(preset, "hdrf", 1, rdh, partition_balance(resh.assign, args.k),
+             partition_latency(resh.stats, len(edges), args.k),
+             resh.stats.get("wall_time_s", 0.0))
+
+    if args.json:
+        json.dump(rows, open(args.json, "w"), indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,10 @@ preference L, per graph × workload, ADWISE vs HDRF vs DBH.
 
 Baselines may be any names from the partitioner registry
 (`repro.core.available_strategies()`); ADWISE rows sweep the window sizes
-given by --windows (Fig. 7's invested-latency x-axis).
+given by --windows (Fig. 7's invested-latency x-axis), and
+--restream-passes adds adwise-restream rows sweeping the *pass count* at
+each window — the second invested-latency knob (re-streaming invests more
+partitioning time for lower replication, next to window_max).
 """
 from __future__ import annotations
 
@@ -37,6 +40,9 @@ def main(argv=None):
                     help="single-edge strategies to compare ADWISE against")
     ap.add_argument("--windows", nargs="+", type=int, default=[16, 64, 256],
                     help="ADWISE window sizes (increasing invested latency)")
+    ap.add_argument("--restream-passes", nargs="+", type=int, default=[2],
+                    help="adwise-restream pass counts swept at each window "
+                         "(the second invested-latency knob); 0 disables")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
 
@@ -49,15 +55,23 @@ def main(argv=None):
         parts = []
         # Increasing windows = increasing invested partitioning latency
         # (Fig. 7 x-axis; paper guideline ≈ 2-4x single-edge).
-        sweep = [(s, [None]) for s in args.baselines]
-        sweep.append(("adwise", args.windows))
-        for strategy, budgets in sweep:
+        sweep = [(s, [None], None) for s in args.baselines]
+        sweep.append(("adwise", args.windows, None))
+        for p in args.restream_passes:
+            if p > 0:
+                sweep.append((f"adwise-restream[{p}p]", args.windows, p))
+        for label, budgets, passes in sweep:
+            strategy = label.split("[")[0]
             for L in budgets:
                 res, rd = run_strategy(edges, n, args.k, strategy, budget=L,
-                                       use_cs=use_cs)
+                                       use_cs=use_cs, passes=passes)
                 g = build_partitioned_graph(edges, res.assign, n, args.k)
-                t_part = partition_latency(res.stats, len(edges), args.k)
-                parts.append((strategy, L, res, rd, g, t_part))
+                # Multi-pass strategies read the stream `passes` times — the
+                # IO term of the invested latency scales with it (2PS reads
+                # twice: clustering pass + scoring pass).
+                m_eff = len(edges) * (passes or (2 if strategy == "2ps" else 1))
+                t_part = partition_latency(res.stats, m_eff, args.k)
+                parts.append((label, L, res, rd, g, t_part))
         for wname, (iters, width) in WORKLOADS.items():
             for strategy, L, res, rd, g, t_part in parts:
                 model = process_latency(g, iters, width, PAPER_CLUSTER)

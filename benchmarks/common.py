@@ -19,31 +19,41 @@ from repro.graph import make_graph, replica_sets_from_assignment, replication_de
 
 
 def run_strategy(edges, n, k, strategy, budget=None, window_max=256, use_cs=True,
-                 seed=0):
+                 seed=0, passes=None):
     """Returns (PartitionResult, replication_degree).
 
-    For ADWISE, `budget` (when set) is interpreted as a fixed window size —
-    benchmark rows are labeled by the resulting MODELED partitioning latency,
-    which is Fig. 7's x-axis semantics ("latency invested").
+    For ADWISE (and its restreamed variant), `budget` (when set) is
+    interpreted as a fixed window size — benchmark rows are labeled by the
+    resulting MODELED partitioning latency, which is Fig. 7's x-axis
+    semantics ("latency invested"). `passes` sets the re-streaming pass
+    count for 'adwise-restream' (the second invested-latency knob).
     """
     cfg = {}
-    if strategy == "adwise":
+    if strategy in ("adwise", "adwise-restream"):
         wm = window_max if budget is None else int(budget)
         cfg = dict(window_max=wm, window_init=max(1, wm // 4),
                    use_clustering=use_cs)
+        if strategy == "adwise-restream":
+            cfg["passes"] = 2 if passes is None else int(passes)
+    elif strategy == "2ps":
+        cfg = dict(use_clustering=use_cs)
     res = run_partitioner(strategy, edges, n, k, seed=seed, **cfg)
     rd = replication_degree(replica_sets_from_assignment(edges, res.assign, n, k))
     return res, rd
 
 
 def total_latency_row(edges, n, k, strategy, workload_iters, msg_width=1,
-                      budget=None, window_max=256, use_cs=True):
+                      budget=None, window_max=256, use_cs=True, passes=None):
     """One (strategy, L) experiment → dict of latencies (Fig. 7 data point)."""
-    res, rd = run_strategy(edges, n, k, strategy, budget, window_max, use_cs)
+    res, rd = run_strategy(edges, n, k, strategy, budget, window_max, use_cs,
+                           passes=passes)
     g = build_partitioned_graph(edges, res.assign, n, k)
     # Both terms in the SAME modeled cluster units (measured 1-core CPU wall
-    # kept alongside for reference — DESIGN.md §3).
-    t_part = partition_latency(res.stats, len(edges), k)
+    # kept alongside for reference — DESIGN.md §3). Multi-pass strategies
+    # read the stream once per pass; the IO term scales with it.
+    n_reads = (passes or 1) if strategy == "adwise-restream" else (
+        2 if strategy == "2ps" else 1)
+    t_part = partition_latency(res.stats, len(edges) * n_reads, k)
     model = process_latency(g, workload_iters, msg_width, PAPER_CLUSTER)
     return dict(
         strategy=strategy,

@@ -30,6 +30,7 @@ def main(argv=None):
         bench_kernels,
         bench_moe_balance,
         bench_replication,
+        bench_restream,
         bench_spotlight,
         bench_total_latency,
         bench_window,
@@ -44,6 +45,9 @@ def main(argv=None):
                                   "--windows", "8", "--baselines", "dbh"])
         print("\n=== Fig.7g-i: replication degree (smoke) ===")
         bench_replication.main(["--scale", "0.006", *k, "--graphs", "brain_like"])
+        print("\n=== re-streaming pass sweep (smoke) ===")
+        bench_restream.main(["--scale", "0.006", *k, "--graphs", "brain_like",
+                             "--passes", "2", "--window", "8"])
         print("\n=== Fig.8: spotlight spread sweep (smoke) ===")
         bench_spotlight.main(["--scale", "0.01", *k, "--z", "4"])
         print("\n=== §III ablations (smoke) ===")
@@ -61,6 +65,8 @@ def main(argv=None):
     bench_total_latency.main(["--scale", str(scale)])
     print("\n=== Fig.7g-i: replication degree per strategy and L ===")
     bench_replication.main(["--scale", str(scale)])
+    print("\n=== re-streaming: RD vs pass count (adwise-restream / 2ps) ===")
+    bench_restream.main(["--scale", str(scale / 2)])
     print("\n=== Fig.8: spotlight spread sweep ===")
     bench_spotlight.main(["--scale", str(scale * 1.5)])
     print("\n=== §III ablations: window / lazy / clustering / lambda ===")

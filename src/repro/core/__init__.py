@@ -9,9 +9,12 @@ Public API:
   run_partitioner, available_strategies   — strategy registry (registry.py):
                                             all partitioners behind one
                                             (edges, n, k, seed, **cfg) API
+  restream_partition, two_phase_partition — multi-pass re-streaming layer
+                                            (restream.py: 'adwise-restream'
+                                            and '2ps' registry entries)
 """
 from repro.core.types import AdwiseConfig, PartitionResult
-from repro.core.adwise import partition_stream
+from repro.core.adwise import WarmState, partition_stream
 from repro.core.reference import ref_adwise_partition
 from repro.core.baselines import (
     hdrf_partition,
@@ -26,12 +29,17 @@ from repro.core.registry import (
     register,
     run_partitioner,
 )
+from repro.core.restream import restream_partition, two_phase_partition, warm_from_assignment
 from repro.core.spotlight import spotlight_partition, spread_mask
 
 __all__ = [
     "AdwiseConfig",
     "PartitionResult",
+    "WarmState",
     "partition_stream",
+    "restream_partition",
+    "two_phase_partition",
+    "warm_from_assignment",
     "ref_adwise_partition",
     "hdrf_partition",
     "dbh_partition",

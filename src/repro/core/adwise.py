@@ -32,10 +32,27 @@ import numpy as np
 from repro.core import scoring
 from repro.core.types import AdwiseConfig, PartitionResult
 
-__all__ = ["partition_stream"]
+__all__ = ["partition_stream", "WarmState"]
 
 NEG_INF = scoring.NEG_INF
 _BIG_I32 = np.int32(2**31 - 1)
+
+
+class WarmState(NamedTuple):
+    """State carried between re-streaming passes (`core/restream.py`).
+
+    ``replicas``/``deg``/``sizes`` warm-start the vertex cache of the next
+    pass; ``prev_assign`` (when given) enables buffered-re-streaming
+    revocation: an edge's previous assignment is subtracted from the
+    partition sizes at the moment the edge re-enters the window, so the
+    balance terms always see the *net* partition loads while the pass
+    re-places the stream.
+    """
+
+    replicas: np.ndarray  # (V, K) bool
+    deg: np.ndarray  # (V,) int — full (or partial) streamed degrees
+    sizes: np.ndarray  # (K,) int — partition loads at warm-start time
+    prev_assign: Optional[np.ndarray] = None  # (m,) int32, -1 = none
 
 
 class Carry(NamedTuple):
@@ -71,6 +88,39 @@ class Carry(NamedTuple):
     # Calibrated latency model (dynamic so recalibration does not recompile).
     cost_per_score: jax.Array  # () f32
     base_cost: jax.Array  # () f32
+
+    @classmethod
+    def warm_start(
+        cls,
+        cfg: "AdwiseConfig",
+        num_vertices: int,
+        budget: float,
+        *,
+        replicas: np.ndarray,  # (V, K) bool — replica table of the prior pass
+        deg: np.ndarray,  # (V,) int — streamed degrees of the prior pass
+        sizes: np.ndarray,  # (K,) int — partition loads of the prior pass
+    ) -> "Carry":
+        """Carry warm-started from a previous pass's tables (re-streaming).
+
+        λ restarts at ``cfg.lam_init`` and re-anneals over the new pass
+        (``assigned`` resets, so the Eq. 4 tolerance schedule replays); the
+        window controller likewise starts fresh. Only the *graph knowledge*
+        — replica table, degree table, partition loads — carries over.
+        """
+        base = _init_carry(cfg, num_vertices, budget)
+        v1 = num_vertices + 1
+        rep = jnp.zeros((v1, cfg.k), bool).at[:num_vertices].set(
+            jnp.asarray(replicas, bool)
+        )
+        deg_j = jnp.zeros((v1,), jnp.int32).at[:num_vertices].set(
+            jnp.asarray(deg, jnp.int32)
+        )
+        return base._replace(
+            replicas=rep,
+            deg=deg_j,
+            max_deg=jnp.maximum(jnp.max(deg_j), 1),
+            sizes=jnp.asarray(sizes, jnp.int32),
+        )
 
 
 class StepOut(NamedTuple):
@@ -124,6 +174,8 @@ def _make_step(
     allowed: jax.Array,  # (K,) bool
     cap: jax.Array,  # () int32 (BIG when disabled)
     has_budget: bool,
+    prev_assign: jax.Array,  # (m_pad,) int32 — prior-pass partition, -1 = none
+    update_deg: bool,  # False on warm-started passes (degrees already final)
 ):
     w_max, k, b = cfg.window_max, cfg.k, cfg.assign_batch
     v_dummy = num_vertices  # scatter dump row
@@ -144,12 +196,25 @@ def _make_step(
         win_uv = jnp.where(fill[:, None], fill_uv, carry.win_uv)
         win_sidx = jnp.where(fill, src, carry.win_sidx)
         win_valid = carry.win_valid | fill
-        # Streamed degrees update on observation.
-        u_f = jnp.where(fill, fill_uv[:, 0], v_dummy)
-        v_f = jnp.where(fill, fill_uv[:, 1], v_dummy)
-        deg = carry.deg.at[u_f].add(1).at[v_f].add(1)
-        seen = jnp.where(fill, jnp.maximum(deg[u_f], deg[v_f]), 0)
-        max_deg = jnp.maximum(carry.max_deg, jnp.max(seen))
+        # Streamed degrees update on observation (first pass only — warm
+        # passes inherit the final degree table and must not re-count).
+        if update_deg:
+            u_f = jnp.where(fill, fill_uv[:, 0], v_dummy)
+            v_f = jnp.where(fill, fill_uv[:, 1], v_dummy)
+            deg = carry.deg.at[u_f].add(1).at[v_f].add(1)
+            seen = jnp.where(fill, jnp.maximum(deg[u_f], deg[v_f]), 0)
+            max_deg = jnp.maximum(carry.max_deg, jnp.max(seen))
+        else:
+            deg = carry.deg
+            max_deg = carry.max_deg
+        # Buffered re-streaming revocation: the prior pass's assignment of an
+        # edge is released when the edge enters the window, so balance/capacity
+        # terms score against net loads while the pass re-places the stream.
+        pa = prev_assign[src_c]
+        dec = fill & (pa >= 0)
+        sizes_net = carry.sizes.at[jnp.where(dec, pa, 0)].add(
+            -dec.astype(jnp.int32)
+        )
         cursor = carry.cursor + take
         n_valid = carry.n_valid + take
 
@@ -208,8 +273,8 @@ def _make_step(
         score_rows = carry.score_rows + n_scored
 
         # ---- 4) Score matrix g = cached RCS + λ·B, masked. ----
-        bal = scoring.balance_score(carry.sizes, allowed, cfg.eps)
-        ok_p = allowed & (carry.sizes < cap)
+        bal = scoring.balance_score(sizes_net, allowed, cfg.eps)
+        ok_p = allowed & (sizes_net < cap)
         g = cached_rcs + carry.lam * bal[None, :]
         g = jnp.where(win_valid[:, None] & ok_p[None, :], g, NEG_INF)
         # Candidate threshold Θ = g_avg + ε (§III-B) in RCS units — it gates
@@ -251,7 +316,7 @@ def _make_step(
 
         # ---- 6) Apply assignments to the vertex cache / partition state. ----
         chi = ch.astype(jnp.int32)
-        sizes = carry.sizes.at[ch_p].add(chi)  # adds 0 where not chosen
+        sizes = sizes_net.at[ch_p].add(chi)  # adds 0 where not chosen
         u_c = jnp.where(ch, u, v_dummy)
         v_c = jnp.where(ch, v, v_dummy)
         old_u = carry.replicas[u_c, ch_p]
@@ -329,7 +394,9 @@ def _make_step(
 
 @partial(
     jax.jit,
-    static_argnames=("cfg", "num_vertices", "r_sel", "n_steps", "has_budget"),
+    static_argnames=(
+        "cfg", "num_vertices", "r_sel", "n_steps", "has_budget", "update_deg",
+    ),
 )
 def _run_chunk(
     carry: Carry,
@@ -337,14 +404,19 @@ def _run_chunk(
     m_real: jax.Array,
     allowed: jax.Array,
     cap: jax.Array,
+    prev_assign: jax.Array,
     *,
     cfg: AdwiseConfig,
     num_vertices: int,
     r_sel: int,
     n_steps: int,
     has_budget: bool,
+    update_deg: bool,
 ) -> tuple[Carry, StepOut]:
-    step = _make_step(cfg, num_vertices, r_sel, stream, m_real, allowed, cap, has_budget)
+    step = _make_step(
+        cfg, num_vertices, r_sel, stream, m_real, allowed, cap, has_budget,
+        prev_assign, update_deg,
+    )
     return jax.lax.scan(step, carry, None, length=n_steps)
 
 
@@ -356,6 +428,7 @@ def partition_stream(
     allowed: Optional[np.ndarray] = None,
     n_chunks: int = 8,
     cost_per_score: Optional[float] = None,
+    warm: Optional[WarmState] = None,
 ) -> PartitionResult:
     """Partition an edge stream with ADWISE (vectorized scan).
 
@@ -369,13 +442,17 @@ def partition_stream(
         between chunks recalibrates the (C2) latency model.
       cost_per_score: optional fixed seconds per (edge,partition) score
         evaluation; overrides calibration (deterministic tests).
+      warm: optional :class:`WarmState` from a previous pass (re-streaming):
+        the replica/degree tables and partition loads carry over, degrees are
+        not re-counted, and — when ``warm.prev_assign`` is given — each
+        edge's prior placement is revoked as it re-enters the window.
 
     Returns: PartitionResult with assign (int32[m]) and stats.
     """
     m = int(len(edges))
     k = cfg.k
     if m == 0:
-        return PartitionResult(np.zeros((0,), np.int32), dict(k=k))
+        return PartitionResult(np.zeros((0,), np.int32), dict(k=k, unassigned=0))
     b = cfg.assign_batch
     r_sel = cfg.window_max
     if cfg.lazy:
@@ -396,7 +473,21 @@ def partition_stream(
 
     budget = cfg.latency_budget if cfg.latency_budget is not None else 0.0
     has_budget = cfg.latency_budget is not None
-    carry = _init_carry(cfg, num_vertices, budget)
+    if warm is None:
+        carry = _init_carry(cfg, num_vertices, budget)
+        prev_assign_np = np.full((m,), -1, np.int32)
+        update_deg = True
+    else:
+        carry = Carry.warm_start(
+            cfg, num_vertices, budget,
+            replicas=warm.replicas, deg=warm.deg, sizes=warm.sizes,
+        )
+        if warm.prev_assign is None:
+            prev_assign_np = np.full((m,), -1, np.int32)
+        else:
+            prev_assign_np = np.asarray(warm.prev_assign, np.int32)
+            assert prev_assign_np.shape == (m,), "prev_assign must align with the stream"
+        update_deg = False
     fixed_cost = cost_per_score is not None
     if fixed_cost:
         carry = carry._replace(cost_per_score=jnp.float32(cost_per_score))
@@ -405,22 +496,28 @@ def partition_stream(
     m_real = jnp.int32(m)
     allowed_j = jnp.asarray(allowed_np)
     cap_j = jnp.int32(cap_val)
+    prev_j = jnp.asarray(prev_assign_np)
 
-    outs = []
-    t0 = time.perf_counter()
-    for _ in range(n_chunks):
-        carry, out = _run_chunk(
+    def run_chunk(carry):
+        return _run_chunk(
             carry,
             stream,
             m_real,
             allowed_j,
             cap_j,
+            prev_j,
             cfg=cfg,
             num_vertices=num_vertices,
             r_sel=r_sel,
             n_steps=chunk_steps,
             has_budget=has_budget,
+            update_deg=update_deg,
         )
+
+    outs = []
+    t0 = time.perf_counter()
+    for _ in range(n_chunks):
+        carry, out = run_chunk(carry)
         outs.append(jax.tree.map(np.asarray, out))
         if has_budget and not fixed_cost:
             # Recalibrate the latency model against reality.
@@ -431,6 +528,17 @@ def partition_stream(
                 cost_per_score=jnp.float32(wall / (rows * k)),
                 budget_left=jnp.float32(cfg.latency_budget - wall),
             )
+    # Bounded drain: the static `steps_total` heuristic can under-provision
+    # scan steps when the vertex-disjoint top-b pick stalls (e.g. star graphs
+    # with assign_batch > 1 assign one edge per step, not b). Each step with a
+    # non-empty window assigns >= 1 edge (the capacity caps sum to > m, so an
+    # allowed partition below cap always exists), so ceil(m / chunk_steps)
+    # extra chunks are always enough.
+    drain_left = -(-m // chunk_steps) + 2
+    while int(carry.assigned) < m and drain_left > 0:
+        carry, out = run_chunk(carry)
+        outs.append(jax.tree.map(np.asarray, out))
+        drain_left -= 1
     wall = time.perf_counter() - t0
 
     sidx = np.concatenate([o.sidx.reshape(-1) for o in outs])
@@ -438,6 +546,11 @@ def partition_stream(
     assign = np.full((m,), -1, np.int32)
     live = sidx >= 0
     assign[sidx[live]] = pout[live]
+    unassigned = int((assign < 0).sum())
+    assert unassigned == 0 and int(carry.assigned) == m, (
+        f"partition_stream left {unassigned} of {m} edges unassigned "
+        f"(scan assigned counter: {int(carry.assigned)}) — drain loop failed"
+    )
     w_trace = np.concatenate([np.atleast_1d(o.w_cap) for o in outs])
     stats = dict(
         k=k,
@@ -449,6 +562,8 @@ def partition_stream(
         w_trace=w_trace,
         lam_final=float(carry.lam),
         assigned=int(carry.assigned),
+        unassigned=unassigned,
+        warm=warm is not None,
         r_sel=r_sel,
         modeled_cost_per_score=float(carry.cost_per_score),
     )

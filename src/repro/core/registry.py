@@ -18,9 +18,21 @@ reference, ...), baselines accept their own keyword args (e.g. HDRF's
 ``lam``). Unknown keys raise ``TypeError`` — a misspelled knob never gets
 silently dropped.
 
+Multi-pass strategies (`repro/core/restream.py`):
+
+* ``adwise-restream`` — n-pass restreamed ADWISE. Knobs: every AdwiseConfig
+  field, plus ``passes=`` (total passes, default 2), ``base=`` (registry
+  strategy for pass 1, default 'adwise'), ``keep_best=`` (return the
+  lowest-replication pass, default True — quality monotone in passes).
+* ``2ps`` — two-phase streaming (phase 1 vertex clustering, phase 2
+  cluster-aware scoring). Knobs: AdwiseConfig fields for phase 2
+  (``window_max`` defaults to 32 here), plus ``cluster_slack=`` (phase-1
+  cluster volume cap as a multiple of 2m/k, default 1.25).
+
 Usage:
     from repro.core.registry import run_partitioner, available_strategies
     res = run_partitioner("adwise", edges, n, k=8, window_max=64)
+    res = run_partitioner("adwise-restream", edges, n, k=8, passes=3)
 """
 from __future__ import annotations
 
@@ -128,3 +140,8 @@ def _hash(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult:
 @register("grid")
 def _grid(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult:
     return baselines.grid_partition(edges, num_vertices, k, seed=seed, **cfg)
+
+
+# Multi-pass strategies register themselves on import (one-file entries).
+# Imported last: restream.py itself imports `register` from this module.
+from repro.core import restream as _restream  # noqa: E402,F401

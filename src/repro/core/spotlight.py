@@ -42,7 +42,7 @@ def spread_mask(k: int, z: int, instance: int, spread: int) -> np.ndarray:
 _SPOTLIGHT_INCOMPATIBLE = {"grid"}
 
 
-def _masked_strategy(strategy, edges, num_vertices, allowed, seed):
+def _masked_strategy(strategy, edges, num_vertices, allowed, seed, strategy_cfg=None):
     """Run a registry strategy on the allowed partition subset only.
 
     The strategy partitions into ``|allowed|`` local parts; local ids are then
@@ -55,7 +55,8 @@ def _masked_strategy(strategy, edges, num_vertices, allowed, seed):
             "use hash/dbh/hdrf/greedy or adwise"
         )
     res = registry.run_partitioner(
-        strategy, edges, num_vertices, int(allowed.sum()), seed=seed
+        strategy, edges, num_vertices, int(allowed.sum()), seed=seed,
+        **(strategy_cfg or {}),
     )
     local_to_global = np.flatnonzero(allowed).astype(np.int32)
     return PartitionResult(local_to_global[res.assign], res.stats)
@@ -71,6 +72,7 @@ def spotlight_partition(
     cfg: Optional[AdwiseConfig] = None,
     seed: int = 0,
     partitioner: Optional[Callable] = None,
+    strategy_cfg: Optional[dict] = None,
 ) -> PartitionResult:
     """Run ``z`` parallel partitioner instances with a limited spread.
 
@@ -81,6 +83,9 @@ def spotlight_partition(
         callable (edges, num_vertices, k, allowed, seed) -> PartitionResult
         with *global* partition ids.
       cfg: AdwiseConfig for strategy='adwise' (k is overridden).
+      strategy_cfg: keyword cfg forwarded to every non-'adwise' registry
+        strategy instance (e.g. ``dict(passes=3, window_max=64)`` for
+        'adwise-restream'); note the instance-local k is the spread size.
       spread: partitions per instance; k/z = disjoint spotlight blocks.
 
     Note: instances run sequentially here (single host); wall_time_s reports
@@ -108,7 +113,8 @@ def spotlight_partition(
             # instances run in parallel on the cluster, so each gets L.
             res = partition_stream(sub.edges, num_vertices, c, allowed=allowed)
         else:
-            res = _masked_strategy(strategy, sub.edges, num_vertices, allowed, seed + i)
+            res = _masked_strategy(strategy, sub.edges, num_vertices, allowed,
+                                   seed + i, strategy_cfg)
         assign[offsets[i] : offsets[i + 1]] = res.assign
         walls.append(res.stats.get("wall_time_s", 0.0))
         score_counts += res.stats.get("score_count", 0)

@@ -14,6 +14,7 @@ from repro.graph.metrics import (
     partition_sizes,
     replica_sets_from_assignment,
     sync_volume,
+    unassigned_count,
 )
 
 __all__ = [
@@ -29,4 +30,5 @@ __all__ = [
     "partition_sizes",
     "replica_sets_from_assignment",
     "sync_volume",
+    "unassigned_count",
 ]

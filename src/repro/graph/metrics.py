@@ -1,7 +1,19 @@
 """Partitioning-quality metrics (Eq. 1 and Eq. 2 of the paper).
 
 All metrics operate on an *assignment* array: ``assign[m] in [0, k)`` giving
-the partition of every edge in stream order.
+the partition of every edge in stream order. Streaming partitioners can
+legitimately emit ``-1`` ("unassigned") entries mid-run — re-streaming
+revokes assignments, spotlight instances fill disjoint chunks — so every
+metric here takes an explicit ``unassigned=`` policy:
+
+  * ``"raise"`` (default): a ``-1`` entry raises ``ValueError``. Quality
+    numbers computed over a partially-assigned stream are meaningless, and
+    the historical behaviour was worse than meaningless — ``np.bincount``
+    crashed on negatives while fancy-indexing silently *wrapped* ``-1``
+    into partition ``k-1``, corrupting replication-degree and balance.
+  * ``"drop"``: unassigned edges are masked out and the metric is computed
+    over the assigned subset only. Use together with
+    :func:`unassigned_count` so the dropped mass is always reported.
 """
 from __future__ import annotations
 
@@ -13,16 +25,52 @@ __all__ = [
     "partition_sizes",
     "partition_balance",
     "sync_volume",
+    "unassigned_count",
 ]
 
 
+def unassigned_count(assign: np.ndarray) -> int:
+    """Number of unassigned (``< 0``) entries in an assignment array."""
+    assign = np.asarray(assign)
+    return int((assign < 0).sum())
+
+
+def _assigned_mask(assign: np.ndarray, k: int, unassigned: str) -> np.ndarray:
+    """Validate ``assign`` against ``[0, k)`` and return the assigned mask."""
+    if unassigned not in ("raise", "drop"):
+        raise ValueError(f"unassigned policy must be 'raise' or 'drop', got {unassigned!r}")
+    assign = np.asarray(assign)
+    neg = assign < 0
+    n_neg = int(neg.sum())
+    if n_neg and unassigned == "raise":
+        raise ValueError(
+            f"assignment contains {n_neg} unassigned (-1) edges; pass "
+            "unassigned='drop' to compute the metric over the assigned subset"
+        )
+    if assign.size and int(assign.max()) >= k:
+        raise ValueError(f"assignment contains partition id {int(assign.max())} >= k={k}")
+    return ~neg
+
+
 def replica_sets_from_assignment(
-    edges: np.ndarray, assign: np.ndarray, num_vertices: int, k: int
+    edges: np.ndarray,
+    assign: np.ndarray,
+    num_vertices: int,
+    k: int,
+    *,
+    unassigned: str = "raise",
 ) -> np.ndarray:
-    """bool[V, k]: replicas[v, p] == vertex v has >=1 incident edge on partition p."""
+    """bool[V, k]: replicas[v, p] == vertex v has >=1 incident edge on partition p.
+
+    Unassigned (``-1``) edges contribute no replicas under ``"drop"`` —
+    fancy-indexing with ``-1`` would silently attribute them to partition
+    ``k-1`` — and raise under the default policy.
+    """
+    assign = np.asarray(assign)
+    ok = _assigned_mask(assign, k, unassigned)
     rep = np.zeros((num_vertices, k), dtype=bool)
-    rep[edges[:, 0], assign] = True
-    rep[edges[:, 1], assign] = True
+    rep[edges[ok, 0], assign[ok]] = True
+    rep[edges[ok, 1], assign[ok]] = True
     return rep
 
 
@@ -35,13 +83,21 @@ def replication_degree(replicas: np.ndarray) -> float:
     return float(counts[present].mean())
 
 
-def partition_sizes(assign: np.ndarray, k: int) -> np.ndarray:
-    return np.bincount(assign, minlength=k).astype(np.int64)
+def partition_sizes(
+    assign: np.ndarray, k: int, *, unassigned: str = "raise"
+) -> np.ndarray:
+    """int64[k]: edges per partition. ``-1`` entries raise or are dropped —
+    ``np.bincount`` raises on negatives, so they never reach it either way."""
+    assign = np.asarray(assign)
+    ok = _assigned_mask(assign, k, unassigned)
+    return np.bincount(assign[ok], minlength=k).astype(np.int64)
 
 
-def partition_balance(assign: np.ndarray, k: int) -> float:
+def partition_balance(
+    assign: np.ndarray, k: int, *, unassigned: str = "raise"
+) -> float:
     """Imbalance iota = (maxsize - minsize) / maxsize  (0 = perfectly balanced)."""
-    sizes = partition_sizes(assign, k)
+    sizes = partition_sizes(assign, k, unassigned=unassigned)
     mx = sizes.max()
     if mx == 0:
         return 0.0

@@ -103,9 +103,14 @@ def segment_sum_sorted(
     num_segments: int,
     *, impl: str = "auto",
 ):
-    """Segment sum where the segment layout is static (known per graph)."""
-    impl = resolve_impl(impl, require_tpu_support=True,
-                        require_prefetch_grid=True, op="segment_sum_sorted")
+    """Segment sum where the segment layout is static (known per graph).
+
+    'pallas' without `PrefetchScalarGridSpec` no longer downgrades to 'ref':
+    the blocked entry point itself falls back to its `jax.ops.segment_sum`
+    fast path over the same layout (with a RuntimeWarning), so the blocked
+    code path stays exercised on installs where the grid cannot be built.
+    """
+    impl = resolve_impl(impl, require_tpu_support=True, op="segment_sum_sorted")
     if impl == "pallas":
         perm, loc, chunk_ptr, nchunks, e_pad = csr_block_layout(
             np.asarray(seg_ids), num_segments, data.shape[1]

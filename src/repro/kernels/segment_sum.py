@@ -19,6 +19,7 @@ ragged-block pattern.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +60,37 @@ def csr_block_layout(seg_ids: np.ndarray, num_segments: int, d: int):
     return perm, loc, chunk_ptr, nchunks, e_pad
 
 
+def segment_sum_xla(
+    data_padded: jax.Array,  # (E_pad, D) f32 — permuted by csr_block_layout
+    loc: jax.Array,  # (E_pad,) int32 — block-local destination ids
+    chunk_ptr: jax.Array,  # (n_sblocks,) int32
+    num_segments: int,
+) -> jax.Array:
+    """`jax.ops.segment_sum` fast path over the same blocked CSR layout.
+
+    Used when pallas-TPU's (deprecated-upstream) `PrefetchScalarGridSpec` is
+    absent: global destination ids are reconstructed from the layout
+    (block-of-chunk × SB + local id) and handed to XLA's segment sum, so
+    callers of the blocked kernel keep working — and fast — on installs
+    where the Pallas grid cannot be built. Padding rows carry zero data, so
+    they contribute nothing wherever their reconstructed id lands.
+    """
+    e_pad, _ = data_padded.shape
+    n_sblocks = chunk_ptr.shape[0]
+    n_total_chunks = e_pad // EB
+    chunk_ids = jnp.arange(n_total_chunks, dtype=chunk_ptr.dtype)
+    block_of_chunk = jnp.searchsorted(chunk_ptr, chunk_ids, side="right") - 1
+    seg = jnp.repeat(block_of_chunk.astype(jnp.int32), EB) * SB + loc
+    s_pad = n_sblocks * SB
+    assert num_segments <= s_pad, (
+        f"num_segments={num_segments} exceeds the layout's {s_pad} padded rows"
+    )
+    out = jax.ops.segment_sum(
+        data_padded.astype(jnp.float32), seg, num_segments=s_pad
+    )
+    return out[:num_segments]
+
+
 def _kernel(chunk_ptr_ref, nchunks_ref, loc_ref, data_ref, out_ref):
     b = pl.program_id(0)
     c = pl.program_id(1)
@@ -91,10 +123,17 @@ def segment_sum_pallas(
 ) -> jax.Array:
     """(S_pad, D) blocked segment sum; rows ≥ num_segments are zero padding."""
     if pl is None or pltpu is None or not hasattr(pltpu, "PrefetchScalarGridSpec"):
-        raise RuntimeError(
-            "pallas/pallas-TPU unavailable — use ops.segment_sum_sorted"
-            " (impl='ref'/'auto'), which falls back to the XLA oracle"
+        # Fast path (ROADMAP item): no Pallas prefetch grid on this install —
+        # compute the same blocked layout through jax.ops.segment_sum. Loud so
+        # a benchmark column labeled 'pallas' is never silently XLA numbers.
+        warnings.warn(
+            "segment_sum_pallas: PrefetchScalarGridSpec unavailable — running "
+            "the jax.ops.segment_sum fast path over the blocked layout; "
+            "reported timings are NOT pallas timings",
+            RuntimeWarning,
+            stacklevel=2,
         )
+        return segment_sum_xla(data_padded, loc, chunk_ptr, num_segments)
     e_pad, d = data_padded.shape
     n_sblocks = chunk_ptr.shape[0]
     n_total_chunks = e_pad // EB

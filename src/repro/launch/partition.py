@@ -5,11 +5,12 @@
         --workload pagerank --iters 100
 
 Runs: stream partitioning (any strategy in the `repro.core.registry` —
-adwise / hdrf / dbh / greedy / hash / grid — optionally under spotlight
-parallel loading) → vertex-cut engine build → workload → total latency
-report (measured partitioning wall-clock + modeled cluster processing
-latency, cf. DESIGN.md §3). New partitioners registered in
-`repro/core/registry.py` show up in `--strategy` automatically.
+adwise / adwise-restream / 2ps / hdrf / dbh / greedy / hash / grid —
+optionally under spotlight parallel loading) → vertex-cut engine build →
+workload → total latency report (measured partitioning wall-clock + modeled
+cluster processing latency, cf. DESIGN.md §3). New partitioners registered
+in `repro/core/registry.py` show up in `--strategy` automatically;
+`--passes` sets the re-streaming pass count for adwise-restream.
 """
 from __future__ import annotations
 
@@ -34,7 +35,16 @@ from repro.engine import (
     process_latency,
     triangle_count,
 )
-from repro.graph import make_graph, partition_balance, replica_sets_from_assignment, replication_degree
+from repro.graph import (
+    make_graph,
+    partition_balance,
+    replica_sets_from_assignment,
+    replication_degree,
+    unassigned_count,
+)
+
+# Strategies that take AdwiseConfig-style knobs from the CLI.
+_ADWISE_LIKE = ("adwise", "adwise-restream", "2ps")
 
 
 def adwise_cfg_kwargs(args) -> dict:
@@ -48,16 +58,25 @@ def adwise_cfg_kwargs(args) -> dict:
 def run_partition(edges, n, args):
     if args.parallel > 1:
         cfg = None
+        strategy_cfg = None
         if args.strategy == "adwise":
             cfg = AdwiseConfig(k=args.k, **adwise_cfg_kwargs(args))
+        elif args.strategy in _ADWISE_LIKE:
+            strategy_cfg = adwise_cfg_kwargs(args)
+            if args.strategy == "adwise-restream":
+                strategy_cfg["passes"] = args.passes
         return spotlight_partition(
             edges, n, args.k, z=args.parallel, spread=args.spread,
             strategy=args.strategy, cfg=cfg, seed=args.seed,
+            strategy_cfg=strategy_cfg,
         )
     cfg = {}
-    if args.strategy == "adwise":
+    if args.strategy in _ADWISE_LIKE:
         cfg = adwise_cfg_kwargs(args)
+    if args.strategy == "adwise":
         cfg["oracle"] = args.oracle
+    elif args.strategy == "adwise-restream":
+        cfg["passes"] = args.passes
     return run_partitioner(args.strategy, edges, n, args.k, seed=args.seed, **cfg)
 
 
@@ -72,6 +91,8 @@ def main(argv=None):
     ap.add_argument("--spread", type=int, default=4)
     ap.add_argument("--budget", type=float, default=None, help="latency preference L (s)")
     ap.add_argument("--window-max", type=int, default=256)
+    ap.add_argument("--passes", type=int, default=2,
+                    help="re-streaming passes (adwise-restream)")
     ap.add_argument("--no-cs", action="store_true", help="disable clustering score")
     ap.add_argument("--oracle", action="store_true", help="sequential reference impl")
     ap.add_argument("--workload", default="pagerank",
@@ -85,18 +106,27 @@ def main(argv=None):
     print(f"graph={args.graph} |V|={n} |E|={len(edges)} k={args.k}")
 
     res = run_partition(edges, n, args)
-    rep = replica_sets_from_assignment(edges, res.assign, n, args.k)
+    # The unassigned count is reported explicitly, so quality metrics run
+    # under the 'drop' policy: a partial assignment yields numbers over the
+    # assigned subset *plus* a nonzero unassigned= field — never a silent
+    # mis-count (and never a crash before the count is printed).
+    n_unassigned = unassigned_count(res.assign)
+    rep = replica_sets_from_assignment(edges, res.assign, n, args.k,
+                                       unassigned="drop")
     rd = replication_degree(rep)
-    imb = partition_balance(res.assign, args.k)
+    imb = partition_balance(res.assign, args.k, unassigned="drop")
     t_part = res.stats.get("wall_time_s", 0.0)
     print(f"partitioner={args.strategy} RD={rd:.3f} imbalance={imb:.4f} "
-          f"partition_latency={t_part:.2f}s")
+          f"unassigned={n_unassigned} partition_latency={t_part:.2f}s")
 
     out = dict(
         graph=args.graph, strategy=args.strategy, k=args.k,
-        replication_degree=rd, imbalance=imb, partition_latency_s=t_part,
+        replication_degree=rd, imbalance=imb, unassigned=n_unassigned,
+        partition_latency_s=t_part,
         stats={k: v for k, v in res.stats.items()
-               if isinstance(v, (int, float, str))},
+               if isinstance(v, (int, float, str))
+               or (isinstance(v, list)
+                   and all(isinstance(x, (int, float)) for x in v))},
     )
     if args.workload != "none":
         g = build_partitioned_graph(edges, res.assign, n, args.k)

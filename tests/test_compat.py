@@ -18,7 +18,7 @@ from repro.kernels import ops
 
 from conftest import random_edges
 
-ALL_STRATEGIES = ["adwise", "dbh", "greedy", "grid", "hash", "hdrf"]
+ALL_STRATEGIES = ["2ps", "adwise", "adwise-restream", "dbh", "greedy", "grid", "hash", "hdrf"]
 
 
 # ----------------------------------------------------------------------------
@@ -154,7 +154,8 @@ def test_registry_round_trip(strategy):
     rng = np.random.default_rng(7)
     edges = random_edges(rng, 60, 250)
     n, k = 60, 5
-    cfg = dict(window_max=16) if strategy == "adwise" else {}
+    cfg = (dict(window_max=16)
+           if strategy in ("adwise", "adwise-restream", "2ps") else {})
     res = run_partitioner(strategy, edges, n, k, seed=3, **cfg)
     assert res.assign.shape == (len(edges),)
     assert res.assign.dtype == np.int32

@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 from repro import compat
 from repro.kernels import ops
 from repro.kernels import ref as kref
-from repro.kernels.segment_sum import csr_block_layout, EB, SB
+from repro.kernels.segment_sum import csr_block_layout, segment_sum_xla, EB, SB
 
 # The pallas-vs-ref comparisons below are meaningless if resolve_impl would
 # degrade the explicit 'pallas' request to 'ref' (the two sides would be the
@@ -92,6 +92,48 @@ def test_segment_sum_shapes(e, d, s, dtype):
     b = ops.segment_sum_sorted(jnp.asarray(data, jnp.float32), seg, s, impl="ref")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b, np.float32),
                                rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("e,d,s", [
+    (10, 8, 5), (1000, 64, 300), (513, 16, 129), (3000, 32, 700),
+])
+def test_segment_sum_xla_fast_path_parity(e, d, s):
+    """The no-PrefetchScalarGridSpec fast path (jax.ops.segment_sum over the
+    blocked CSR layout) must agree with the plain sorted-segment reference.
+    Runs on every install — it needs no pallas at all."""
+    rng = np.random.default_rng(e * 13 + d)
+    seg = np.sort(rng.integers(0, s, e)).astype(np.int32)
+    data = rng.normal(size=(e, d)).astype(np.float32)
+    perm, loc, chunk_ptr, nchunks, e_pad = csr_block_layout(seg, s, d)
+    gather = np.where(perm[:, None] >= 0, data[np.maximum(perm, 0)], 0.0)
+    a = segment_sum_xla(
+        jnp.asarray(gather, jnp.float32), jnp.asarray(loc),
+        jnp.asarray(chunk_ptr), s,
+    )
+    b = kref.segment_sum_ref(jnp.asarray(data), jnp.asarray(seg), s)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_segment_sum_pallas_falls_back_without_prefetch_grid(monkeypatch):
+    """When pallas-TPU lacks PrefetchScalarGridSpec, the blocked kernel entry
+    point must route to the XLA fast path instead of raising."""
+    from repro.kernels import segment_sum as ss
+
+    monkeypatch.setattr(ss, "pltpu", None)
+    rng = np.random.default_rng(7)
+    e, d, s = 400, 8, 100
+    seg = np.sort(rng.integers(0, s, e)).astype(np.int32)
+    data = rng.normal(size=(e, d)).astype(np.float32)
+    perm, loc, chunk_ptr, nchunks, e_pad = csr_block_layout(seg, s, d)
+    gather = np.where(perm[:, None] >= 0, data[np.maximum(perm, 0)], 0.0)
+    with pytest.warns(RuntimeWarning, match="NOT pallas timings"):
+        out = ss.segment_sum_pallas(
+            jnp.asarray(gather, jnp.float32), jnp.asarray(loc),
+            jnp.asarray(chunk_ptr), jnp.asarray(nchunks), s,
+        )
+    ref = kref.segment_sum_ref(jnp.asarray(data), jnp.asarray(seg), s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_csr_block_layout_invariants():

@@ -1,0 +1,89 @@
+"""Unassigned-edge (-1) handling in graph/metrics: raise or report, never
+silently mis-count.
+
+Historical corruption this pins down: `np.bincount` raises on negatives
+(so `partition_sizes` crashed on any in-flight assignment), while bool
+fancy-indexing with -1 *wraps* to the last column (so
+`replica_sets_from_assignment` silently attributed unassigned edges to
+partition k-1, skewing replication degree and balance).
+"""
+import numpy as np
+import pytest
+
+from repro.graph import (
+    partition_balance,
+    partition_sizes,
+    replica_sets_from_assignment,
+    replication_degree,
+    unassigned_count,
+)
+
+EDGES = np.array([[0, 1], [1, 2], [2, 3], [3, 0]], dtype=np.int32)
+K = 4
+
+
+def test_unassigned_count():
+    assert unassigned_count(np.array([0, 1, -1, 2, -1])) == 2
+    assert unassigned_count(np.array([], dtype=np.int32)) == 0
+    assert unassigned_count(np.array([0, 1, 2])) == 0
+
+
+def test_partition_sizes_raises_on_unassigned():
+    assign = np.array([0, 1, -1, 2], dtype=np.int32)
+    with pytest.raises(ValueError, match="unassigned"):
+        partition_sizes(assign, K)
+
+
+def test_partition_sizes_drop_counts_assigned_only():
+    assign = np.array([0, 1, -1, 1], dtype=np.int32)
+    sizes = partition_sizes(assign, K, unassigned="drop")
+    assert sizes.tolist() == [1, 2, 0, 0]
+    assert sizes.sum() == len(assign) - unassigned_count(assign)
+
+
+def test_replica_sets_raises_on_unassigned():
+    assign = np.array([0, 1, -1, 2], dtype=np.int32)
+    with pytest.raises(ValueError, match="unassigned"):
+        replica_sets_from_assignment(EDGES, assign, 4, K)
+
+
+def test_replica_sets_drop_does_not_wrap_into_last_partition():
+    # Edge (2, 3) is unassigned; previously its endpoints were silently
+    # replicated onto partition K-1 via -1 fancy-index wraparound.
+    assign = np.array([0, 0, -1, 0], dtype=np.int32)
+    rep = replica_sets_from_assignment(EDGES, assign, 4, K, unassigned="drop")
+    assert not rep[:, K - 1].any()
+    # The assigned edges still produce their replicas.
+    assert rep[0, 0] and rep[1, 0] and rep[2, 0] and rep[3, 0]
+    # Full replication degree reflects only assigned edges (1 replica each).
+    assert replication_degree(rep) == 1.0
+
+
+def test_partition_balance_policies():
+    assign = np.array([0, 0, 1, -1], dtype=np.int32)
+    with pytest.raises(ValueError, match="unassigned"):
+        partition_balance(assign, 2)
+    # Over the assigned subset: sizes (2, 1) -> (2-1)/2.
+    assert partition_balance(assign, 2, unassigned="drop") == pytest.approx(0.5)
+
+
+def test_out_of_range_partition_id_raises():
+    assign = np.array([0, 1, K, 0], dtype=np.int32)
+    with pytest.raises(ValueError, match=">= k"):
+        partition_sizes(assign, K)
+    with pytest.raises(ValueError, match=">= k"):
+        replica_sets_from_assignment(EDGES, assign, 4, K)
+
+
+def test_bad_policy_rejected():
+    with pytest.raises(ValueError, match="policy"):
+        partition_sizes(np.array([0]), K, unassigned="ignore")
+
+
+def test_all_unassigned_drop_is_empty_not_corrupt():
+    assign = np.full(4, -1, dtype=np.int32)
+    assert partition_sizes(assign, K, unassigned="drop").sum() == 0
+    rep = replica_sets_from_assignment(EDGES, assign, 4, K, unassigned="drop")
+    assert not rep.any()
+    assert replication_degree(rep) == 0.0
+    assert partition_balance(assign, K, unassigned="drop") == 0.0

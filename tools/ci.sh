@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 quick test profile + the smoke pass over every benchmark
+# entrypoint (proves each bench still *runs*; regressions in launch/bench
+# wiring fail here, not in a nightly).
+#
+#   tools/ci.sh          # what the workflow runs
+#   tools/ci.sh --full   # also run the slow-marked tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+MARK='not slow'
+if [[ "${1:-}" == "--full" ]]; then
+  MARK=''
+fi
+
+if [[ -n "$MARK" ]]; then
+  python -m pytest -x -q -m "$MARK"
+else
+  python -m pytest -x -q
+fi
+
+python -m benchmarks.run --smoke
