@@ -55,14 +55,14 @@ def main(argv=None):
             cum_rows += res.stats["pass_score_rows"][p - 1]
             cum_wall += res.stats["pass_wall_s"][p - 1]
             t_model = partition_latency(
-                dict(score_rows=cum_rows), len(edges) * p, args.k)
+                dict(score_rows=cum_rows, stream_reads=p), len(edges), args.k)
             emit(preset, "adwise-restream", p, res.stats["pass_rd"][p - 1],
                  res.stats["pass_imbalance"][p - 1], t_model, cum_wall)
 
         res2, rd2 = run_strategy(edges, n, args.k, "2ps")
-        # 2PS reads the stream twice (clustering pass + scoring pass).
+        # 2PS stats carry stream_reads=2 (clustering pass + scoring pass).
         emit(preset, "2ps", 2, rd2, partition_balance(res2.assign, args.k),
-             partition_latency(res2.stats, 2 * len(edges), args.k),
+             partition_latency(res2.stats, len(edges), args.k),
              res2.stats.get("wall_time_s", 0.0))
 
         resh, rdh = run_strategy(edges, n, args.k, "hdrf")

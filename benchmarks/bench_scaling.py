@@ -1,0 +1,155 @@
+"""Multi-device scaling harness: batched spotlight partitioning wall and
+engine supersteps/s vs device count.
+
+The container has one physical CPU, so device scaling is measured against
+XLA's fake host devices: for each N the harness spawns a subprocess under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the flag is read at
+process startup, so it cannot be flipped in-process) and measures, inside it:
+
+  * batched spotlight partitioning (z instances as ONE vmapped/shard_mapped
+    program — instances land on separate devices when N > 1),
+  * the sequential ``backend="loop"`` path on the same host (the z× cost the
+    batched scan removes),
+  * engine supersteps/s for PageRank on the partitioned graph (the `parts`
+    mesh axis is padded inside `make_superstep`, so every N is valid for
+    every k).
+
+    PYTHONPATH=src python -m benchmarks.bench_scaling                 # N = 1,2,4,8
+    PYTHONPATH=src python -m benchmarks.bench_scaling --smoke         # CI-size
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+        PYTHONPATH=src python -m benchmarks.bench_scaling --in-process
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+_JSON_MARK = "BENCH_SCALING_ROW:"
+
+
+def _measure(args) -> dict:
+    """Measure on THIS process's devices (call under the right XLA_FLAGS)."""
+    import jax
+    import numpy as np
+
+    from repro.core import AdwiseConfig, spotlight_partition
+    from repro.engine import build_partitioned_graph, pagerank
+    from repro.graph import make_graph
+
+    edges, n = make_graph(args.graph, seed=0, scale=args.scale)
+    k, z = args.k, args.z
+    spread = args.spread if args.spread else max(k // z, 1)
+    cfg = AdwiseConfig(k=k, window_max=args.window,
+                       window_init=max(1, args.window // 4))
+
+    def run(backend):
+        return spotlight_partition(edges, n, k, z=z, spread=spread,
+                                   strategy="adwise", cfg=cfg, backend=backend)
+
+    # Warm both paths (compile), then time a second run of each.
+    res_b = run("batched")
+    res_b = run("batched")
+    t_batched = res_b.stats["wall_time_s"]  # measured batched-program wall
+    res_l = run("loop")
+    res_l = run("loop")
+    t_loop = res_l.stats["wall_time_serial_s"]  # real serial host wall
+    assert (res_b.assign >= 0).all() and (res_l.assign >= 0).all()
+
+    g = build_partitioned_graph(edges, res_b.assign, n, k)
+    iters = args.iters
+    pagerank(g, iters=2)  # compile
+    t0 = time.perf_counter()
+    pr, _ = pagerank(g, iters=iters)
+    t_engine = time.perf_counter() - t0
+    assert np.isfinite(pr).all()
+
+    return dict(
+        devices=jax.device_count(),
+        m=len(edges),
+        k=k,
+        z=z,
+        spread=spread,
+        backend=res_b.stats["backend"],
+        n_shards=res_b.stats["n_shards"],
+        t_partition_batched_s=round(t_batched, 4),
+        t_partition_loop_s=round(t_loop, 4),
+        partition_speedup=round(t_loop / max(t_batched, 1e-9), 2),
+        supersteps_per_s=round(iters / max(t_engine, 1e-9), 2),
+    )
+
+
+def _spawn(n_devices: int, args) -> dict:
+    """Run `--in-process` in a subprocess pinned to n_devices fake devices."""
+    cmd = [
+        sys.executable, "-m", "benchmarks.bench_scaling", "--in-process",
+        "--graph", args.graph, "--scale", str(args.scale),
+        "--k", str(args.k), "--z", str(args.z), "--spread", str(args.spread),
+        "--window", str(args.window), "--iters", str(args.iters),
+    ]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.abspath("src"), env.get("PYTHONPATH")] if p
+    )
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"bench_scaling child (N={n_devices}) failed:\n{out.stderr[-2000:]}"
+        )
+    for line in out.stdout.splitlines():
+        if line.startswith(_JSON_MARK):
+            return json.loads(line[len(_JSON_MARK):])
+    raise RuntimeError(f"child (N={n_devices}) printed no row:\n{out.stdout}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="brain_like")
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--z", type=int, default=4, help="partitioner instances")
+    ap.add_argument("--spread", type=int, default=0,
+                    help="partitions per instance (0 = k/z disjoint blocks)")
+    ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=10, help="engine supersteps")
+    ap.add_argument("--devices", default="1,2,4,8",
+                    help="comma-separated fake-device counts to sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-size: tiny graph, N in {1,2}")
+    ap.add_argument("--in-process", action="store_true",
+                    help="measure at THIS process's device count (set "
+                         "XLA_FLAGS yourself) instead of spawning the sweep")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.scale, args.k, args.z, args.window, args.iters = 0.008, 8, 4, 16, 4
+        if args.devices == "1,2,4,8":
+            args.devices = "1,2"
+
+    if args.in_process:
+        row = _measure(args)
+        print(f"{_JSON_MARK}{json.dumps(row)}")
+        rows = [row]
+    else:
+        rows = []
+        print("devices,backend,n_shards,t_partition_batched_s,"
+              "t_partition_loop_s,partition_speedup,supersteps_per_s")
+        for n_dev in [int(x) for x in args.devices.split(",") if x]:
+            r = _spawn(n_dev, args)
+            rows.append(r)
+            print(f"{r['devices']},{r['backend']},{r['n_shards']},"
+                  f"{r['t_partition_batched_s']},{r['t_partition_loop_s']},"
+                  f"{r['partition_speedup']},{r['supersteps_per_s']}")
+    if args.json:
+        json.dump(rows, open(args.json, "w"), indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -66,11 +66,9 @@ def main(argv=None):
                 res, rd = run_strategy(edges, n, args.k, strategy, budget=L,
                                        use_cs=use_cs, passes=passes)
                 g = build_partitioned_graph(edges, res.assign, n, args.k)
-                # Multi-pass strategies read the stream `passes` times — the
-                # IO term of the invested latency scales with it (2PS reads
-                # twice: clustering pass + scoring pass).
-                m_eff = len(edges) * (passes or (2 if strategy == "2ps" else 1))
-                t_part = partition_latency(res.stats, m_eff, args.k)
+                # Multi-pass strategies report stats['stream_reads'] (2PS: 2,
+                # restream: passes_run) — partition_latency bills IO per read.
+                t_part = partition_latency(res.stats, len(edges), args.k)
                 parts.append((label, L, res, rd, g, t_part))
         for wname, (iters, width) in WORKLOADS.items():
             for strategy, L, res, rd, g, t_part in parts:

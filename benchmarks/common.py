@@ -50,10 +50,9 @@ def total_latency_row(edges, n, k, strategy, workload_iters, msg_width=1,
     g = build_partitioned_graph(edges, res.assign, n, k)
     # Both terms in the SAME modeled cluster units (measured 1-core CPU wall
     # kept alongside for reference — DESIGN.md §3). Multi-pass strategies
-    # read the stream once per pass; the IO term scales with it.
-    n_reads = (passes or 1) if strategy == "adwise-restream" else (
-        2 if strategy == "2ps" else 1)
-    t_part = partition_latency(res.stats, len(edges) * n_reads, k)
+    # report stats['stream_reads']; partition_latency bills the IO term per
+    # read, so m here is always the plain stream length.
+    t_part = partition_latency(res.stats, len(edges), k)
     model = process_latency(g, workload_iters, msg_width, PAPER_CLUSTER)
     return dict(
         strategy=strategy,

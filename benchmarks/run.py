@@ -31,6 +31,7 @@ def main(argv=None):
         bench_moe_balance,
         bench_replication,
         bench_restream,
+        bench_scaling,
         bench_spotlight,
         bench_total_latency,
         bench_window,
@@ -50,6 +51,8 @@ def main(argv=None):
                              "--passes", "2", "--window", "8"])
         print("\n=== Fig.8: spotlight spread sweep (smoke) ===")
         bench_spotlight.main(["--scale", "0.01", *k, "--z", "4"])
+        print("\n=== multi-device scaling (smoke: N in {1,2}) ===")
+        bench_scaling.main(["--smoke"])
         print("\n=== §III ablations (smoke) ===")
         bench_window.main(["--scale", "0.004", *k])
         print("\n=== ADWISE-balance MoE routing (smoke) ===")
@@ -69,6 +72,8 @@ def main(argv=None):
     bench_restream.main(["--scale", str(scale / 2)])
     print("\n=== Fig.8: spotlight spread sweep ===")
     bench_spotlight.main(["--scale", str(scale * 1.5)])
+    print("\n=== multi-device scaling: batched spotlight + engine vs N ===")
+    bench_scaling.main(["--scale", str(scale / 2), "--devices", "1,2,4,8"])
     print("\n=== §III ablations: window / lazy / clustering / lambda ===")
     bench_window.main(["--scale", str(scale / 2)])
     print("\n=== beyond-paper: ADWISE-balance MoE routing ===")

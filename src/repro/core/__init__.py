@@ -3,6 +3,9 @@
 Public API:
   AdwiseConfig, PartitionResult           — configuration / result types
   partition_stream                        — vectorized windowed partitioner
+  partition_stream_batched                — z instance scans as ONE vmapped /
+                                            shard_mapped program (device-
+                                            parallel spotlight loading)
   ref_adwise_partition                    — sequential Algorithm-1 oracle
   hdrf_partition, dbh_partition, ...      — single-edge streaming baselines
   spotlight_partition, spread_mask        — §III-D parallel-loading optimization
@@ -14,7 +17,7 @@ Public API:
                                             and '2ps' registry entries)
 """
 from repro.core.types import AdwiseConfig, PartitionResult
-from repro.core.adwise import WarmState, partition_stream
+from repro.core.adwise import WarmState, partition_stream, partition_stream_batched
 from repro.core.reference import ref_adwise_partition
 from repro.core.baselines import (
     hdrf_partition,
@@ -29,7 +32,12 @@ from repro.core.registry import (
     register,
     run_partitioner,
 )
-from repro.core.restream import restream_partition, two_phase_partition, warm_from_assignment
+from repro.core.restream import (
+    restream_partition,
+    restream_partition_batched,
+    two_phase_partition,
+    warm_from_assignment,
+)
 from repro.core.spotlight import spotlight_partition, spread_mask
 
 __all__ = [
@@ -37,7 +45,9 @@ __all__ = [
     "PartitionResult",
     "WarmState",
     "partition_stream",
+    "partition_stream_batched",
     "restream_partition",
+    "restream_partition_batched",
     "two_phase_partition",
     "warm_from_assignment",
     "ref_adwise_partition",

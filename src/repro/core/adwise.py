@@ -23,16 +23,18 @@ from __future__ import annotations
 import math
 import time
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import scoring
 from repro.core.types import AdwiseConfig, PartitionResult
 
-__all__ = ["partition_stream", "WarmState"]
+__all__ = ["partition_stream", "partition_stream_batched", "WarmState"]
 
 NEG_INF = scoring.NEG_INF
 _BIG_I32 = np.int32(2**31 - 1)
@@ -420,6 +422,86 @@ def _run_chunk(
     return jax.lax.scan(step, carry, None, length=n_steps)
 
 
+@partial(
+    jax.jit,
+    static_argnames=(
+        "cfg", "num_vertices", "r_sel", "n_steps", "has_budget", "update_deg",
+        "n_shards",
+    ),
+)
+def _run_chunk_batched(
+    carry: Carry,  # leaves carry a leading (z,) instance axis
+    streams: jax.Array,  # (z, per, 2) int32
+    m_real: jax.Array,  # (z,) int32
+    allowed: jax.Array,  # (z, K) bool
+    cap: jax.Array,  # (z,) int32
+    prev_assign: jax.Array,  # (z, per) int32
+    *,
+    cfg: AdwiseConfig,
+    num_vertices: int,
+    r_sel: int,
+    n_steps: int,
+    has_budget: bool,
+    update_deg: bool,
+    n_shards: int = 0,
+) -> tuple[Carry, StepOut]:
+    """All z instance scans as ONE program: `vmap` of the step function over
+    the leading instance axis, optionally `shard_map`-ped over an
+    ("instances",) mesh axis so instances land on separate devices.
+
+    ``n_shards == 0`` means pure vmap (single device); ``n_shards > 1`` wraps
+    the vmapped scan in shard_map over the first ``n_shards`` local devices
+    (z must be divisible by n_shards — each device runs z/n_shards instances).
+    """
+
+    def one(carry, stream, m_real, allowed, cap, prev):
+        step = _make_step(
+            cfg, num_vertices, r_sel, stream, m_real, allowed, cap,
+            has_budget, prev, update_deg,
+        )
+        return jax.lax.scan(step, carry, None, length=n_steps)
+
+    batched = jax.vmap(one)
+    if n_shards > 1:
+        mesh = compat.make_mesh(
+            (n_shards,), ("instances",),
+            devices=np.array(jax.devices()[:n_shards]),
+        )
+        batched = compat.shard_map(
+            batched,
+            mesh=mesh,
+            in_specs=(P("instances"),) * 6,
+            out_specs=P("instances"),
+            check_replication=False,
+        )
+    return batched(carry, streams, m_real, allowed, cap, prev_assign)
+
+
+def _cap_value(cfg: AdwiseConfig, m: int, n_allowed: int) -> int:
+    if cfg.cap_slack is None:
+        return int(_BIG_I32)
+    return int(math.ceil(cfg.cap_slack * m / max(n_allowed, 1))) + 1
+
+
+def _resolve_backend(backend: str, z: int) -> tuple[str, int]:
+    """(effective backend, n_shards). 'auto' picks shard_map when multiple
+    devices are visible; shard_map degrades to vmap when no device count > 1
+    divides z."""
+    if backend == "auto":
+        backend = "shard_map" if jax.device_count() > 1 else "vmap"
+    if backend == "vmap":
+        return "vmap", 0
+    if backend != "shard_map":
+        raise ValueError(
+            f"backend must be 'auto', 'vmap' or 'shard_map', got {backend!r}"
+        )
+    nd = min(jax.device_count(), z)
+    n_shards = max((d for d in range(1, nd + 1) if z % d == 0), default=1)
+    if n_shards <= 1:
+        return "vmap", 0
+    return "shard_map", n_shards
+
+
 def partition_stream(
     edges: np.ndarray,
     num_vertices: int,
@@ -461,10 +543,7 @@ def partition_stream(
         np.ones((k,), bool) if allowed is None else np.asarray(allowed, bool)
     )
     n_allowed = max(int(allowed_np.sum()), 1)
-    if cfg.cap_slack is not None:
-        cap_val = int(math.ceil(cfg.cap_slack * m / n_allowed)) + 1
-    else:
-        cap_val = int(_BIG_I32)
+    cap_val = _cap_value(cfg, m, n_allowed)
 
     steps_total = -(-m // b) + -(-cfg.window_max // b) + 2
     n_chunks = max(1, min(n_chunks, steps_total))
@@ -568,3 +647,221 @@ def partition_stream(
         modeled_cost_per_score=float(carry.cost_per_score),
     )
     return PartitionResult(assign, stats)
+
+
+def partition_stream_batched(
+    streams: np.ndarray,
+    valid: np.ndarray,
+    num_vertices: int,
+    cfg: AdwiseConfig,
+    *,
+    allowed: Optional[np.ndarray] = None,
+    backend: str = "auto",
+    n_chunks: int = 8,
+    cost_per_score: Optional[float] = None,
+    warm: Optional[Sequence[WarmState]] = None,
+) -> list[PartitionResult]:
+    """Run ``z`` independent ADWISE instance scans as ONE batched program.
+
+    This is the device-parallel spotlight entry point: where
+    :func:`partition_stream` traces one `lax.scan` per instance and a Python
+    loop runs them sequentially, this runs the *same* step function `vmap`-ped
+    over a leading instance axis — and, when multiple devices are visible,
+    `shard_map`-ped over an ``("instances",)`` mesh axis so each device
+    executes its slice of instances in parallel (the paper's z-machine
+    parallel-loading model on real hardware).
+
+    Args:
+      streams: (z, per, 2) int32 — per-instance padded edge chunks
+        (:meth:`repro.graph.stream.EdgeStream.split_padded` layout).
+      valid: (z, per) bool — per-row *prefix* mask; row i's real stream is
+        ``streams[i, :valid[i].sum()]``.
+      num_vertices: |V| (shared; instances keep independent vertex caches).
+      cfg: AdwiseConfig (shared by all instances).
+      allowed: optional (z, k) bool — per-instance spotlight spread masks.
+        Default: every instance may fill every partition.
+      backend: 'vmap' (single device), 'shard_map' (instances sharded over
+        devices; z must have a divisor <= device_count > 1, else falls back
+        to vmap), or 'auto' (shard_map iff multiple devices are visible).
+      n_chunks / cost_per_score: as in :func:`partition_stream`.
+      warm: optional length-z sequence of per-instance :class:`WarmState`
+        (re-streaming composed with spotlight). All instances must agree on
+        whether ``prev_assign`` is provided.
+
+    Returns:
+      A list of z :class:`PartitionResult`; entry i's ``assign`` covers
+      instance i's real (un-padded) stream in local order. With z == 1 and
+      identical inputs the assignment is bit-identical to
+      :func:`partition_stream` — the batched step function is the same
+      trace, vmapped.
+    """
+    streams = np.ascontiguousarray(streams, np.int32)
+    valid = np.asarray(valid, bool)
+    assert streams.ndim == 3 and streams.shape[2] == 2, streams.shape
+    z, per, _ = streams.shape
+    assert valid.shape == (z, per), (valid.shape, streams.shape)
+    # The refill logic consumes each instance stream sequentially from slot 0,
+    # so validity must be a prefix per row.
+    assert (valid[:, :-1] >= valid[:, 1:]).all() if per > 1 else True, (
+        "valid must be a per-row prefix mask (padding only at the tail)"
+    )
+    k = cfg.k
+    m_per = valid.sum(axis=1).astype(np.int64)  # (z,)
+    m_max = int(m_per.max()) if z else 0
+    if allowed is None:
+        allowed_np = np.ones((z, k), bool)
+    else:
+        allowed_np = np.asarray(allowed, bool)
+        assert allowed_np.shape == (z, k), (allowed_np.shape, (z, k))
+    if m_max == 0:
+        return [
+            PartitionResult(np.zeros((0,), np.int32), dict(k=k, unassigned=0))
+            for _ in range(z)
+        ]
+
+    b = cfg.assign_batch
+    r_sel = cfg.window_max
+    if cfg.lazy:
+        r_sel = min(cfg.window_max, max(b, cfg.lazy_budget or max(8, cfg.window_max // 8)))
+    caps = np.array(
+        [
+            _cap_value(cfg, int(m_per[i]), max(int(allowed_np[i].sum()), 1))
+            for i in range(z)
+        ],
+        np.int32,
+    )
+
+    # Scan-step provisioning mirrors partition_stream, sized by the largest
+    # instance so every instance gets enough steps (smaller ones idle).
+    steps_total = -(-m_max // b) + -(-cfg.window_max // b) + 2
+    n_chunks = max(1, min(n_chunks, steps_total))
+    chunk_steps = -(-steps_total // n_chunks)
+    n_chunks = -(-steps_total // chunk_steps)
+
+    budget = cfg.latency_budget if cfg.latency_budget is not None else 0.0
+    has_budget = cfg.latency_budget is not None
+    if warm is None:
+        base = _init_carry(cfg, num_vertices, budget)
+        carry = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (z,) + x.shape), base
+        )
+        prev_np = np.full((z, per), -1, np.int32)
+        update_deg = True
+    else:
+        assert len(warm) == z, f"need one WarmState per instance, got {len(warm)}"
+        has_prev = [w.prev_assign is not None for w in warm]
+        assert all(has_prev) or not any(has_prev), (
+            "all instances must agree on whether prev_assign is provided"
+        )
+        carries = [
+            Carry.warm_start(
+                cfg, num_vertices, budget,
+                replicas=w.replicas, deg=w.deg, sizes=w.sizes,
+            )
+            for w in warm
+        ]
+        carry = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
+        prev_np = np.full((z, per), -1, np.int32)
+        if all(has_prev):
+            for i, w in enumerate(warm):
+                pa = np.asarray(w.prev_assign, np.int32)
+                assert pa.shape == (int(m_per[i]),), (
+                    f"instance {i}: prev_assign must align with its stream"
+                )
+                prev_np[i, : len(pa)] = pa
+        update_deg = False
+    fixed_cost = cost_per_score is not None
+    if fixed_cost:
+        carry = carry._replace(
+            cost_per_score=jnp.full((z,), cost_per_score, jnp.float32)
+        )
+
+    backend_used, n_shards = _resolve_backend(backend, z)
+    streams_j = jnp.asarray(streams)
+    m_real_j = jnp.asarray(m_per.astype(np.int32))
+    allowed_j = jnp.asarray(allowed_np)
+    caps_j = jnp.asarray(caps)
+    prev_j = jnp.asarray(prev_np)
+
+    def run_chunk(carry):
+        return _run_chunk_batched(
+            carry,
+            streams_j,
+            m_real_j,
+            allowed_j,
+            caps_j,
+            prev_j,
+            cfg=cfg,
+            num_vertices=num_vertices,
+            r_sel=r_sel,
+            n_steps=chunk_steps,
+            has_budget=has_budget,
+            update_deg=update_deg,
+            n_shards=n_shards,
+        )
+
+    outs = []
+    t0 = time.perf_counter()
+    for _ in range(n_chunks):
+        carry, out = run_chunk(carry)
+        outs.append(jax.tree.map(np.asarray, out))
+        if has_budget and not fixed_cost:
+            # One program runs all instances: calibrate the shared per-row
+            # cost from the batched wall over the total row count.
+            jax.block_until_ready(carry.score_rows)
+            wall = time.perf_counter() - t0
+            rows = max(int(np.asarray(carry.score_rows).sum()), 1)
+            carry = carry._replace(
+                cost_per_score=jnp.full((z,), wall / (rows * k), jnp.float32),
+                budget_left=jnp.full(
+                    (z,), cfg.latency_budget - wall, jnp.float32
+                ),
+            )
+    # Bounded drain, as in partition_stream (see comment there): every step
+    # with a non-empty window assigns >= 1 edge per instance.
+    drain_left = -(-m_max // chunk_steps) + 2
+    while (np.asarray(carry.assigned) < m_per).any() and drain_left > 0:
+        carry, out = run_chunk(carry)
+        outs.append(jax.tree.map(np.asarray, out))
+        drain_left -= 1
+    wall = time.perf_counter() - t0
+
+    sidx = np.concatenate([o.sidx.reshape(z, -1) for o in outs], axis=1)
+    pout = np.concatenate([o.p.reshape(z, -1) for o in outs], axis=1)
+    w_trace = np.concatenate([o.w_cap.reshape(z, -1) for o in outs], axis=1)
+    assigned = np.asarray(carry.assigned)
+    results = []
+    for i in range(z):
+        m_i = int(m_per[i])
+        assign = np.full((m_i,), -1, np.int32)
+        live = sidx[i] >= 0
+        assign[sidx[i][live]] = pout[i][live]
+        unassigned = int((assign < 0).sum())
+        assert unassigned == 0 and int(assigned[i]) == m_i, (
+            f"batched instance {i} left {unassigned} of {m_i} edges "
+            f"unassigned (scan counter: {int(assigned[i])}) — drain failed"
+        )
+        stats = dict(
+            k=k,
+            name="adwise",
+            batched=True,
+            backend=backend_used,
+            n_shards=n_shards,
+            z=z,
+            instance=i,
+            # One program ran all z instances; the batched wall IS the
+            # parallel-model wall, shared by every instance.
+            wall_time_s=wall,
+            score_count=int(np.asarray(carry.score_rows)[i]) * k,
+            score_rows=int(np.asarray(carry.score_rows)[i]),
+            final_w=int(np.asarray(carry.w_cap)[i]),
+            w_trace=w_trace[i],
+            lam_final=float(np.asarray(carry.lam)[i]),
+            assigned=int(assigned[i]),
+            unassigned=unassigned,
+            warm=warm is not None,
+            r_sel=r_sel,
+            modeled_cost_per_score=float(np.asarray(carry.cost_per_score)[i]),
+        )
+        results.append(PartitionResult(assign, stats))
+    return results

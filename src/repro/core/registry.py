@@ -23,7 +23,10 @@ Multi-pass strategies (`repro/core/restream.py`):
 * ``adwise-restream`` — n-pass restreamed ADWISE. Knobs: every AdwiseConfig
   field, plus ``passes=`` (total passes, default 2), ``base=`` (registry
   strategy for pass 1, default 'adwise'), ``keep_best=`` (return the
-  lowest-replication pass, default True — quality monotone in passes).
+  lowest-replication pass, default True — quality monotone in passes) and
+  ``eps=`` (early-stop once a pass improves replication degree by < eps;
+  default None = always run ``passes``; stats report ``passes_run`` and
+  ``stream_reads`` for the latency model's per-read IO billing).
 * ``2ps`` — two-phase streaming (phase 1 vertex clustering, phase 2
   cluster-aware scoring). Knobs: AdwiseConfig fields for phase 2
   (``window_max`` defaults to 32 here), plus ``cluster_slack=`` (phase-1

@@ -33,18 +33,19 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
 from repro.core import registry
-from repro.core.adwise import WarmState, partition_stream
+from repro.core.adwise import WarmState, partition_stream, partition_stream_batched
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.graph import metrics
 
 __all__ = [
     "warm_from_assignment",
     "restream_partition",
+    "restream_partition_batched",
     "two_phase_partition",
     "streaming_vertex_clustering",
 ]
@@ -88,6 +89,7 @@ def restream_partition(
     passes: int = 2,
     base: str = "adwise",
     keep_best: bool = True,
+    eps: Optional[float] = None,
     seed: int = 0,
     n_chunks: int = 8,
     **adwise_cfg,
@@ -99,6 +101,12 @@ def restream_partition(
       base: registry strategy for pass 1. Non-adwise bases take no cfg here.
       keep_best: return the pass with the lowest replication degree (quality
         is then non-increasing in ``passes``); False returns the last pass.
+      eps: early-stop threshold on replication degree — stop re-streaming
+        when a pass improves RD over the previous pass by less than ``eps``
+        (None, the default, always runs the fixed ``passes`` count).
+        ``stats['passes_run']`` reports how many passes actually ran; this
+        ``eps`` is the restream knob, distinct from ``AdwiseConfig.eps``
+        (the Eq. 3/Θ score epsilon, which stays at its default here).
       adwise_cfg: AdwiseConfig fields for the ADWISE passes (pass 1 included
         when ``base == 'adwise'``), e.g. ``window_max=64``.
     """
@@ -135,7 +143,10 @@ def restream_partition(
         pass_score_rows.append(_score_rows(res.stats))
         if pass_rd[-1] <= best_rd:
             best_res, best_rd, best_pass = res, pass_rd[-1], len(pass_rd)
+        if eps is not None and (pass_rd[-2] - pass_rd[-1]) < eps:
+            break  # diminishing returns — stop investing passes
 
+    passes_run = len(pass_rd)
     final = best_res if keep_best else res
     score_rows = int(sum(pass_score_rows))
     stats = dict(
@@ -143,7 +154,12 @@ def restream_partition(
         name="adwise-restream",
         base=base,
         passes=passes,
-        best_pass=best_pass if keep_best else passes,
+        passes_run=passes_run,
+        # Each pass is one full read of the edge stream — the latency model
+        # bills IO per read (engine/latency_model.py::partition_latency).
+        stream_reads=passes_run,
+        eps=eps,
+        best_pass=best_pass if keep_best else passes_run,
         pass_rd=pass_rd,
         pass_imbalance=pass_imbalance,
         pass_wall_s=pass_wall,
@@ -156,6 +172,120 @@ def restream_partition(
         unassigned=metrics.unassigned_count(final.assign),
     )
     return PartitionResult(final.assign, stats)
+
+
+def restream_partition_batched(
+    streams: np.ndarray,
+    valid: np.ndarray,
+    num_vertices: int,
+    k: int,
+    *,
+    allowed: Optional[np.ndarray] = None,
+    passes: int = 2,
+    base: str = "adwise",
+    keep_best: bool = True,
+    eps: Optional[float] = None,
+    seed: int = 0,
+    n_chunks: int = 8,
+    backend: str = "auto",
+    **adwise_cfg,
+) -> List[PartitionResult]:
+    """n-pass re-streaming over ``z`` batched spotlight instances.
+
+    Composes the two invested-latency mechanisms (ROADMAP item c): every
+    pass runs ALL z instance scans as one vmapped/shard_mapped program
+    (:func:`repro.core.adwise.partition_stream_batched`), and between passes
+    each instance derives its own :class:`WarmState` from its own sub-stream
+    assignment — replica table, degree table, partition loads, and the
+    prior placements revoked as edges re-enter the window. Instances never
+    communicate (the paper's parallel loading model); ``keep_best`` picks
+    each instance's best pass independently, while ``eps`` early-stops
+    globally once NO instance improves its replication degree by >= eps
+    (passes are batched, so all instances run the same pass count).
+
+    Args mirror :func:`restream_partition` plus the batched stream layout of
+    :func:`partition_stream_batched` (``streams[z, per, 2]``,
+    ``valid[z, per]``, per-instance ``allowed[z, k]`` spread masks) — except
+    ``base``: only ``'adwise'`` batches (pass 1 is the same batched scan);
+    a non-adwise base pass needs the sequential per-instance path
+    (``spotlight_partition(..., backend='loop')`` routes there, and
+    spotlight's ``backend='auto'`` does so automatically).
+
+    Returns one PartitionResult per instance (local stream order).
+    """
+    if passes < 1:
+        raise ValueError(f"passes must be >= 1, got {passes}")
+    if base != "adwise":
+        raise ValueError(
+            f"restream_partition_batched only batches base='adwise' (got "
+            f"{base!r}): a non-adwise pass 1 runs per-instance baselines — "
+            "use spotlight_partition(..., backend='loop')"
+        )
+    cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
+    z = int(streams.shape[0])
+    valid = np.asarray(valid, bool)
+    m_per = valid.sum(axis=1).astype(np.int64)
+    edges_i = [streams[i, : m_per[i]] for i in range(z)]
+
+    t0 = time.perf_counter()
+    results = partition_stream_batched(
+        streams, valid, num_vertices, cfg,
+        allowed=allowed, backend=backend, n_chunks=n_chunks,
+    )
+    pass_rd = [[_rd(edges_i[i], results[i].assign, num_vertices, k)]
+               for i in range(z)]
+    pass_score_rows = [[int(results[i].stats.get("score_rows", 0))]
+                       for i in range(z)]
+    best = list(results)
+    best_rd = [pass_rd[i][0] for i in range(z)]
+    best_pass = [1] * z
+
+    for _ in range(1, passes):
+        warms = [
+            warm_from_assignment(edges_i[i], results[i].assign,
+                                 num_vertices, k)
+            for i in range(z)
+        ]
+        results = partition_stream_batched(
+            streams, valid, num_vertices, cfg,
+            allowed=allowed, backend=backend, n_chunks=n_chunks, warm=warms,
+        )
+        improved = 0.0
+        for i in range(z):
+            rd = _rd(edges_i[i], results[i].assign, num_vertices, k)
+            improved = max(improved, pass_rd[i][-1] - rd)
+            pass_rd[i].append(rd)
+            pass_score_rows[i].append(int(results[i].stats.get("score_rows", 0)))
+            if rd <= best_rd[i]:
+                best[i], best_rd[i], best_pass[i] = results[i], rd, len(pass_rd[i])
+        if eps is not None and improved < eps:
+            break
+
+    passes_run = len(pass_rd[0])
+    wall = time.perf_counter() - t0
+    finals = best if keep_best else results
+    out = []
+    for i in range(z):
+        rows = int(sum(pass_score_rows[i]))
+        stats = dict(
+            finals[i].stats,
+            name="adwise-restream",
+            passes=passes,
+            passes_run=passes_run,
+            stream_reads=passes_run,
+            eps=eps,
+            best_pass=best_pass[i] if keep_best else passes_run,
+            pass_rd=pass_rd[i],
+            pass_score_rows=pass_score_rows[i],
+            score_rows=rows,
+            score_count=rows * k,
+            # All passes ran as batched programs; the accumulated batched
+            # wall is shared by every instance (parallel model).
+            wall_time_s=wall,
+            unassigned=metrics.unassigned_count(finals[i].assign),
+        )
+        out.append(PartitionResult(finals[i].assign, stats))
+    return out
 
 
 # ----------------------------------------------------------------------------
@@ -284,6 +414,9 @@ def two_phase_partition(
         n_clusters=int(len(vols)),
         cluster_slack=cluster_slack,
         phase1_wall_s=t_phase1,
+        # Clustering pass + scoring pass — two full stream reads, billed by
+        # the latency model's IO term.
+        stream_reads=2,
         wall_time_s=time.perf_counter() - t0,
         unassigned=metrics.unassigned_count(res.assign),
     )
@@ -306,15 +439,16 @@ def _check_cfg(name: str, cfg: dict, extra: frozenset) -> None:
 @registry.register("adwise-restream")
 def _adwise_restream(
     edges, num_vertices, k, seed=0, *, passes=2, base="adwise",
-    keep_best=True, **cfg,
+    keep_best=True, eps=None, **cfg,
 ) -> PartitionResult:
     """n-pass restreamed ADWISE. cfg keys = AdwiseConfig fields plus
-    ``passes=`` / ``base=`` / ``keep_best=`` / ``n_chunks=``
+    ``passes=`` / ``base=`` / ``keep_best=`` / ``eps=`` (early-stop on RD
+    improvement; stats report ``passes_run``) / ``n_chunks=``
     (see restream_partition)."""
     _check_cfg("adwise-restream", cfg, frozenset({"n_chunks"}))
     return restream_partition(
         edges, num_vertices, k, passes=passes, base=base,
-        keep_best=keep_best, seed=seed, **cfg,
+        keep_best=keep_best, eps=eps, seed=seed, **cfg,
     )
 
 

@@ -7,19 +7,44 @@ the configuration the paper recommends; ``s = k`` degenerates to the usual
 full-spread parallel loading. Spotlight composes with *any* streaming
 partitioner ("can be applied on top of any existing algorithm").
 
-Each instance consumes a disjoint contiguous chunk of the stream and keeps
-its **own** vertex cache (the paper's parallel loading model — no
-communication during partitioning).
+Instance-axis layout (the batched backend)
+------------------------------------------
+The paper's cluster runs the z instances on z machines; this module runs
+them as ONE batched program. The stream is reshaped by
+``EdgeStream.split_padded(z)`` into ``streams[z, per, 2]`` with a per-row
+prefix mask ``valid[z, per]`` — instance ``i`` owns the contiguous global
+slice ``[i*per, i*per + valid[i].sum())``. Every per-instance quantity the
+ADWISE scan carries (vertex cache, window buffer, partition loads, λ,
+controller state) gains a leading ``z`` axis, and
+:func:`repro.core.adwise.partition_stream_batched` runs the z scans as one
+``vmap`` over that instance axis — wrapped in ``shard_map`` over an
+``("instances",)`` mesh axis when multiple devices are visible, so instances
+land on separate devices exactly as they land on separate machines in the
+paper. Instances share nothing: each keeps its own vertex cache (the
+parallel loading model — no communication during partitioning).
+
+Backends:
+
+* ``"batched"`` (default for 'adwise' / 'adwise-restream'): one vmapped /
+  shard_mapped program; ``wall_time_s`` is the measured wall of that program,
+  which IS the parallel-model wall. ``"vmap"`` / ``"shard_map"`` force the
+  inner execution mode.
+* ``"loop"``: the sequential per-instance escape hatch — one scan per
+  instance in a Python loop. Required for the masked baseline strategies
+  (hdrf/dbh/greedy/hash run on the local partition subset and are remapped);
+  ``wall_time_s`` then reports the parallel model ``max(instance walls)``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core import registry
-from repro.core.adwise import partition_stream
+from repro.core.adwise import partition_stream, partition_stream_batched
+from repro.core.restream import restream_partition_batched
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.graph.stream import EdgeStream
 
@@ -40,6 +65,12 @@ def spread_mask(k: int, z: int, instance: int, spread: int) -> np.ndarray:
 # spread mask induces: grid's floor(sqrt(k)) collapses to 1 for k < 4, making
 # every instance dump its whole chunk on one partition.
 _SPOTLIGHT_INCOMPATIBLE = {"grid"}
+
+# Strategies the batched (vmapped/shard_mapped) backend supports natively.
+_BATCHED_STRATEGIES = {"adwise", "adwise-restream"}
+
+# spotlight backend -> inner partition_stream_batched backend.
+_BATCHED_INNER = {"batched": "auto", "vmap": "vmap", "shard_map": "shard_map"}
 
 
 def _masked_strategy(strategy, edges, num_vertices, allowed, seed, strategy_cfg=None):
@@ -62,6 +93,54 @@ def _masked_strategy(strategy, edges, num_vertices, allowed, seed, strategy_cfg=
     return PartitionResult(local_to_global[res.assign], res.stats)
 
 
+def _spotlight_batched(
+    edges, num_vertices, k, z, spread, strategy, cfg, seed, strategy_cfg,
+    inner_backend,
+):
+    """One batched program for all z instances (adwise / adwise-restream)."""
+    stream = EdgeStream(edges, num_vertices)
+    streams, valid = stream.split_padded(z)
+    per = streams.shape[1]
+    m = stream.num_edges
+    allowed = np.stack([spread_mask(k, z, i, spread) for i in range(z)])
+    t0 = time.perf_counter()
+    if strategy == "adwise":
+        c = cfg or AdwiseConfig(k=k)
+        if c.k != k:
+            c = dataclasses.replace(c, k=k)
+        results = partition_stream_batched(
+            streams, valid, num_vertices, c,
+            allowed=allowed, backend=inner_backend,
+        )
+    else:  # adwise-restream: per-instance WarmState batches between passes
+        results = restream_partition_batched(
+            streams, valid, num_vertices, k,
+            allowed=allowed, seed=seed, backend=inner_backend,
+            **(strategy_cfg or {}),
+        )
+    serial_wall = time.perf_counter() - t0
+    assign = np.full((m,), -1, np.int32)
+    for i, r in enumerate(results):
+        assign[i * per : i * per + len(r.assign)] = r.assign
+    s0 = results[0].stats if results else {}
+    stats = dict(
+        k=k,
+        z=z,
+        spread=spread,
+        name=f"spotlight-{strategy}",
+        backend=s0.get("backend", "vmap"),
+        n_shards=s0.get("n_shards", 0),
+        # One program ran every instance: its wall IS the parallel wall.
+        wall_time_s=s0.get("wall_time_s", serial_wall),
+        wall_time_serial_s=serial_wall,
+        score_count=sum(r.stats.get("score_count", 0) for r in results),
+        stream_reads=s0.get("stream_reads", 1),
+    )
+    if strategy == "adwise-restream":
+        stats["passes_run"] = s0.get("passes_run", 1)
+    return PartitionResult(assign, stats)
+
+
 def spotlight_partition(
     edges: np.ndarray,
     num_vertices: int,
@@ -73,30 +152,64 @@ def spotlight_partition(
     seed: int = 0,
     partitioner: Optional[Callable] = None,
     strategy_cfg: Optional[dict] = None,
+    backend: str = "auto",
 ) -> PartitionResult:
     """Run ``z`` parallel partitioner instances with a limited spread.
 
     Args:
-      strategy: any name in ``registry.available_strategies()`` ('adwise'
-        gets its native allowed-mask path; baselines run on the local subset
-        and are remapped), or pass ``partitioner``:
+      strategy: any name in ``registry.available_strategies()`` ('adwise' and
+        'adwise-restream' get the native batched allowed-mask path; baselines
+        run on the local subset under the loop backend and are remapped), or
+        pass ``partitioner``:
         callable (edges, num_vertices, k, allowed, seed) -> PartitionResult
         with *global* partition ids.
       cfg: AdwiseConfig for strategy='adwise' (k is overridden).
-      strategy_cfg: keyword cfg forwarded to every non-'adwise' registry
-        strategy instance (e.g. ``dict(passes=3, window_max=64)`` for
-        'adwise-restream'); note the instance-local k is the spread size.
+      strategy_cfg: keyword cfg forwarded to every non-'adwise' strategy
+        instance (e.g. ``dict(passes=3, window_max=64)`` for
+        'adwise-restream'). Under the loop backend the instance-local k is
+        the spread size; under the batched backend instances run at global k
+        restricted by their spread mask.
       spread: partitions per instance; k/z = disjoint spotlight blocks.
-
-    Note: instances run sequentially here (single host); wall_time_s reports
-    the *parallel* model max(instance walls), matching the paper's cluster
-    setup where instances run on separate machines.
+      backend: 'auto' (batched for adwise/adwise-restream, loop otherwise),
+        'batched' / 'vmap' / 'shard_map' (one program for all instances —
+        see the module docstring), or 'loop' (sequential per-instance
+        fallback; wall_time_s reports the parallel model max(instance
+        walls), matching the paper's cluster where instances run on
+        separate machines).
     """
+    batchable = partitioner is None and strategy in _BATCHED_STRATEGIES
+    if strategy == "adwise-restream" and (strategy_cfg or {}).get(
+        "base", "adwise"
+    ) != "adwise":
+        # A non-adwise base pass runs per-instance registry baselines, which
+        # only the sequential path supports.
+        batchable = False
+    if backend == "auto":
+        backend = "batched" if batchable else "loop"
+    if backend in _BATCHED_INNER:
+        if not batchable:
+            raise ValueError(
+                f"backend {backend!r} requires strategy in "
+                f"{sorted(_BATCHED_STRATEGIES)} with an adwise base pass "
+                f"(got {strategy!r}"
+                f"{' with custom partitioner' if partitioner else ''}); "
+                "use backend='loop'"
+            )
+        return _spotlight_batched(
+            edges, num_vertices, k, z, spread, strategy, cfg, seed,
+            strategy_cfg, _BATCHED_INNER[backend],
+        )
+    if backend != "loop":
+        raise ValueError(
+            "backend must be 'auto', 'batched', 'vmap', 'shard_map' or "
+            f"'loop', got {backend!r}"
+        )
+
     stream = EdgeStream(edges, num_vertices)
     subs = stream.split(z)
     m = stream.num_edges
     assign = np.full((m,), -1, np.int32)
-    offsets = np.linspace(0, m, z + 1).astype(np.int64)
+    offsets = EdgeStream.split_bounds(m, z)
     walls, score_counts = [], 0
     t0 = time.perf_counter()
     for i, sub in enumerate(subs):
@@ -106,8 +219,6 @@ def spotlight_partition(
         elif strategy == "adwise":
             c = cfg or AdwiseConfig(k=k)
             if c.k != k:
-                import dataclasses
-
                 c = dataclasses.replace(c, k=k)
             # Per-instance latency budget: the budget is wall-clock and the
             # instances run in parallel on the cluster, so each gets L.
@@ -123,6 +234,7 @@ def spotlight_partition(
         z=z,
         spread=spread,
         name=f"spotlight-{strategy}",
+        backend="loop",
         wall_time_s=max(walls) if walls else 0.0,
         wall_time_serial_s=time.perf_counter() - t0,
         score_count=score_counts,

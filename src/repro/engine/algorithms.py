@@ -12,8 +12,9 @@ Each returns (result, info) where info carries superstep counts the latency
 model converts into cluster processing latency.
 
 When no mesh is passed, each workload builds one via `engine_mesh(k=g.k)`
-(see `repro.compat` for the version-portable mesh/shard_map plumbing), which
-trims the device count so the partition axis always shards evenly.
+(see `repro.compat` for the version-portable mesh/shard_map plumbing); the
+partition axis is padded inside `make_superstep` so any device count shards
+evenly (empty slabs are masked out of the gather and the replica sync).
 """
 from __future__ import annotations
 

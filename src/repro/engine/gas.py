@@ -42,17 +42,17 @@ def engine_mesh(n_devices: int | None = None, k: int | None = None) -> Mesh:
 
     Args:
       n_devices: cap on the device count (default: all local devices).
-      k: number of graph partitions about to be sharded over the mesh. The
-        `parts` axis length must divide k, so when given, the mesh is trimmed
-        to the largest device count that does — e.g. k=6 on 4 devices yields
-        a 3-device mesh, and k < n_devices yields a k-device mesh.
+      k: number of graph partitions about to be sharded over the mesh. Any
+        device count works — `make_superstep` pads the partition axis up to
+        a multiple of the mesh size with empty slabs (no edges, no replicas)
+        that are masked out of the gather/sync — so the mesh keeps ALL
+        devices instead of trimming to a divisor of k. Only when k is
+        *smaller* than the device count is the mesh capped at k devices
+        (extra devices would carry nothing but padding).
     """
     devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
-    n = len(devs)
     if k is not None:
-        while n > 1 and k % n != 0:
-            n -= 1
-        devs = devs[:n]
+        devs = devs[: max(min(len(devs), int(k)), 1)]
     return compat.make_mesh((len(devs),), ("parts",), devices=np.array(devs))
 
 
@@ -105,9 +105,29 @@ def make_superstep(
     regime). Accumulators are masked to each partition's replica set before
     the cross-partition combine — the masked entries are the engine's real
     traffic.
+
+    When the mesh size does not divide k, the partition axis is padded up to
+    the next multiple with empty slabs: no valid edges (`evalid` False ⇒
+    zero / identity contributions in `gather_local`) and no replicas (the
+    replica mask zeroes the slab out of the cross-partition combine). This
+    is what lets `engine_mesh` keep every device for any k.
     """
     v, k = g.num_vertices, g.k
+    n_shards = int(mesh.devices.size)
+    k_pad = -(-k // n_shards) * n_shards
+    edges_d, evalid_d = g.edges, g.evalid
     repl_t = jnp.asarray(np.asarray(g.replicas).T)  # (k, V)
+    if k_pad != k:
+        pad = k_pad - k
+        edges_d = jnp.concatenate(
+            [edges_d, jnp.zeros((pad,) + edges_d.shape[1:], edges_d.dtype)]
+        )
+        evalid_d = jnp.concatenate(
+            [evalid_d, jnp.zeros((pad,) + evalid_d.shape[1:], bool)]
+        )
+        repl_t = jnp.concatenate(
+            [repl_t, jnp.zeros((pad, repl_t.shape[1]), repl_t.dtype)]
+        )
 
     def step(state, edges, evalid, replicas_t, degrees):
         acc = gather_local(edges, evalid, state, degrees, msg_fn, v, agg=combine)
@@ -131,6 +151,6 @@ def make_superstep(
 
     @jax.jit
     def superstep(state):
-        return shard_step(state, g.edges, g.evalid, repl_t, g.degrees)
+        return shard_step(state, edges_d, evalid_d, repl_t, g.degrees)
 
     return superstep

@@ -62,6 +62,19 @@ def build_partitioned_graph(
     assign = np.asarray(assign, np.int32)
     m = len(edges)
     assert assign.shape == (m,)
+    # The fancy-indexing below (argsort buckets, replica sets) would silently
+    # wrap -1 entries into partition k-1 — the same hazard graph/metrics.py
+    # hard-fails on. An engine build needs a total assignment.
+    bad = (assign < 0) | (assign >= k)
+    if bad.any():
+        idx = int(np.flatnonzero(bad)[0])
+        raise ValueError(
+            f"build_partitioned_graph: {int(bad.sum())} of {m} edges have "
+            f"partition ids outside [0, {k}) (first: assign[{idx}] = "
+            f"{int(assign[idx])}). Unassigned (-1) edges cannot be built "
+            "into an engine graph — partition the full stream, or drop "
+            "unassigned edges before building."
+        )
     sizes = np.bincount(assign, minlength=k)
     e_max = max(int(sizes.max()), 1)
     e_max = -(-e_max // pad_multiple) * pad_multiple

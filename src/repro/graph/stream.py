@@ -45,12 +45,24 @@ class EdgeStream:
             yield self.edges[start : start + chunk_size]
 
     def split(self, z: int) -> Sequence["EdgeStream"]:
-        """Split into z contiguous disjoint sub-streams (parallel loading model)."""
-        bounds = np.linspace(0, self.num_edges, z + 1).astype(np.int64)
+        """Split into z contiguous disjoint sub-streams (parallel loading model).
+
+        Instance boundaries are the ceil(m/z)-row chunks of
+        :meth:`split_padded`, so the sequential (loop) and batched spotlight
+        backends govern identical edge ranges per instance for any z and m
+        (trailing instances may be shorter or empty when z does not divide m).
+        """
+        bounds = self.split_bounds(self.num_edges, z)
         return [
             EdgeStream(self.edges[bounds[i] : bounds[i + 1]], self.num_vertices)
             for i in range(z)
         ]
+
+    @staticmethod
+    def split_bounds(m: int, z: int) -> np.ndarray:
+        """(z+1,) int64 instance boundaries shared by split / split_padded."""
+        per = -(-m // z) if m else 0
+        return np.minimum(np.arange(z + 1, dtype=np.int64) * per, m)
 
     def split_padded(self, z: int) -> tuple[np.ndarray, np.ndarray]:
         """Split into z equal, padded chunks.

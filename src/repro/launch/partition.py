@@ -1,7 +1,7 @@
 """Graph partition→process launcher — the paper's pipeline as a job type.
 
     PYTHONPATH=src python -m repro.launch.partition --graph brain_like --scale 0.1 \
-        --strategy adwise --k 32 --parallel 8 --spread 4 --budget 2.0 \
+        --strategy adwise --k 32 --z 8 --spread 4 --budget 2.0 \
         --workload pagerank --iters 100
 
 Runs: stream partitioning (any strategy in the `repro.core.registry` —
@@ -10,7 +10,11 @@ optionally under spotlight parallel loading) → vertex-cut engine build →
 workload → total latency report (measured partitioning wall-clock + modeled
 cluster processing latency, cf. DESIGN.md §3). New partitioners registered
 in `repro/core/registry.py` show up in `--strategy` automatically;
-`--passes` sets the re-streaming pass count for adwise-restream.
+`--passes` / `--eps` set the re-streaming pass count / early-stop for
+adwise-restream. With `--z N` (alias `--parallel`) the z spotlight instances
+run as ONE batched (vmapped / multi-device shard_mapped) program for
+adwise-family strategies — `--backend loop` forces the sequential
+per-instance path (the only mode for the masked baselines).
 """
 from __future__ import annotations
 
@@ -65,10 +69,12 @@ def run_partition(edges, n, args):
             strategy_cfg = adwise_cfg_kwargs(args)
             if args.strategy == "adwise-restream":
                 strategy_cfg["passes"] = args.passes
+                if args.eps is not None:
+                    strategy_cfg["eps"] = args.eps
         return spotlight_partition(
             edges, n, args.k, z=args.parallel, spread=args.spread,
             strategy=args.strategy, cfg=cfg, seed=args.seed,
-            strategy_cfg=strategy_cfg,
+            strategy_cfg=strategy_cfg, backend=args.backend,
         )
     cfg = {}
     if args.strategy in _ADWISE_LIKE:
@@ -77,6 +83,8 @@ def run_partition(edges, n, args):
         cfg["oracle"] = args.oracle
     elif args.strategy == "adwise-restream":
         cfg["passes"] = args.passes
+        if args.eps is not None:
+            cfg["eps"] = args.eps
     return run_partitioner(args.strategy, edges, n, args.k, seed=args.seed, **cfg)
 
 
@@ -87,12 +95,21 @@ def main(argv=None):
     ap.add_argument("--strategy", default="adwise",
                     choices=available_strategies())
     ap.add_argument("--k", type=int, default=32)
-    ap.add_argument("--parallel", type=int, default=1, help="z partitioner instances")
+    ap.add_argument("--parallel", "--z", type=int, default=1, dest="parallel",
+                    help="z partitioner instances (spotlight parallel loading)")
     ap.add_argument("--spread", type=int, default=4)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "batched", "vmap", "shard_map", "loop"],
+                    help="spotlight execution: one batched program for all z "
+                         "instances (auto for adwise/adwise-restream) or the "
+                         "sequential per-instance loop")
     ap.add_argument("--budget", type=float, default=None, help="latency preference L (s)")
     ap.add_argument("--window-max", type=int, default=256)
     ap.add_argument("--passes", type=int, default=2,
                     help="re-streaming passes (adwise-restream)")
+    ap.add_argument("--eps", type=float, default=None,
+                    help="early-stop re-streaming when a pass improves RD by "
+                         "less than this (adwise-restream)")
     ap.add_argument("--no-cs", action="store_true", help="disable clustering score")
     ap.add_argument("--oracle", action="store_true", help="sequential reference impl")
     ap.add_argument("--workload", default="pagerank",

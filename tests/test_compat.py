@@ -76,10 +76,15 @@ def test_engine_mesh_single_device():
 
 
 def test_engine_mesh_k_exceeding_devices():
-    """k partitions > devices must still yield a mesh whose size divides k."""
+    """engine_mesh keeps every device for any k (make_superstep pads the
+    parts axis); it only caps the mesh at k when devices outnumber parts."""
+    import jax as _jax
+
+    n_dev = _jax.device_count()
     for k in (3, 7, 8, 16):
         mesh = engine_mesh(k=k)
-        assert k % mesh.devices.size == 0
+        assert mesh.devices.size == min(n_dev, k)
+    assert engine_mesh(k=1).devices.size == 1
 
 
 @pytest.mark.slow
@@ -92,14 +97,16 @@ def test_engine_multi_device_cpu_mesh():
         from repro.engine.gas import engine_mesh
         from repro.engine import build_partitioned_graph, pagerank
         from repro.core import run_partitioner
-        # k=9 on 6 devices -> largest divisor 3; k=6 -> all 6 devices.
-        assert engine_mesh(k=9).devices.size == 3
+        # All devices stay in the mesh; non-divisible k pads inside
+        # make_superstep (k=9 on 6 devices -> parts axis pads 9 -> 12).
+        assert engine_mesh(k=9).devices.size == 6
         assert engine_mesh(k=6).devices.size == 6
+        assert engine_mesh(k=4).devices.size == 4  # capped at k
         rng = np.random.default_rng(0)
         u, v = rng.integers(0, 40, 300), rng.integers(0, 40, 300)
         keep = u != v
         edges = np.stack([u[keep], v[keep]], 1).astype(np.int32)
-        n, k = 40, 6
+        n, k = 40, 9
         res = run_partitioner("hdrf", edges, n, k)
         g = build_partitioned_graph(edges, res.assign, n, k)
         pr, _ = pagerank(g, iters=5)

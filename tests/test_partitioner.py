@@ -189,7 +189,8 @@ def test_spotlight_respects_spread(tiny_graph):
     k, z, spread = 16, 4, 4
     res = spotlight_partition(edges, n, k, z=z, spread=spread, strategy="hdrf")
     m = len(edges)
-    bounds = np.linspace(0, m, z + 1).astype(int)
+    from repro.graph.stream import EdgeStream
+    bounds = EdgeStream.split_bounds(m, z)
     for i in range(z):
         allowed = np.flatnonzero(spread_mask(k, z, i, spread))
         got = np.unique(res.assign[bounds[i]:bounds[i + 1]])

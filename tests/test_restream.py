@@ -271,7 +271,8 @@ def test_spotlight_forwards_restream_cfg(tiny_graph):
     )
     assert (res.assign >= 0).all() and (res.assign < k).all()
     # Each instance stayed inside its spread block.
-    bounds = np.linspace(0, len(edges), z + 1).astype(int)
+    from repro.graph.stream import EdgeStream
+    bounds = EdgeStream.split_bounds(len(edges), z)
     for i in range(z):
         allowed = set(np.flatnonzero(spread_mask(k, z, i, spread)))
         assert set(np.unique(res.assign[bounds[i]:bounds[i + 1]])) <= allowed

@@ -23,3 +23,8 @@ else
 fi
 
 python -m benchmarks.run --smoke
+
+# Multi-device path: batched spotlight (shard_map over instances) + padded
+# engine mesh on 2 fake CPU devices, every run.
+XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+  python -m benchmarks.bench_scaling --smoke --in-process
