@@ -27,6 +27,7 @@ def main(argv=None):
     t0 = time.time()
 
     from benchmarks import (
+        bench_io,
         bench_kernels,
         bench_moe_balance,
         bench_replication,
@@ -53,6 +54,8 @@ def main(argv=None):
         bench_spotlight.main(["--scale", "0.01", *k, "--z", "4"])
         print("\n=== multi-device scaling (smoke: N in {1,2}) ===")
         bench_scaling.main(["--smoke"])
+        print("\n=== out-of-core I/O: ingest + file-driven partitioning (smoke) ===")
+        bench_io.main(["--smoke"])
         print("\n=== §III ablations (smoke) ===")
         bench_window.main(["--scale", "0.004", *k])
         print("\n=== ADWISE-balance MoE routing (smoke) ===")
@@ -74,6 +77,8 @@ def main(argv=None):
     bench_spotlight.main(["--scale", str(scale * 1.5)])
     print("\n=== multi-device scaling: batched spotlight + engine vs N ===")
     bench_scaling.main(["--scale", str(scale / 2), "--devices", "1,2,4,8"])
+    print("\n=== out-of-core I/O: ingest MB/s + file vs in-memory wall ===")
+    bench_io.main(["--scale", str(scale)])
     print("\n=== §III ablations: window / lazy / clustering / lambda ===")
     bench_window.main(["--scale", str(scale / 2)])
     print("\n=== beyond-paper: ADWISE-balance MoE routing ===")

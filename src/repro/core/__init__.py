@@ -15,6 +15,10 @@ Public API:
   restream_partition, two_phase_partition — multi-pass re-streaming layer
                                             (restream.py: 'adwise-restream'
                                             and '2ps' registry entries)
+  partition_file                          — out-of-core driver (oocore.py):
+                                            any registry strategy over a
+                                            repro.graph.io file reader with
+                                            bounded resident edge memory
 """
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.core.adwise import WarmState, partition_stream, partition_stream_batched
@@ -39,6 +43,7 @@ from repro.core.restream import (
     warm_from_assignment,
 )
 from repro.core.spotlight import spotlight_partition, spread_mask
+from repro.core.oocore import partition_file
 
 __all__ = [
     "AdwiseConfig",
@@ -58,6 +63,7 @@ __all__ = [
     "grid_partition",
     "spotlight_partition",
     "spread_mask",
+    "partition_file",
     "available_strategies",
     "get_partitioner",
     "register",

@@ -171,13 +171,16 @@ def _make_step(
     cfg: AdwiseConfig,
     num_vertices: int,
     r_sel: int,
-    stream: jax.Array,  # (m_pad, 2) int32
+    stream: jax.Array,  # (m_pad, 2) int32 — full stream OR a rolling buffer
     m_real: jax.Array,  # () int32
     allowed: jax.Array,  # (K,) bool
     cap: jax.Array,  # () int32 (BIG when disabled)
     has_budget: bool,
     prev_assign: jax.Array,  # (m_pad,) int32 — prior-pass partition, -1 = none
     update_deg: bool,  # False on warm-started passes (degrees already final)
+    base: jax.Array,  # () int32 — stream index of stream[0] (out-of-core
+    #   chunk-carry path: `stream`/`prev_assign` hold rows [base, base+m_pad)
+    #   of the logical stream; the in-memory paths pass 0)
 ):
     w_max, k, b = cfg.window_max, cfg.k, cfg.assign_batch
     v_dummy = num_vertices  # scatter dump row
@@ -193,7 +196,7 @@ def _make_step(
         rank = jnp.cumsum(inv.astype(jnp.int32)) - 1
         fill = inv & (rank < take)
         src = carry.cursor + rank
-        src_c = jnp.clip(src, 0, m_pad - 1)
+        src_c = jnp.clip(src - base, 0, m_pad - 1)
         fill_uv = stream[src_c]
         win_uv = jnp.where(fill[:, None], fill_uv, carry.win_uv)
         win_sidx = jnp.where(fill, src, carry.win_sidx)
@@ -407,6 +410,7 @@ def _run_chunk(
     allowed: jax.Array,
     cap: jax.Array,
     prev_assign: jax.Array,
+    base: jax.Array,
     *,
     cfg: AdwiseConfig,
     num_vertices: int,
@@ -417,7 +421,7 @@ def _run_chunk(
 ) -> tuple[Carry, StepOut]:
     step = _make_step(
         cfg, num_vertices, r_sel, stream, m_real, allowed, cap, has_budget,
-        prev_assign, update_deg,
+        prev_assign, update_deg, base,
     )
     return jax.lax.scan(step, carry, None, length=n_steps)
 
@@ -436,6 +440,7 @@ def _run_chunk_batched(
     allowed: jax.Array,  # (z, K) bool
     cap: jax.Array,  # (z,) int32
     prev_assign: jax.Array,  # (z, per) int32
+    base: jax.Array,  # (z,) int32 — per-instance buffer offsets (0 in-memory)
     *,
     cfg: AdwiseConfig,
     num_vertices: int,
@@ -454,10 +459,10 @@ def _run_chunk_batched(
     (z must be divisible by n_shards — each device runs z/n_shards instances).
     """
 
-    def one(carry, stream, m_real, allowed, cap, prev):
+    def one(carry, stream, m_real, allowed, cap, prev, base):
         step = _make_step(
             cfg, num_vertices, r_sel, stream, m_real, allowed, cap,
-            has_budget, prev, update_deg,
+            has_budget, prev, update_deg, base,
         )
         return jax.lax.scan(step, carry, None, length=n_steps)
 
@@ -470,11 +475,11 @@ def _run_chunk_batched(
         batched = compat.shard_map(
             batched,
             mesh=mesh,
-            in_specs=(P("instances"),) * 6,
+            in_specs=(P("instances"),) * 7,
             out_specs=P("instances"),
             check_replication=False,
         )
-    return batched(carry, streams, m_real, allowed, cap, prev_assign)
+    return batched(carry, streams, m_real, allowed, cap, prev_assign, base)
 
 
 def _cap_value(cfg: AdwiseConfig, m: int, n_allowed: int) -> int:
@@ -585,6 +590,7 @@ def partition_stream(
             allowed_j,
             cap_j,
             prev_j,
+            jnp.int32(0),
             cfg=cfg,
             num_vertices=num_vertices,
             r_sel=r_sel,
@@ -791,6 +797,7 @@ def partition_stream_batched(
             allowed_j,
             caps_j,
             prev_j,
+            jnp.zeros((z,), jnp.int32),
             cfg=cfg,
             num_vertices=num_vertices,
             r_sel=r_sel,

@@ -9,6 +9,15 @@
 HDRF and Greedy are sequential by nature (they read the evolving vertex
 cache); they are implemented as tight numpy loops. DBH / Hashing / Grid are
 stateless given degrees and fully vectorized.
+
+Every partitioner is factored into a *chunk-resumable core* — a state object
+(vertex cache, partition loads, RNG) plus an ``assign_chunk`` step — so the
+out-of-core driver (`repro.core.oocore.partition_file`) can stream a
+file-resident graph through the identical math in bounded-size chunks: the
+whole-array entry points below are exactly "init state, one chunk". HDRF's
+tie-break noise draws from the state's generator as the stream is consumed
+(numpy Generators fill sequentially, so any chunking of the stream sees the
+same noise sequence as the one-shot draw did).
 """
 from __future__ import annotations
 
@@ -19,7 +28,18 @@ import numpy as np
 
 from repro.core.types import PartitionResult
 
-__all__ = ["hdrf_partition", "dbh_partition", "greedy_partition", "hash_partition", "grid_partition"]
+__all__ = [
+    "hdrf_partition",
+    "dbh_partition",
+    "greedy_partition",
+    "hash_partition",
+    "grid_partition",
+    "HdrfState",
+    "GreedyState",
+    "hash_assign",
+    "grid_assign",
+    "dbh_assign",
+]
 
 
 def _hash_vec(x: np.ndarray, k: int, salt: int = 0x9E3779B9) -> np.ndarray:
@@ -31,11 +51,38 @@ def _hash_vec(x: np.ndarray, k: int, salt: int = 0x9E3779B9) -> np.ndarray:
     return (h % np.uint64(k)).astype(np.int32)
 
 
+# ----------------------------------------------------------------------------
+# Stateless cores (vectorized; chunking is trivially exact)
+# ----------------------------------------------------------------------------
+
+
+def hash_assign(edges: np.ndarray, num_vertices: int, k: int, seed: int = 0) -> np.ndarray:
+    key = edges[:, 0].astype(np.uint64) * np.uint64(num_vertices) + edges[:, 1].astype(np.uint64)
+    return _hash_vec(key, k, salt=seed + 1)
+
+
+def grid_assign(edges: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
+    g = max(int(np.floor(np.sqrt(k))), 1)
+    ru = _hash_vec(edges[:, 0].astype(np.uint64), g, salt=seed + 11)
+    cv = _hash_vec(edges[:, 1].astype(np.uint64), g, salt=seed + 13)
+    return (ru * g + cv).astype(np.int32) % k
+
+
+def dbh_assign(edges: np.ndarray, degrees: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
+    """DBH placement given the *full-stream* degree table."""
+    u, v = edges[:, 0], edges[:, 1]
+    pick_u = degrees[u] < degrees[v]
+    # Tie: lower id (deterministic).
+    tie = degrees[u] == degrees[v]
+    pick_u = np.where(tie, u < v, pick_u)
+    key = np.where(pick_u, u, v).astype(np.uint64)
+    return _hash_vec(key, k, salt=seed + 29)
+
+
 def hash_partition(edges: np.ndarray, num_vertices: int, k: int, seed: int = 0) -> PartitionResult:
     """Random edge hashing (the PowerGraph default loader)."""
     t0 = time.perf_counter()
-    key = edges[:, 0].astype(np.uint64) * np.uint64(num_vertices) + edges[:, 1].astype(np.uint64)
-    assign = _hash_vec(key, k, salt=seed + 1)
+    assign = hash_assign(edges, num_vertices, k, seed=seed)
     return PartitionResult(assign, dict(k=k, wall_time_s=time.perf_counter() - t0, name="hash"))
 
 
@@ -45,11 +92,7 @@ def grid_partition(edges: np.ndarray, num_vertices: int, k: int, seed: int = 0) 
     Constrains each vertex's replicas to a sqrt(k)-sized subset.
     """
     t0 = time.perf_counter()
-    g = int(np.floor(np.sqrt(k)))
-    g = max(g, 1)
-    ru = _hash_vec(edges[:, 0].astype(np.uint64), g, salt=seed + 11)
-    cv = _hash_vec(edges[:, 1].astype(np.uint64), g, salt=seed + 13)
-    assign = (ru * g + cv).astype(np.int32) % k
+    assign = grid_assign(edges, k, seed=seed)
     return PartitionResult(assign, dict(k=k, wall_time_s=time.perf_counter() - t0, name="grid"))
 
 
@@ -66,14 +109,94 @@ def dbh_partition(
         degrees = np.zeros(num_vertices, dtype=np.int64)
         np.add.at(degrees, edges[:, 0], 1)
         np.add.at(degrees, edges[:, 1], 1)
-    u, v = edges[:, 0], edges[:, 1]
-    pick_u = degrees[u] < degrees[v]
-    # Tie: lower id (deterministic).
-    tie = degrees[u] == degrees[v]
-    pick_u = np.where(tie, u < v, pick_u)
-    key = np.where(pick_u, u, v).astype(np.uint64)
-    assign = _hash_vec(key, k, salt=seed + 29)
+    assign = dbh_assign(edges, degrees, k, seed=seed)
     return PartitionResult(assign, dict(k=k, wall_time_s=time.perf_counter() - t0, name="dbh"))
+
+
+# ----------------------------------------------------------------------------
+# Sequential cores (stateful; chunk-resumable)
+# ----------------------------------------------------------------------------
+
+
+class HdrfState:
+    """HDRF vertex cache + loads + tie-break RNG, resumable across chunks."""
+
+    def __init__(self, num_vertices: int, k: int, lam: float = 1.1,
+                 eps: float = 1.0, seed: int = 0):
+        self.k = k
+        self.lam = lam
+        self.eps = eps
+        self.deg = np.zeros(num_vertices, dtype=np.int64)
+        self.replicas = np.zeros((num_vertices, k), dtype=bool)
+        self.sizes = np.zeros(k, dtype=np.int64)
+        self.rng = np.random.default_rng(seed)
+        self.edges_seen = 0
+
+    def assign_chunk(self, edges: np.ndarray) -> np.ndarray:
+        """Place a chunk of the stream; state advances in stream order."""
+        k, lam, eps = self.k, self.lam, self.eps
+        deg, replicas, sizes = self.deg, self.replicas, self.sizes
+        c = len(edges)
+        assign = np.empty(c, dtype=np.int32)
+        # Sequential draws from the persistent generator: identical to the
+        # one-shot rng.random((m,)) of the whole stream, however chunked.
+        tie_noise = self.rng.random((c,)) * 1e-9
+        for i in range(c):
+            u, v = int(edges[i, 0]), int(edges[i, 1])
+            deg[u] += 1
+            deg[v] += 1
+            du, dv = deg[u], deg[v]
+            theta_u = du / (du + dv)
+            theta_v = 1.0 - theta_u
+            mx, mn = sizes.max(), sizes.min()
+            c_bal = (mx - sizes) / (eps + mx - mn)
+            c_rep = replicas[u] * (2.0 - theta_u) + replicas[v] * (2.0 - theta_v)
+            score = c_rep + lam * c_bal
+            p = int(np.argmax(score + tie_noise[i]))
+            assign[i] = p
+            sizes[p] += 1
+            replicas[u, p] = True
+            replicas[v, p] = True
+        self.edges_seen += c
+        return assign
+
+
+class GreedyState:
+    """PowerGraph Greedy vertex cache + loads, resumable across chunks."""
+
+    def __init__(self, num_vertices: int, k: int):
+        self.k = k
+        self.replicas = np.zeros((num_vertices, k), dtype=bool)
+        self.sizes = np.zeros(k, dtype=np.int64)
+        self.edges_seen = 0
+
+    def assign_chunk(self, edges: np.ndarray) -> np.ndarray:
+        k = self.k
+        replicas, sizes = self.replicas, self.sizes
+        c = len(edges)
+        assign = np.empty(c, dtype=np.int32)
+        for i in range(c):
+            u, v = int(edges[i, 0]), int(edges[i, 1])
+            ru, rv = replicas[u], replicas[v]
+            inter = ru & rv
+            if inter.any():
+                cand = inter
+            elif ru.any() and rv.any():
+                cand = ru | rv
+            elif ru.any():
+                cand = ru
+            elif rv.any():
+                cand = rv
+            else:
+                cand = np.ones(k, dtype=bool)
+            masked = np.where(cand, sizes, np.iinfo(np.int64).max)
+            p = int(np.argmin(masked))
+            assign[i] = p
+            sizes[p] += 1
+            replicas[u, p] = True
+            replicas[v, p] = True
+        self.edges_seen += c
+        return assign
 
 
 def hdrf_partition(
@@ -94,32 +217,12 @@ def hdrf_partition(
     authors' recommended default (used in the paper's evaluation).
     """
     t0 = time.perf_counter()
-    m = len(edges)
-    deg = np.zeros(num_vertices, dtype=np.int64)
-    replicas = np.zeros((num_vertices, k), dtype=bool)
-    sizes = np.zeros(k, dtype=np.int64)
-    assign = np.empty(m, dtype=np.int32)
-    rng = np.random.default_rng(seed)
-    tie_noise = rng.random((m,)) * 1e-9  # deterministic per-run tie breaking
-
-    for i in range(m):
-        u, v = int(edges[i, 0]), int(edges[i, 1])
-        deg[u] += 1
-        deg[v] += 1
-        du, dv = deg[u], deg[v]
-        theta_u = du / (du + dv)
-        theta_v = 1.0 - theta_u
-        mx, mn = sizes.max(), sizes.min()
-        c_bal = (mx - sizes) / (eps + mx - mn)
-        c_rep = replicas[u] * (2.0 - theta_u) + replicas[v] * (2.0 - theta_v)
-        score = c_rep + lam * c_bal
-        p = int(np.argmax(score + tie_noise[i]))
-        assign[i] = p
-        sizes[p] += 1
-        replicas[u, p] = True
-        replicas[v, p] = True
+    state = HdrfState(num_vertices, k, lam=lam, eps=eps, seed=seed)
+    assign = state.assign_chunk(edges)
     return PartitionResult(
-        assign, dict(k=k, wall_time_s=time.perf_counter() - t0, name="hdrf", score_count=m * k)
+        assign,
+        dict(k=k, wall_time_s=time.perf_counter() - t0, name="hdrf",
+             score_count=len(edges) * k),
     )
 
 
@@ -134,29 +237,8 @@ def greedy_partition(
     4. Else: least-loaded partition overall.
     """
     t0 = time.perf_counter()
-    m = len(edges)
-    replicas = np.zeros((num_vertices, k), dtype=bool)
-    sizes = np.zeros(k, dtype=np.int64)
-    assign = np.empty(m, dtype=np.int32)
-
-    for i in range(m):
-        u, v = int(edges[i, 0]), int(edges[i, 1])
-        ru, rv = replicas[u], replicas[v]
-        inter = ru & rv
-        if inter.any():
-            cand = inter
-        elif ru.any() and rv.any():
-            cand = ru | rv
-        elif ru.any():
-            cand = ru
-        elif rv.any():
-            cand = rv
-        else:
-            cand = np.ones(k, dtype=bool)
-        masked = np.where(cand, sizes, np.iinfo(np.int64).max)
-        p = int(np.argmin(masked))
-        assign[i] = p
-        sizes[p] += 1
-        replicas[u, p] = True
-        replicas[v, p] = True
-    return PartitionResult(assign, dict(k=k, wall_time_s=time.perf_counter() - t0, name="greedy"))
+    state = GreedyState(num_vertices, k)
+    assign = state.assign_chunk(edges)
+    return PartitionResult(
+        assign, dict(k=k, wall_time_s=time.perf_counter() - t0, name="greedy")
+    )

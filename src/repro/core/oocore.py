@@ -1,0 +1,856 @@
+"""Out-of-core partitioning driver: any registry strategy over a file reader.
+
+`partition_file` runs a registry strategy — adwise / adwise-restream / 2ps /
+hdrf / dbh / greedy / hash / grid, with or without a z>1 spotlight spread —
+over an :class:`repro.graph.io.format.EdgeFileReader` while keeping resident
+*edge* memory bounded by the chunk size. Assignments are written to a spill
+memmap as they are produced; multi-pass re-streaming re-reads the stream from
+disk each pass and reads the prior pass's placements back from its spill
+(never holding a resident edge array). Output is **bit-identical** to the
+in-memory path for every strategy:
+
+* ADWISE runs through the exact `lax.scan` step of
+  :func:`repro.core.adwise.partition_stream` — the step function gained a
+  ``base`` offset so each scan call indexes a bounded rolling buffer of the
+  stream instead of the whole array. Per scan call of ``S`` steps the cursor
+  advances at most ``window_max + S * assign_batch`` rows (the window can
+  hold at most ``window_max`` read-but-unassigned edges and each step assigns
+  at most ``assign_batch``), so a buffer of ``B`` rows is never overrun with
+  ``S = (B - window_max) // assign_batch`` — and the per-step math is the
+  very same trace the in-memory path runs with ``base=0``.
+* The z>1 spotlight path batches per-instance rolling buffers over
+  per-instance sub-readers (`EdgeFileReader.split` — the same ceil(m/z)
+  ``split_bounds`` byte ranges `EdgeStream` uses) through
+  ``_run_chunk_batched``, mirroring `spotlight_partition`'s batched backend;
+  baseline strategies run chunk-resumably per instance at the local spread-k
+  and are remapped, mirroring the loop backend.
+* HDRF / Greedy resume their vertex-cache state across chunks
+  (`repro.core.baselines.HdrfState` / ``GreedyState``); DBH takes a chunked
+  degree pass then a chunked placement pass; Hash / Grid are stateless.
+* 2PS takes a chunked degree pass, streams phase 1 through the
+  chunk-resumable `lax.scan` clustering
+  (:class:`repro.core.restream.VertexClusteringState`), and runs phase 2
+  through the warm-started rolling-buffer scan.
+
+Stats report the *measured* IO: ``io_wall_s`` (seconds inside ``read``),
+``rows_read`` and ``stream_reads`` (measured full passes over the stream),
+so `repro.engine.latency_model.partition_latency` bills real IO instead of
+an assumed single pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines
+from repro.core.adwise import (
+    Carry,
+    WarmState,
+    _cap_value,
+    _init_carry,
+    _resolve_backend,
+    _run_chunk_batched,
+)
+from repro.core.restream import VertexClusteringState, _pack_clusters
+from repro.core.spotlight import _SPOTLIGHT_INCOMPATIBLE, spread_mask
+from repro.core.types import AdwiseConfig, PartitionResult
+from repro.graph import metrics
+from repro.graph.stream import EdgeStream
+
+__all__ = ["partition_file"]
+
+_ADWISE_FIELDS = {f.name for f in dataclasses.fields(AdwiseConfig)} - {"k", "seed"}
+_SEQUENTIAL_BASELINES = ("hdrf", "dbh", "greedy", "hash", "grid")
+
+
+# ----------------------------------------------------------------------------
+# Assignment spill (disk-backed int32[m], -1 = unassigned)
+# ----------------------------------------------------------------------------
+
+
+class _Spill:
+    """int32[m] assignment spill memmap; resident set is page cache, not heap."""
+
+    def __init__(self, path: str, m: int):
+        self.path = path
+        self.m = m
+        self._map = np.memmap(path, dtype=np.int32, mode="w+", shape=(max(m, 1),))
+        self._map[:] = -1
+
+    def write(self, idx: np.ndarray, vals: np.ndarray) -> None:
+        self._map[idx] = vals
+
+    def write_range(self, start: int, vals: np.ndarray) -> None:
+        self._map[start : start + len(vals)] = vals
+
+    def read(self, start: int, count: int) -> np.ndarray:
+        return np.asarray(self._map[start : start + count])
+
+    def flush_readonly(self) -> np.memmap:
+        self._map.flush()
+        return np.memmap(self.path, dtype=np.int32, mode="r", shape=(max(self.m, 1),))[
+            : self.m
+        ]
+
+    def remove(self) -> None:
+        """Drop the mapping and delete the backing file (dead pass spills)."""
+        self._map = None
+        try:
+            os.remove(self.path)
+        except OSError:
+            pass
+
+
+# ----------------------------------------------------------------------------
+# Chunked accumulation helpers (vertex-sized state, O(chunk) edge memory)
+# ----------------------------------------------------------------------------
+
+
+def _chunked_degrees(reader, num_vertices: int, chunk_edges: int) -> np.ndarray:
+    deg = np.zeros(num_vertices, dtype=np.int64)
+    for chunk in reader.chunks(chunk_edges):
+        deg += np.bincount(chunk[:, 0], minlength=num_vertices)
+        deg += np.bincount(chunk[:, 1], minlength=num_vertices)
+    return deg
+
+
+def _pairs(reader, spill: _Spill, offset: int, chunk_edges: int):
+    """Yield (edges_chunk, assign_chunk) over a sub-reader + its spill range."""
+    start = 0
+    for chunk in reader.chunks(chunk_edges):
+        yield chunk, spill.read(offset + start, len(chunk))
+        start += len(chunk)
+
+
+class _PassMetrics:
+    """Replica table + sizes + quality of one completed pass, accumulated in
+    a SINGLE chunked read of (stream, spill) — the table feeds both the pass
+    quality stats and the next pass's warm start, so re-streaming pays one
+    metric read per pass, not two (`warm_from_assignment` parity: the spill
+    is complete, so drop/raise policies coincide)."""
+
+    def __init__(self, reader, spill: _Spill, offset: int, num_vertices: int,
+                 k: int, chunk_edges: int):
+        q = metrics.quality_from_chunks(
+            _pairs(reader, spill, offset, chunk_edges), num_vertices, k
+        )
+        self.rep = q["replicas"]
+        self.sizes = q["sizes"]
+        self.rd = q["replication_degree"]
+        self.imbalance = q["imbalance"]
+
+    def warm(self, deg: np.ndarray) -> WarmState:
+        return WarmState(replicas=self.rep, deg=deg, sizes=self.sizes,
+                         prev_assign=None)
+
+
+# ----------------------------------------------------------------------------
+# The rolling-buffer ADWISE driver (z >= 1 batched, warm-chunk path)
+# ----------------------------------------------------------------------------
+
+
+def _drive_adwise(
+    readers: Sequence,
+    num_vertices: int,
+    cfg: AdwiseConfig,
+    *,
+    write_assign: Callable[[int, np.ndarray, np.ndarray], None],
+    chunk_edges: int,
+    allowed: Optional[np.ndarray] = None,  # (z, k) bool
+    warm: Optional[List[WarmState]] = None,
+    prev_read: Optional[List[Callable[[int, int], np.ndarray]]] = None,
+    backend: str = "auto",
+) -> List[dict]:
+    """Feed z instance streams through the ADWISE scan in bounded buffers.
+
+    ``readers[i]`` is instance i's (locally addressed) stream;
+    ``write_assign(i, local_idx, p)`` receives finished placements.
+    ``prev_read[i](start, count)`` supplies the prior pass's placements for
+    buffered re-streaming revocation. Returns per-instance stats dicts.
+    """
+    z = len(readers)
+    k = cfg.k
+    b = cfg.assign_batch
+    w_max = cfg.window_max
+    m_per = np.array([r.num_edges for r in readers], dtype=np.int64)
+    m_max = int(m_per.max()) if z else 0
+    if m_max == 0:
+        return [dict(k=k, score_rows=0, assigned=0, unassigned=0) for _ in range(z)]
+
+    r_sel = w_max
+    if cfg.lazy:
+        r_sel = min(w_max, max(b, cfg.lazy_budget or max(8, w_max // 8)))
+    if allowed is None:
+        allowed_np = np.ones((z, k), bool)
+    else:
+        allowed_np = np.asarray(allowed, bool)
+    caps = np.array(
+        [
+            _cap_value(cfg, int(m_per[i]), max(int(allowed_np[i].sum()), 1))
+            for i in range(z)
+        ],
+        np.int32,
+    )
+
+    # Buffer of B rows per instance; S scan steps consume at most
+    # w_max + S*b rows (window refill ceiling + per-step assignments), so the
+    # scan never reads past the buffered range.
+    B = int(max(chunk_edges, w_max + b))
+    S = max(1, (B - w_max) // b)
+
+    budget = cfg.latency_budget if cfg.latency_budget is not None else 0.0
+    has_budget = cfg.latency_budget is not None
+    if warm is None:
+        base_carry = _init_carry(cfg, num_vertices, budget)
+        carry = jax.tree.map(lambda x: jnp.broadcast_to(x, (z,) + x.shape), base_carry)
+        update_deg = True
+    else:
+        assert len(warm) == z
+        carries = [
+            Carry.warm_start(
+                cfg, num_vertices, budget,
+                replicas=w.replicas, deg=w.deg, sizes=w.sizes,
+            )
+            for w in warm
+        ]
+        carry = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
+        update_deg = False
+
+    backend_used, n_shards = _resolve_backend(backend, z)
+
+    bufs = np.zeros((z, B, 2), np.int32)
+    prevb = np.full((z, B), -1, np.int32)
+    base = np.zeros((z,), np.int64)
+    filled = np.zeros((z,), np.int64)
+    m_real_j = jnp.asarray(m_per.astype(np.int32))
+    allowed_j = jnp.asarray(allowed_np)
+    caps_j = jnp.asarray(caps)
+
+    t0 = time.perf_counter()
+    iters = 0
+    # Every step with a non-empty window assigns >= 1 edge per instance
+    # (capacity caps sum to > m, so an allowed partition below cap always
+    # exists), so total steps are bounded by m_max plus the window build-up.
+    max_iters = -(-(m_max + w_max) // S) + 8
+    while True:
+        assigned = np.asarray(carry.assigned)
+        if (assigned >= m_per).all():
+            break
+        iters += 1
+        assert iters <= max_iters, (
+            f"out-of-core scan failed to converge: {assigned} of {m_per} "
+            f"assigned after {iters} calls"
+        )
+        cursors = np.asarray(carry.cursor)
+        for i in range(z):
+            cur = int(cursors[i])
+            drop = cur - int(base[i])
+            if drop > 0:
+                keep = max(int(filled[i]) - drop, 0)
+                if keep > 0:
+                    # .copy(): overlapping same-array slice assignment is not
+                    # a guaranteed memmove; the copy is <= B rows (bounded).
+                    bufs[i, :keep] = bufs[i, drop : drop + keep].copy()
+                    prevb[i, :keep] = prevb[i, drop : drop + keep].copy()
+                base[i] = cur
+                filled[i] = keep
+            want_end = min(int(m_per[i]), int(base[i]) + B)
+            while int(base[i] + filled[i]) < want_end:
+                start = int(base[i] + filled[i])
+                arr = readers[i].read(start, want_end - start)
+                if len(arr) == 0:
+                    break
+                f0 = int(filled[i])
+                bufs[i, f0 : f0 + len(arr)] = arr
+                if prev_read is not None:
+                    prevb[i, f0 : f0 + len(arr)] = prev_read[i](start, len(arr))
+                filled[i] += len(arr)
+        carry, out = _run_chunk_batched(
+            carry,
+            jnp.asarray(bufs),
+            m_real_j,
+            allowed_j,
+            caps_j,
+            jnp.asarray(prevb),
+            jnp.asarray(base.astype(np.int32)),
+            cfg=cfg,
+            num_vertices=num_vertices,
+            r_sel=r_sel,
+            n_steps=S,
+            has_budget=has_budget,
+            update_deg=update_deg,
+            n_shards=n_shards,
+        )
+        sidx = np.asarray(out.sidx).reshape(z, -1)
+        pout = np.asarray(out.p).reshape(z, -1)
+        for i in range(z):
+            live = sidx[i] >= 0
+            if live.any():
+                write_assign(i, sidx[i][live].astype(np.int64), pout[i][live])
+        if has_budget:
+            # Recalibrate the modeled cost against measured wall, as the
+            # in-memory chunk loop does between scan calls.
+            jax.block_until_ready(carry.score_rows)
+            wall = time.perf_counter() - t0
+            rows = max(int(np.asarray(carry.score_rows).sum()), 1)
+            carry = carry._replace(
+                cost_per_score=jnp.full((z,), wall / (rows * k), jnp.float32),
+                budget_left=jnp.full((z,), cfg.latency_budget - wall, jnp.float32),
+            )
+    wall = time.perf_counter() - t0
+    assigned = np.asarray(carry.assigned)
+    score_rows = np.asarray(carry.score_rows)
+    w_caps = np.asarray(carry.w_cap)
+    lams = np.asarray(carry.lam)
+    stats = []
+    for i in range(z):
+        assert int(assigned[i]) == int(m_per[i]), (
+            f"instance {i}: {int(assigned[i])} of {int(m_per[i])} assigned"
+        )
+        stats.append(
+            dict(
+                k=k,
+                name="adwise",
+                batched=True,
+                backend=backend_used,
+                n_shards=n_shards,
+                z=z,
+                instance=i,
+                wall_time_s=wall,
+                score_rows=int(score_rows[i]),
+                score_count=int(score_rows[i]) * k,
+                final_w=int(w_caps[i]),
+                lam_final=float(lams[i]),
+                assigned=int(assigned[i]),
+                unassigned=0,
+                warm=warm is not None,
+                r_sel=r_sel,
+                buffer_rows=B,
+                scan_steps_per_call=S,
+            )
+        )
+    return stats
+
+
+# ----------------------------------------------------------------------------
+# Chunk-resumable baselines / 2PS over a (sub-)reader
+# ----------------------------------------------------------------------------
+
+
+def _run_baseline_chunks(
+    strategy: str,
+    reader,
+    num_vertices: int,
+    k: int,
+    seed: int,
+    chunk_edges: int,
+    write_range: Callable[[int, np.ndarray], None],
+    **cfg,
+) -> dict:
+    """Stream a single-edge baseline over reader chunks (state resumes)."""
+    allowed_cfg = {"hdrf": {"lam", "eps"}}.get(strategy, set())
+    unknown = set(cfg) - allowed_cfg
+    if unknown:
+        raise TypeError(f"{strategy}: unknown config keys {sorted(unknown)}")
+    m = reader.num_edges
+    t0 = time.perf_counter()
+    reads = 1
+    if strategy == "hash":
+        off = 0
+        for chunk in reader.chunks(chunk_edges):
+            write_range(off, baselines.hash_assign(chunk, num_vertices, k, seed=seed))
+            off += len(chunk)
+        stats = dict(name="hash")
+    elif strategy == "grid":
+        off = 0
+        for chunk in reader.chunks(chunk_edges):
+            write_range(off, baselines.grid_assign(chunk, k, seed=seed))
+            off += len(chunk)
+        stats = dict(name="grid")
+    elif strategy == "dbh":
+        deg = _chunked_degrees(reader, num_vertices, chunk_edges)
+        off = 0
+        for chunk in reader.chunks(chunk_edges):
+            write_range(off, baselines.dbh_assign(chunk, deg, k, seed=seed))
+            off += len(chunk)
+        reads = 2
+        stats = dict(name="dbh")
+    elif strategy == "hdrf":
+        state = baselines.HdrfState(num_vertices, k, seed=seed, **cfg)
+        off = 0
+        for chunk in reader.chunks(chunk_edges):
+            write_range(off, state.assign_chunk(chunk))
+            off += len(chunk)
+        stats = dict(name="hdrf", score_count=m * k)
+    elif strategy == "greedy":
+        state = baselines.GreedyState(num_vertices, k)
+        off = 0
+        for chunk in reader.chunks(chunk_edges):
+            write_range(off, state.assign_chunk(chunk))
+            off += len(chunk)
+        stats = dict(name="greedy")
+    else:
+        raise KeyError(f"no chunk-resumable core for strategy {strategy!r}")
+    stats.update(k=k, wall_time_s=time.perf_counter() - t0, stream_reads=reads)
+    return stats
+
+
+def _run_two_phase_chunks(
+    reader,
+    num_vertices: int,
+    k: int,
+    seed: int,
+    chunk_edges: int,
+    write_assign: Callable[[np.ndarray, np.ndarray], None],
+    *,
+    cluster_slack: float = 1.25,
+    **adwise_cfg,
+) -> dict:
+    """2PS over a reader: chunked degree pass → chunk-resumable `lax.scan`
+    clustering → LPT packing → warm-started rolling-buffer phase 2."""
+    adwise_cfg.setdefault("window_max", 32)
+    adwise_cfg.setdefault("window_init", max(1, min(8, adwise_cfg["window_max"])))
+    cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
+    m = reader.num_edges
+    t0 = time.perf_counter()
+    deg = _chunked_degrees(reader, num_vertices, chunk_edges)
+    state = VertexClusteringState(
+        num_vertices, k, m, deg, cluster_slack=cluster_slack,
+        chunk_edges=chunk_edges,
+    )
+    for chunk in reader.chunks(chunk_edges):
+        state.update(chunk)
+    cl, vols = state.finalize()
+    part_of_cluster = _pack_clusters(vols, k) if len(vols) else np.zeros(0, np.int32)
+    t_phase1 = time.perf_counter() - t0
+
+    replicas = np.zeros((num_vertices, k), dtype=bool)
+    clustered = np.flatnonzero(cl >= 0)
+    if len(clustered):
+        replicas[clustered, part_of_cluster[cl[clustered]]] = True
+    warm = WarmState(
+        replicas=replicas, deg=deg, sizes=np.zeros(k, dtype=np.int64),
+        prev_assign=None,
+    )
+    sub_stats = _drive_adwise(
+        [reader], num_vertices, cfg,
+        write_assign=lambda _i, idx, p: write_assign(idx, p),
+        chunk_edges=chunk_edges, warm=[warm],
+    )[0]
+    return dict(
+        sub_stats,
+        name="2ps",
+        n_clusters=int(len(vols)),
+        cluster_slack=cluster_slack,
+        phase1_wall_s=t_phase1,
+        # Degree pass + clustering pass + scoring pass: three measured reads
+        # of the file (the in-memory path folds degree counting into its
+        # resident array and bills 2).
+        stream_reads=3,
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+# ----------------------------------------------------------------------------
+# Multi-pass re-streaming from disk
+# ----------------------------------------------------------------------------
+
+
+def _run_restream_chunks(
+    readers: Sequence,
+    num_vertices: int,
+    k: int,
+    seed: int,
+    chunk_edges: int,
+    spill_dir: str,
+    m_total: int,
+    offsets: np.ndarray,  # (z,) global start row per instance
+    final_spill: _Spill,
+    *,
+    allowed: Optional[np.ndarray] = None,
+    passes: int = 2,
+    base: str = "adwise",
+    keep_best: bool = True,
+    eps: Optional[float] = None,
+    backend: str = "auto",
+    **adwise_cfg,
+) -> dict:
+    """n-pass re-streaming where every pass re-reads the stream from disk and
+    the prior pass's placements from its spill (WarmState.prev_assign becomes
+    a spill-backed range read instead of a resident array)."""
+    if passes < 1:
+        raise ValueError(f"passes must be >= 1, got {passes}")
+    z = len(readers)
+    cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
+    m_per = np.array([r.num_edges for r in readers], dtype=np.int64)
+    spills: List[_Spill] = []
+
+    def new_spill(j: int) -> _Spill:
+        s = _Spill(os.path.join(spill_dir, f"restream.pass{j}.i32"), m_total)
+        spills.append(s)
+        return s
+
+    t0 = time.perf_counter()
+    spill = new_spill(0)
+    if base == "adwise":
+        pass_stats = _drive_adwise(
+            readers, num_vertices, cfg,
+            write_assign=(
+                lambda sp: lambda i, idx, p: sp.write(offsets[i] + idx, p)
+            )(spill),
+            chunk_edges=chunk_edges, allowed=allowed, backend=backend,
+        )
+    else:
+        if z > 1:
+            raise ValueError(
+                "file-driven restream only batches base='adwise' under a "
+                f"z>1 spotlight (got base={base!r}); run z=1 or base='adwise'"
+            )
+        st = _run_baseline_chunks(
+            base, readers[0], num_vertices, k, seed, chunk_edges,
+            lambda off, a: spill.write_range(int(offsets[0]) + off, a),
+        )
+        pass_stats = [st]
+
+    def metrics_of(j_spill: _Spill) -> List[_PassMetrics]:
+        # One fused read per instance: quality stats AND the next pass's
+        # warm tables come out of the same chunked accumulation.
+        return [
+            _PassMetrics(readers[i], j_spill, int(offsets[i]), num_vertices,
+                         k, chunk_edges)
+            for i in range(z)
+        ]
+
+    def score_rows_of(stats_list) -> List[int]:
+        return [
+            int(s.get("score_rows", s.get("score_count", 0) // max(k, 1)))
+            for s in stats_list
+        ]
+
+    pm = metrics_of(spill)
+    pass_rd = [[pm[i].rd] for i in range(z)]
+    pass_imbalance = [[pm[i].imbalance] for i in range(z)]
+    pass_score_rows = [[s] for s in score_rows_of(pass_stats)]
+    best_spill = [spill] * z
+    best_rd = [pass_rd[i][0] for i in range(z)]
+    best_pass = [1] * z
+    prev = spill
+
+    # The degree tables are pass-invariant: one counting read per instance,
+    # reused by every warm start (no re-reads inside the pass loop).
+    degs = (
+        [_chunked_degrees(readers[i], num_vertices, chunk_edges) for i in range(z)]
+        if passes > 1
+        else []
+    )
+    for j in range(1, passes):
+        warms = [pm[i].warm(degs[i]) for i in range(z)]
+        prev_read = [
+            (lambda pv, off: lambda start, count: pv.read(off + start, count))(
+                prev, int(offsets[i])
+            )
+            for i in range(z)
+        ]
+        spill = new_spill(j)
+        pass_stats = _drive_adwise(
+            readers, num_vertices, cfg,
+            write_assign=(
+                lambda sp: lambda i, idx, p: sp.write(offsets[i] + idx, p)
+            )(spill),
+            chunk_edges=chunk_edges, allowed=allowed, warm=warms,
+            prev_read=prev_read, backend=backend,
+        )
+        pm = metrics_of(spill)
+        improved = 0.0
+        for i in range(z):
+            improved = max(improved, pass_rd[i][-1] - pm[i].rd)
+            pass_rd[i].append(pm[i].rd)
+            pass_imbalance[i].append(pm[i].imbalance)
+            pass_score_rows[i].append(score_rows_of(pass_stats)[i])
+            if pm[i].rd <= best_rd[i]:
+                best_spill[i], best_rd[i] = spill, pm[i].rd
+                best_pass[i] = len(pass_rd[i])
+        prev = spill
+        if eps is not None and improved < eps:
+            break
+
+    passes_run = len(pass_rd[0])
+    # Compose the final assignment from each instance's winning pass, then
+    # drop the (passes x 4m-byte) intermediate spills — only the final spill
+    # backs the returned memmap.
+    for i in range(z):
+        src = best_spill[i] if keep_best else spill
+        g0 = int(offsets[i])
+        for start in range(0, int(m_per[i]), chunk_edges):
+            c = min(chunk_edges, int(m_per[i]) - start)
+            final_spill.write_range(g0 + start, src.read(g0 + start, c))
+    for s in spills:
+        s.remove()
+    score_rows = int(sum(sum(sr) for sr in pass_score_rows))
+    return dict(
+        k=k,
+        name="adwise-restream",
+        base=base,
+        passes=passes,
+        passes_run=passes_run,
+        stream_reads=passes_run,
+        eps=eps,
+        best_pass=best_pass[0] if keep_best else passes_run,
+        pass_rd=pass_rd[0] if z == 1 else [list(r) for r in pass_rd],
+        pass_imbalance=pass_imbalance[0] if z == 1 else None,
+        pass_score_rows=pass_score_rows[0] if z == 1 else None,
+        score_rows=score_rows,
+        score_count=score_rows * k,
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+# ----------------------------------------------------------------------------
+# partition_file — the public driver
+# ----------------------------------------------------------------------------
+
+
+def partition_file(
+    reader,
+    strategy: str,
+    k: int,
+    *,
+    z: int = 1,
+    spread: Optional[int] = None,
+    seed: int = 0,
+    chunk_edges: int = 1 << 16,
+    spill_dir: Optional[str] = None,
+    backend: str = "auto",
+    **cfg,
+) -> PartitionResult:
+    """Partition a file-resident edge stream with bounded edge memory.
+
+    Args:
+      reader: an :class:`repro.graph.io.format.EdgeFileReader` (or sub-reader).
+      strategy: registry strategy name — 'adwise', 'adwise-restream', '2ps',
+        'hdrf', 'dbh', 'greedy', 'hash', 'grid'.
+      k: global partition count.
+      z: spotlight parallel-loading instances; z > 1 splits the file into z
+        contiguous byte ranges (``EdgeFileReader.split`` — the boundaries
+        `EdgeStream.split_padded` uses) and restricts instance i to a cyclic
+        ``spread``-partition block, exactly like
+        :func:`repro.core.spotlight.spotlight_partition`.
+      spread: partitions per instance (z > 1 only; default ``max(1, k // z)``).
+      chunk_edges: the resident-edge bound. Per instance, at most
+        ``max(chunk_edges, window_max + assign_batch)`` edge rows are buffered
+        (plus one in-flight read of at most that size); ``stats``
+        report the realized bound as ``peak_resident_edges``.
+      spill_dir: directory for assignment spill files (default: a fresh
+        temp dir; the final spill backs the returned ``assign`` memmap, so
+        the directory outlives the call — pass e.g. a pytest tmp_path to
+        control its lifetime).
+      backend: forwarded to the batched scan ('auto'/'vmap'/'shard_map').
+      cfg: strategy knobs, exactly as `repro.core.registry.run_partitioner`
+        takes them (AdwiseConfig fields; `passes=`/`base=`/`keep_best=`/
+        `eps=` for adwise-restream; `cluster_slack=` for 2ps; `lam=` for
+        hdrf, ...).
+
+    Returns a PartitionResult whose ``assign`` is a read-only memmap over the
+    final spill file (stats carry ``spill_path``) — **bit-identical** to the
+    in-memory registry / spotlight path for the same inputs.
+    """
+    m = reader.num_edges
+    n = reader.num_vertices
+    if z < 1:
+        raise ValueError(f"z must be >= 1, got {z}")
+    if z > 1 and strategy in _SPOTLIGHT_INCOMPATIBLE:
+        raise ValueError(
+            f"strategy {strategy!r} does not compose with spotlight spread "
+            "masking (see repro.core.spotlight)"
+        )
+    if spread is None:
+        spread = k if z == 1 else max(1, k // z)
+    if m == 0:
+        # Full stats surface (no spill file is created for an empty stream).
+        return PartitionResult(
+            np.zeros((0,), np.int32),
+            dict(k=k, name=strategy, m=0, num_vertices=n, z=z,
+                 chunk_edges=chunk_edges, peak_resident_edges=0,
+                 spill_path=None, wall_time_s=0.0, io_wall_s=0.0,
+                 rows_read=0, stream_reads=0, stream_reads_measured=0,
+                 unassigned=0),
+        )
+    if spill_dir is None:
+        spill_dir = tempfile.mkdtemp(prefix="adwise-oocore-")
+    os.makedirs(spill_dir, exist_ok=True)
+
+    rows_before = getattr(reader, "rows_read", 0)
+    io_before = getattr(reader, "read_seconds", 0.0)
+    final = _Spill(os.path.join(spill_dir, "assign.i32"), m)
+    t0 = time.perf_counter()
+
+    if strategy in ("adwise", "adwise-restream"):
+        unknown = set(cfg) - _ADWISE_FIELDS - (
+            {"passes", "base", "keep_best", "eps", "n_chunks"}
+            if strategy == "adwise-restream" else set()
+        )
+        if unknown:
+            raise TypeError(f"{strategy}: unknown config keys {sorted(unknown)}")
+        cfg.pop("n_chunks", None)
+        readers = list(reader.split(z)) if z > 1 else [reader]
+        offsets = (
+            np.asarray(EdgeStream.split_bounds(m, z)[:z])
+            if z > 1
+            else np.zeros((1,), np.int64)
+        )
+        allowed = (
+            np.stack([spread_mask(k, z, i, spread) for i in range(z)])
+            if z > 1
+            else None
+        )
+        if strategy == "adwise":
+            acfg = AdwiseConfig(k=k, seed=seed, **cfg)
+            per_stats = _drive_adwise(
+                readers, n, acfg,
+                write_assign=lambda i, idx, p: final.write(offsets[i] + idx, p),
+                chunk_edges=chunk_edges, allowed=allowed, backend=backend,
+            )
+            stats = dict(per_stats[0], stream_reads=1)
+            if z > 1:
+                stats.update(
+                    name="spotlight-adwise", z=z, spread=spread,
+                    score_count=sum(s.get("score_count", 0) for s in per_stats),
+                )
+        else:
+            stats = _run_restream_chunks(
+                readers, n, k, seed, chunk_edges, spill_dir, m, offsets, final,
+                allowed=allowed, backend=backend, **cfg,
+            )
+            if z > 1:
+                stats.update(name="spotlight-adwise-restream", z=z, spread=spread)
+    elif strategy == "2ps":
+        unknown = set(cfg) - _ADWISE_FIELDS - {"cluster_slack", "n_chunks"}
+        if unknown:
+            raise TypeError(f"2ps: unknown config keys {sorted(unknown)}")
+        cfg.pop("n_chunks", None)
+        if z == 1:
+            stats = _run_two_phase_chunks(
+                reader, n, k, seed, chunk_edges,
+                lambda idx, p: final.write(idx, p), **cfg,
+            )
+        else:
+            stats = _masked_instances_file(
+                "2ps", reader, n, k, z, spread, seed, chunk_edges, final, cfg,
+                lambda sub, kk, sd, write: _run_two_phase_chunks(
+                    sub, n, kk, sd, chunk_edges, write, **cfg
+                ),
+            )
+    elif strategy in _SEQUENTIAL_BASELINES:
+        if z == 1:
+            stats = _run_baseline_chunks(
+                strategy, reader, n, k, seed, chunk_edges,
+                lambda off, a: final.write_range(off, a), **cfg,
+            )
+        else:
+            stats = _masked_instances_file(
+                strategy, reader, n, k, z, spread, seed, chunk_edges, final, cfg,
+                None,
+            )
+    else:
+        raise KeyError(
+            f"partition_file has no out-of-core driver for strategy "
+            f"{strategy!r}"
+        )
+
+    wall = time.perf_counter() - t0
+    rows_read = getattr(reader, "rows_read", 0) - rows_before
+    io_wall = getattr(reader, "read_seconds", 0.0) - io_before
+    measured_reads = max(1, int(round(rows_read / max(m, 1))))
+    # Resident-edge ceiling: per instance, the rolling buffer (or baseline
+    # chunk) plus one in-flight read of at most the same size.
+    buffer_rows = int(stats.get("buffer_rows", chunk_edges))
+    stats = dict(
+        stats,
+        k=k,
+        file=getattr(reader, "path", None),
+        m=m,
+        num_vertices=n,
+        z=z,
+        chunk_edges=chunk_edges,
+        peak_resident_edges=z * 2 * buffer_rows,
+        spill_path=final.path,
+        wall_time_s=stats.get("wall_time_s", wall),
+        io_wall_s=io_wall,
+        rows_read=int(rows_read),
+        stream_reads=int(stats.get("stream_reads", measured_reads)),
+        stream_reads_measured=measured_reads,
+        unassigned=0,
+    )
+    # Chunked completeness check (no O(m) temporary; raises even under -O).
+    neg = 0
+    for start in range(0, m, chunk_edges):
+        a = final.read(start, min(chunk_edges, m - start))
+        neg += int((a < 0).sum())
+    if neg:
+        raise RuntimeError(f"partition_file left {neg} of {m} edges unassigned")
+    return PartitionResult(final.flush_readonly(), stats)
+
+
+def _masked_instances_file(
+    strategy: str,
+    reader,
+    num_vertices: int,
+    k: int,
+    z: int,
+    spread: int,
+    seed: int,
+    chunk_edges: int,
+    final: _Spill,
+    cfg: dict,
+    two_phase_runner,
+) -> dict:
+    """z>1 spotlight for non-batched strategies: each instance runs the
+    chunk-resumable core at the local spread-k over its byte range and local
+    ids are remapped to the global ids its mask selects (mirrors
+    `spotlight_partition`'s loop backend / `_masked_strategy`)."""
+    subs = reader.split(z)
+    bounds = EdgeStream.split_bounds(reader.num_edges, z)
+    t0 = time.perf_counter()
+    walls, score_counts, reads = [], 0, 0
+    for i, sub in enumerate(subs):
+        allowed = spread_mask(k, z, i, spread)
+        local_to_global = np.flatnonzero(allowed).astype(np.int32)
+        k_local = int(allowed.sum())
+        g0 = int(bounds[i])
+
+        if two_phase_runner is not None:
+            st = two_phase_runner(
+                sub, k_local, seed + i,
+                lambda idx, p, g0=g0, m_=local_to_global: final.write(
+                    g0 + idx, m_[p]
+                ),
+            )
+        else:
+            st = _run_baseline_chunks(
+                strategy, sub, num_vertices, k_local, seed + i, chunk_edges,
+                lambda off, a, g0=g0, m_=local_to_global: final.write_range(
+                    g0 + off, m_[a]
+                ),
+                **cfg,
+            )
+        walls.append(st.get("wall_time_s", 0.0))
+        score_counts += st.get("score_count", 0)
+        reads = max(reads, st.get("stream_reads", 1))
+    return dict(
+        k=k,
+        z=z,
+        spread=spread,
+        name=f"spotlight-{strategy}",
+        backend="loop",
+        wall_time_s=max(walls) if walls else 0.0,
+        wall_time_serial_s=time.perf_counter() - t0,
+        score_count=score_counts,
+        stream_reads=reads,
+    )

@@ -32,9 +32,13 @@ by name.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
+from functools import partial
 from typing import List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import registry
@@ -48,6 +52,8 @@ __all__ = [
     "restream_partition_batched",
     "two_phase_partition",
     "streaming_vertex_clustering",
+    "streaming_vertex_clustering_np",
+    "VertexClusteringState",
 ]
 
 
@@ -293,6 +299,147 @@ def restream_partition_batched(
 # ----------------------------------------------------------------------------
 
 
+def _volume_cap(m: int, k: int, cluster_slack: float) -> int:
+    """Integer volume cap. Volumes are integer degree sums, so the float cap
+    ``max(cluster_slack * 2m/k, 1.0)`` gates exactly like its floor — using
+    the integer form makes the lax.scan port and the numpy oracle agree
+    bit-for-bit regardless of accumulator dtype."""
+    max_vol = max(cluster_slack * 2.0 * m / max(k, 1), 1.0)
+    return int(min(math.floor(max_vol), np.iinfo(np.int32).max - 1))
+
+
+@partial(jax.jit, static_argnames=("num_vertices",))
+def _cluster_scan(cl, vols, nxt, edges, live, deg, cap, *, num_vertices):
+    """One `lax.scan` over a chunk of edges, advancing the clustering state.
+
+    State: ``cl`` (V+1,) int32 cluster per vertex (-1 = unclustered; row V is
+    a scatter dump), ``vols`` (V+3,) int32 cluster volumes (slots are created
+    in `nxt` order; the last row is a scatter dump), ``nxt`` () int32 next
+    cluster id. ``live`` masks padding rows (their steps are no-ops), so any
+    chunking of the stream yields the exact state the one-shot scan yields.
+    """
+    n = num_vertices
+    dummy_v = jnp.int32(vols.shape[0] - 1)
+    dummy_c = jnp.int32(n)
+
+    def step(carry, xs):
+        cl, vols, nxt = carry
+        uv, lv = xs
+        u, v = uv[0], uv[1]
+        du, dv = deg[u], deg[v]
+        cu, cv = cl[u], cl[v]
+        cu_ok = cu >= 0
+        cv_ok = cv >= 0
+        vol_cu = vols[jnp.where(cu_ok, cu, dummy_v)]
+        vol_cv = vols[jnp.where(cv_ok, cv, dummy_v)]
+        selfloop = u == v
+        both_new = ~cu_ok & ~cv_ok
+        u_new = ~cu_ok & cv_ok
+        v_new = cu_ok & ~cv_ok
+        both_old = cu_ok & cv_ok & (cu != cv)
+
+        # Case A: both unclustered — found together (cap / self-loop) or apart.
+        a_join = both_new & (selfloop | (du + dv <= cap))
+        a_split = both_new & ~a_join
+        # Case B / C: one endpoint joins the other's cluster if it fits,
+        # else founds its own.
+        b_fits = u_new & (vol_cv + du <= cap)
+        b_new = u_new & ~b_fits
+        c_fits = v_new & (vol_cu + dv <= cap)
+        c_new = v_new & ~c_fits
+        # Case D: 2PS-L local move — endpoint in the lighter cluster moves.
+        move_u = both_old & (vol_cu <= vol_cv)
+        move_v = both_old & ~(vol_cu <= vol_cv)
+        d_u = move_u & (vol_cv + du <= cap)
+        d_v = move_v & (vol_cu + dv <= cap)
+
+        wu = lv & (a_join | a_split | b_fits | b_new | d_u)
+        new_cl_u = jnp.where(b_fits | d_u, cv, nxt)
+        wv = lv & (a_join | a_split | c_fits | c_new | d_v)
+        new_cl_v = jnp.where(
+            c_fits | d_v, cu, jnp.where(a_split, nxt + 1, nxt)
+        )
+        # u then v; the only u/v collision is the self-loop join, where both
+        # write the same id.
+        cl = cl.at[jnp.where(wu, u, dummy_c)].set(new_cl_u)
+        cl = cl.at[jnp.where(wv, v, dummy_c)].set(new_cl_v)
+
+        lvi = lv.astype(jnp.int32)
+        add_nxt = jnp.where(
+            a_join,
+            du + jnp.where(selfloop, 0, dv),
+            jnp.where(a_split | b_new, du, jnp.where(c_new, dv, 0)),
+        )
+        add_nxt1 = jnp.where(a_split, dv, 0)
+        delta_cv = jnp.where(b_fits, du, 0) + jnp.where(d_u, du, 0) - jnp.where(d_v, dv, 0)
+        delta_cu = jnp.where(c_fits, dv, 0) + jnp.where(d_v, dv, 0) - jnp.where(d_u, du, 0)
+        vols = (
+            vols.at[jnp.where(lv, nxt, dummy_v)].add(lvi * add_nxt)
+            .at[jnp.where(lv, nxt + 1, dummy_v)].add(lvi * add_nxt1)
+            .at[jnp.where(lv & cv_ok, cv, dummy_v)].add(lvi * delta_cv)
+            .at[jnp.where(lv & cu_ok, cu, dummy_v)].add(lvi * delta_cu)
+        )
+        nxt = nxt + lvi * jnp.where(
+            a_join, 1, jnp.where(a_split, 2, jnp.where(b_new | c_new, 1, 0))
+        )
+        return (cl, vols, nxt), None
+
+    (cl, vols, nxt), _ = jax.lax.scan(step, (cl, vols, nxt), (edges, live))
+    return cl, vols, nxt
+
+
+class VertexClusteringState:
+    """Chunk-resumable phase-1 clustering (the `lax.scan` port of the numpy
+    per-edge loop — ROADMAP open item (a)).
+
+    Feed the stream through :meth:`update` in any chunking; the state after
+    the final chunk equals the one-shot run exactly (integer carries, masked
+    no-op padding steps). ``deg`` must be the *full-stream* degree table and
+    ``num_edges`` the full stream length — both known up front in memory, and
+    after one counting pass out-of-core.
+    """
+
+    def __init__(
+        self,
+        num_vertices: int,
+        k: int,
+        num_edges: int,
+        deg: np.ndarray,
+        *,
+        cluster_slack: float = 1.25,
+        chunk_edges: Optional[int] = None,
+    ):
+        self.num_vertices = num_vertices
+        self.cap = _volume_cap(num_edges, k, cluster_slack)
+        self._pad = max(int(chunk_edges or num_edges), 1)
+        self._deg = jnp.asarray(np.asarray(deg), jnp.int32)
+        self._cl = jnp.full((num_vertices + 1,), -1, jnp.int32)
+        self._vols = jnp.zeros((num_vertices + 3,), jnp.int32)
+        self._nxt = jnp.zeros((), jnp.int32)
+
+    def update(self, edges: np.ndarray) -> None:
+        c = len(edges)
+        assert c <= self._pad, f"chunk of {c} rows > declared chunk_edges={self._pad}"
+        if c == 0:
+            return
+        padded = np.zeros((self._pad, 2), np.int32)
+        padded[:c] = edges
+        live = np.zeros((self._pad,), bool)
+        live[:c] = True
+        self._cl, self._vols, self._nxt = _cluster_scan(
+            self._cl, self._vols, self._nxt,
+            jnp.asarray(padded), jnp.asarray(live), self._deg,
+            jnp.int32(self.cap), num_vertices=self.num_vertices,
+        )
+
+    def finalize(self) -> tuple[np.ndarray, np.ndarray]:
+        """(cluster_id int64[V] (-1 = never streamed), volumes float64[C])."""
+        cl = np.asarray(self._cl)[: self.num_vertices].astype(np.int64)
+        nxt = int(self._nxt)
+        vols = np.asarray(self._vols)[:nxt].astype(np.float64)
+        return cl, vols
+
+
 def streaming_vertex_clustering(
     edges: np.ndarray,
     num_vertices: int,
@@ -300,7 +447,9 @@ def streaming_vertex_clustering(
     *,
     cluster_slack: float = 1.25,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """One streaming pass of volume-capped vertex clustering (2PS-L style).
+    """One streaming pass of volume-capped vertex clustering (2PS-L style),
+    as a vectorized `lax.scan` (the numpy loop survives as
+    :func:`streaming_vertex_clustering_np`, the parity oracle in tests).
 
     Cluster *volume* is the sum of member degrees; the cap
     ``cluster_slack * 2m / k`` keeps every cluster small enough to fit a
@@ -311,6 +460,22 @@ def streaming_vertex_clustering(
 
     Returns (cluster_id int64[V] (-1 = never streamed), volumes float64[C]).
     """
+    state = VertexClusteringState(
+        num_vertices, k, len(edges), _degrees(edges, num_vertices),
+        cluster_slack=cluster_slack,
+    )
+    state.update(np.asarray(edges, np.int32))
+    return state.finalize()
+
+
+def streaming_vertex_clustering_np(
+    edges: np.ndarray,
+    num_vertices: int,
+    k: int,
+    *,
+    cluster_slack: float = 1.25,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Reference numpy per-edge loop (parity oracle for the scan port)."""
     deg = _degrees(edges, num_vertices)
     m = len(edges)
     max_vol = max(cluster_slack * 2.0 * m / max(k, 1), 1.0)

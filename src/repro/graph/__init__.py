@@ -12,7 +12,9 @@ from repro.graph.metrics import (
     replication_degree,
     partition_balance,
     partition_sizes,
+    quality_from_chunks,
     replica_sets_from_assignment,
+    replica_sets_from_chunks,
     sync_volume,
     unassigned_count,
 )
@@ -28,7 +30,9 @@ __all__ = [
     "replication_degree",
     "partition_balance",
     "partition_sizes",
+    "quality_from_chunks",
     "replica_sets_from_assignment",
+    "replica_sets_from_chunks",
     "sync_volume",
     "unassigned_count",
 ]

@@ -1,0 +1,42 @@
+"""Out-of-core graph I/O: binary edge-stream files, text ingest, external shuffle.
+
+The disk-backed substrate for graphs that do not fit in memory (ROADMAP:
+real, huge workloads). Three pieces:
+
+* :mod:`repro.graph.io.format` — versioned binary edge-stream format
+  (64-byte header: magic / version / dtype / m / n; mmap-able int32 payload)
+  with bounded-chunk writer/reader classes and row-range sub-readers (the
+  spotlight per-instance byte ranges).
+* :mod:`repro.graph.io.ingest` — one-pass SNAP-style text → binary ingester
+  (comments, blank lines, whitespace variants, optional dense relabeling,
+  inferred n) with O(chunk) edge memory.
+* :mod:`repro.graph.io.shuffle` — two-pass external shuffle, O(chunk) memory,
+  for stream-order sensitivity experiments on file-resident graphs.
+
+``repro.core.oocore.partition_file`` drives any registry partitioner over an
+:class:`EdgeFileReader` with bounded resident edge memory.
+"""
+from repro.graph.io.format import (
+    HEADER_BYTES,
+    MAGIC,
+    VERSION,
+    EdgeFileReader,
+    EdgeFileWriter,
+    read_edge_file,
+    write_edge_file,
+)
+from repro.graph.io.ingest import IngestReport, ingest_text
+from repro.graph.io.shuffle import shuffle_file
+
+__all__ = [
+    "MAGIC",
+    "VERSION",
+    "HEADER_BYTES",
+    "EdgeFileReader",
+    "EdgeFileWriter",
+    "read_edge_file",
+    "write_edge_file",
+    "IngestReport",
+    "ingest_text",
+    "shuffle_file",
+]

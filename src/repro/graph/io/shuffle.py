@@ -1,0 +1,105 @@
+"""External (on-disk) chunked shuffle of a binary edge-stream file.
+
+Stream-order sensitivity experiments (paper §IV — file order vs adversarial
+random order) need a *shuffled copy* of the stream. In-memory that is
+``EdgeStream.shuffled``; out-of-core it is the classic recursive external
+shuffle:
+
+  scatter: read the source in bounded chunks; deal each row uniformly at
+    random into one of B bucket files. B is capped at ``max_open`` (file-
+    descriptor budget — a 1e9-row shuffle must not open 30k files at once).
+  gather: for each bucket in order — if it fits the chunk budget, load it,
+    permute it in memory, append to the destination; otherwise scatter it
+    again recursively (depth is log_B(m / chunk), i.e. 2 for anything that
+    fits on one disk).
+
+Dealing rows to uniform buckets and uniformly permuting each bucket yields a
+uniform permutation of the file, deterministic in ``seed`` (a single
+generator threads through scatter and gather in bucket order). Peak edge
+memory is O(chunk + max_open); open files are O(max_open).
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+from repro.graph.io.format import EdgeFileReader, EdgeFileWriter
+
+__all__ = ["shuffle_file"]
+
+_MAX_OPEN = 256  # simultaneous bucket files per scatter level
+
+
+def _scatter(chunks, n_rows: int, chunk_edges: int, rng, td: str, ids):
+    """Deal rows from a chunk iterator into <= _MAX_OPEN bucket files.
+
+    Returns the bucket paths (creation order == gather order)."""
+    n_buckets = min(max(1, -(-2 * n_rows // chunk_edges)), _MAX_OPEN)
+    paths = [os.path.join(td, f"bucket_{next(ids)}.bin") for _ in range(n_buckets)]
+    handles = [open(p, "wb") for p in paths]
+    try:
+        for chunk in chunks:
+            which = rng.integers(0, n_buckets, size=len(chunk))
+            # One stable sort groups the chunk by bucket (a per-bucket mask
+            # loop would re-scan the chunk n_buckets times).
+            order = np.argsort(which, kind="stable")
+            grouped = chunk[order]
+            counts = np.bincount(which, minlength=n_buckets)
+            stops = np.cumsum(counts)
+            for b in range(n_buckets):
+                if counts[b]:
+                    rows = grouped[stops[b] - counts[b] : stops[b]]
+                    handles[b].write(np.ascontiguousarray(rows).tobytes())
+    finally:
+        for f in handles:
+            f.close()
+    return paths
+
+
+def _raw_chunks(path: str, chunk_edges: int):
+    """Iterate a raw headerless int32-pair file in bounded chunks."""
+    with open(path, "rb") as f:
+        while True:
+            raw = np.fromfile(f, dtype=np.int32, count=chunk_edges * 2)
+            if raw.size == 0:
+                return
+            yield raw.reshape(-1, 2)
+
+
+def _gather(paths, chunk_edges: int, rng, td: str, ids, emit) -> None:
+    """Permute each bucket into ``emit``; oversized buckets scatter again."""
+    for p in paths:
+        n_rows = os.path.getsize(p) // 8
+        if n_rows <= max(2 * chunk_edges, 1):
+            raw = np.fromfile(p, dtype=np.int32)
+            rows = raw.reshape(-1, 2)
+            emit(rows[rng.permutation(len(rows))])
+        else:
+            sub = _scatter(_raw_chunks(p, chunk_edges), n_rows, chunk_edges,
+                           rng, td, ids)
+            _gather(sub, chunk_edges, rng, td, ids, emit)
+        os.remove(p)
+
+
+def shuffle_file(
+    src: str,
+    dst: str,
+    *,
+    seed: int = 0,
+    chunk_edges: int = 1 << 16,
+    tmpdir: Optional[str] = None,
+) -> None:
+    """Write a uniformly shuffled copy of edge file ``src`` to ``dst``."""
+    assert chunk_edges >= 1
+    rng = np.random.default_rng(seed)
+    ids = itertools.count()
+    with EdgeFileReader(src) as r:
+        m, n = r.num_edges, r.num_vertices
+        with tempfile.TemporaryDirectory(dir=tmpdir) as td:
+            paths = _scatter(r.chunks(chunk_edges), m, chunk_edges, rng, td, ids)
+            with EdgeFileWriter(dst, num_vertices=n) as w:
+                _gather(paths, chunk_edges, rng, td, ids, w.append)

@@ -88,5 +88,22 @@ class EdgeStream:
 
     @staticmethod
     def load(path: str) -> "EdgeStream":
-        data = np.load(path)
-        return EdgeStream(data["edges"], int(data["num_vertices"]))
+        # NpzFile holds the archive open until closed; copy the arrays out
+        # under a context manager so the file handle never leaks.
+        with np.load(path) as data:
+            return EdgeStream(data["edges"].copy(), int(data["num_vertices"]))
+
+    def to_file(self, path: str) -> None:
+        """Write as a binary edge-stream file (`repro.graph.io` format)."""
+        from repro.graph.io.format import write_edge_file
+
+        write_edge_file(path, self.edges, self.num_vertices)
+
+    @staticmethod
+    def from_file(path: str) -> "EdgeStream":
+        """Load a binary edge-stream file fully resident (small graphs /
+        tests; large graphs should stay behind an ``EdgeFileReader``)."""
+        from repro.graph.io.format import read_edge_file
+
+        edges, n = read_edge_file(path)
+        return EdgeStream(edges, n)

@@ -4,6 +4,13 @@
         --strategy adwise --k 32 --z 8 --spread 4 --budget 2.0 \
         --workload pagerank --iters 100
 
+    # out-of-core: partition a file-resident graph with bounded edge memory
+    PYTHONPATH=src python -m repro.launch.partition --graph /data/orkut.adw \
+        --strategy adwise-restream --passes 3 --k 32 --chunk-edges 262144
+    # text edge list (SNAP format): ingest to binary first, then partition
+    PYTHONPATH=src python -m repro.launch.partition --graph /data/orkut.txt \
+        --ingest --relabel --strategy hdrf --k 32
+
 Runs: stream partitioning (any strategy in the `repro.core.registry` —
 adwise / adwise-restream / 2ps / hdrf / dbh / greedy / hash / grid —
 optionally under spotlight parallel loading) → vertex-cut engine build →
@@ -15,11 +22,22 @@ adwise-restream. With `--z N` (alias `--parallel`) the z spotlight instances
 run as ONE batched (vmapped / multi-device shard_mapped) program for
 adwise-family strategies — `--backend loop` forces the sequential
 per-instance path (the only mode for the masked baselines).
+
+`--graph` also takes a *path* instead of a preset name: a binary edge-stream
+file (`repro.graph.io` format) is partitioned out-of-core through
+`repro.core.oocore.partition_file` — resident edge memory stays bounded by
+`--chunk-edges`, assignments spill to disk, quality metrics accumulate in
+chunks, and the report includes the measured ingest wall / stream reads.
+`--ingest` converts a SNAP-style text edge list to the binary format first
+(one pass, O(chunk) memory; `--relabel` densifies sparse vertex ids).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -27,6 +45,7 @@ import numpy as np
 from repro.core import (
     AdwiseConfig,
     available_strategies,
+    partition_file,
     run_partitioner,
     spotlight_partition,
 )
@@ -57,6 +76,76 @@ def adwise_cfg_kwargs(args) -> dict:
         latency_budget=args.budget,
         use_clustering=not args.no_cs,
     )
+
+
+def strategy_cfg_kwargs(args) -> dict:
+    """Registry-style **cfg for the active strategy (file-driven path)."""
+    cfg = {}
+    if args.strategy in _ADWISE_LIKE:
+        cfg = adwise_cfg_kwargs(args)
+    if args.strategy == "adwise-restream":
+        cfg["passes"] = args.passes
+        if args.eps is not None:
+            cfg["eps"] = args.eps
+    return cfg
+
+
+def run_partition_file(path, args):
+    """Out-of-core path: ingest (optional) → partition_file → chunked metrics."""
+    from repro.graph.io import EdgeFileReader, ingest_text
+
+    if args.oracle:
+        raise SystemExit(
+            "--oracle (the sequential Algorithm-1 reference) has no "
+            "out-of-core driver; run it on a generator preset instead"
+        )
+    if args.backend in ("batched", "loop"):
+        print(f"note: --backend {args.backend} has no file-driven equivalent; "
+              "using 'auto' (baselines always run the chunked masked loop)")
+    ingest_tmp = None
+    if args.ingest:
+        # The cache name keys on --relabel: the two settings produce
+        # different id spaces, so they must never reuse each other's binary.
+        suffix = ".relabel.adw" if args.relabel else ".adw"
+        binary = path + suffix
+        if not os.access(os.path.dirname(os.path.abspath(path)) or ".", os.W_OK):
+            # Read-only dataset mount: put the binary in the spill dir (kept)
+            # or a temp dir the end of the run removes.
+            if args.spill_dir is None:
+                ingest_tmp = tempfile.mkdtemp(prefix="adwise-ingest-")
+            else:
+                os.makedirs(args.spill_dir, exist_ok=True)
+            binary = os.path.join(
+                args.spill_dir or ingest_tmp, os.path.basename(path) + suffix
+            )
+        if (os.path.exists(binary)
+                and os.path.getmtime(binary) >= os.path.getmtime(path)):
+            print(f"reusing up-to-date binary {binary} (delete it to re-ingest)")
+        else:
+            rep = ingest_text(path, binary, relabel=args.relabel)
+            mb = rep.bytes_read / 1e6
+            print(
+                f"ingested {path}: {rep.num_edges} edges, {rep.num_vertices} "
+                f"vertices, {rep.comment_lines} comments, {rep.blank_lines} "
+                f"blanks in {rep.wall_s:.2f}s "
+                f"({mb / max(rep.wall_s, 1e-9):.1f} MB/s) -> {binary}"
+            )
+        path = binary
+    reader = EdgeFileReader(path)
+    print(
+        f"graph={path} |V|={reader.num_vertices} |E|={reader.num_edges} "
+        f"k={args.k} (out-of-core, chunk={args.chunk_edges})"
+    )
+    backend = args.backend if args.backend not in ("batched", "loop") else "auto"
+    spill_tmp = None if args.spill_dir else tempfile.mkdtemp(prefix="adwise-oocore-")
+    res = partition_file(
+        reader, args.strategy, args.k, z=args.parallel,
+        spread=args.spread if args.parallel > 1 else None, seed=args.seed,
+        chunk_edges=args.chunk_edges, backend=backend,
+        spill_dir=args.spill_dir or spill_tmp,
+        **strategy_cfg_kwargs(args),
+    )
+    return reader, res, spill_tmp, ingest_tmp
 
 
 def run_partition(edges, n, args):
@@ -90,7 +179,30 @@ def run_partition(edges, n, args):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--graph", default="brain_like")
+    ap.add_argument("--graph", default="brain_like",
+                    help="generator preset (brain_like/orkut_like/web_like/...)"
+                         " OR a path to a graph file: a binary edge-stream "
+                         "file (repro.graph.io format) is partitioned "
+                         "out-of-core with bounded edge memory; with "
+                         "--ingest, a SNAP-style text edge list is converted "
+                         "to the binary format first")
+    ap.add_argument("--ingest", action="store_true",
+                    help="treat --graph as a text edge list (u v per line, "
+                         "#/% comments, blank lines) and ingest it to "
+                         "<graph>.adw before partitioning (one pass, "
+                         "O(chunk) memory)")
+    ap.add_argument("--relabel", action="store_true",
+                    help="with --ingest: map vertex ids to a dense [0, n) "
+                         "space in first-appearance order (required for "
+                         "sparse or negative ids)")
+    ap.add_argument("--chunk-edges", type=int, default=1 << 16,
+                    help="out-of-core chunk size: resident edge rows are "
+                         "bounded by ~2x this per spotlight instance "
+                         "(file-driven path only)")
+    ap.add_argument("--spill-dir", default=None,
+                    help="directory for the assignment spill (file-driven "
+                         "path). Default: a temp dir, removed when the run "
+                         "finishes; pass a path to keep the spill")
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--strategy", default="adwise",
                     choices=available_strategies())
@@ -119,22 +231,53 @@ def main(argv=None):
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
 
-    edges, n = make_graph(args.graph, seed=args.seed, scale=args.scale)
-    print(f"graph={args.graph} |V|={n} |E|={len(edges)} k={args.k}")
-
-    res = run_partition(edges, n, args)
+    from_file = args.ingest or os.path.exists(args.graph)
+    reader = None
+    spill_tmp = ingest_tmp = None
+    if from_file:
+        reader, res, spill_tmp, ingest_tmp = run_partition_file(args.graph, args)
+        n = reader.num_vertices
+        edges = None  # never resident during partitioning
+    else:
+        edges, n = make_graph(args.graph, seed=args.seed, scale=args.scale)
+        print(f"graph={args.graph} |V|={n} |E|={len(edges)} k={args.k}")
+        res = run_partition(edges, n, args)
     # The unassigned count is reported explicitly, so quality metrics run
     # under the 'drop' policy: a partial assignment yields numbers over the
     # assigned subset *plus* a nonzero unassigned= field — never a silent
     # mis-count (and never a crash before the count is printed).
     n_unassigned = unassigned_count(res.assign)
-    rep = replica_sets_from_assignment(edges, res.assign, n, args.k,
-                                       unassigned="drop")
-    rd = replication_degree(rep)
-    imb = partition_balance(res.assign, args.k, unassigned="drop")
+    if from_file:
+        # Chunked metric accumulation: the quality numbers for a file-driven
+        # run never materialize the edge array either.
+        from repro.graph import quality_from_chunks
+
+        assign = res.assign
+        pairs = (
+            (chunk, assign[s : s + len(chunk)])
+            for s, chunk in zip(
+                range(0, reader.num_edges, args.chunk_edges),
+                reader.chunks(args.chunk_edges),
+            )
+        )
+        q = quality_from_chunks(pairs, n, args.k, unassigned="drop")
+        rd, imb = q["replication_degree"], q["imbalance"]
+    else:
+        rep = replica_sets_from_assignment(edges, res.assign, n, args.k,
+                                           unassigned="drop")
+        rd = replication_degree(rep)
+        imb = partition_balance(res.assign, args.k, unassigned="drop")
     t_part = res.stats.get("wall_time_s", 0.0)
     print(f"partitioner={args.strategy} RD={rd:.3f} imbalance={imb:.4f} "
           f"unassigned={n_unassigned} partition_latency={t_part:.2f}s")
+    if from_file:
+        print(
+            f"io: {res.stats['rows_read']} rows read "
+            f"({res.stats['stream_reads_measured']} stream reads, billed "
+            f"{res.stats['stream_reads']}), io_wall={res.stats['io_wall_s']:.2f}s, "
+            f"resident edges <= {res.stats['peak_resident_edges']}, "
+            f"spill={res.stats['spill_path']}"
+        )
 
     out = dict(
         graph=args.graph, strategy=args.strategy, k=args.k,
@@ -146,6 +289,12 @@ def main(argv=None):
                    and all(isinstance(x, (int, float)) for x in v))},
     )
     if args.workload != "none":
+        if from_file:
+            # Partitioning ran out-of-core; the *processing* engine builds a
+            # resident partitioned graph, so the edges are loaded only now.
+            print("loading edges for the processing engine (partitioning "
+                  "itself ran out-of-core)")
+            edges = reader.read_all()
         g = build_partitioned_graph(edges, res.assign, n, args.k)
         t0 = time.perf_counter()
         if args.workload == "pagerank":
@@ -174,6 +323,17 @@ def main(argv=None):
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
+    if from_file:
+        # The temp spill (|E|*4 bytes) dies with the run; metrics and the
+        # workload are done with it (POSIX keeps the live mapping valid past
+        # the unlink). --spill-dir keeps it instead. The reader FD always
+        # closes (in-process callers — benches, tests — must not leak one
+        # per run); the ingest temp dir follows the spill's lifetime.
+        reader.close()
+        if spill_tmp is not None:
+            shutil.rmtree(spill_tmp, ignore_errors=True)
+        if ingest_tmp is not None:
+            shutil.rmtree(ingest_tmp, ignore_errors=True)
     return out
 
 

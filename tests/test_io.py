@@ -1,0 +1,384 @@
+"""Out-of-core I/O subsystem: binary format, text ingest, external shuffle,
+EdgeStream bridges, chunked metric accumulation."""
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.graph import (
+    EdgeStream,
+    make_graph,
+    partition_balance,
+    quality_from_chunks,
+    replica_sets_from_assignment,
+    replica_sets_from_chunks,
+    replication_degree,
+    rmat,
+)
+from repro.graph.io import (
+    HEADER_BYTES,
+    MAGIC,
+    EdgeFileReader,
+    EdgeFileWriter,
+    ingest_text,
+    read_edge_file,
+    shuffle_file,
+    write_edge_file,
+)
+
+from conftest import random_edges
+
+
+@pytest.fixture(scope="module")
+def graph_file(tmp_path_factory):
+    edges, n = make_graph("tiny_social", seed=4)
+    path = str(tmp_path_factory.mktemp("io") / "g.adw")
+    write_edge_file(path, edges, n)
+    return path, edges, n
+
+
+# ----------------------------------------------------------------------------
+# Binary format
+# ----------------------------------------------------------------------------
+
+def test_binary_roundtrip(graph_file):
+    path, edges, n = graph_file
+    with EdgeFileReader(path) as r:
+        assert r.num_edges == len(edges)
+        assert r.num_vertices == n
+        assert (r.read_all() == edges).all()
+        # Bounded-chunk iteration reconstructs the stream.
+        cat = np.concatenate(list(r.chunks(251)))
+        assert (cat == edges).all()
+        # Random-access row ranges, clipped at both ends.
+        assert (r.read(100, 37) == edges[100:137]).all()
+        assert r.read(len(edges) - 3, 100).shape == (3, 2)
+        assert r.read(len(edges) + 5, 10).shape == (0, 2)
+
+
+def test_reader_mmap_mode(graph_file):
+    path, edges, _ = graph_file
+    with EdgeFileReader(path, mmap=True) as r:
+        assert (r.read_all() == edges).all()
+        assert (r.read(7, 9) == edges[7:16]).all()
+
+
+def test_sub_readers_match_split_bounds(graph_file):
+    path, edges, n = graph_file
+    m = len(edges)
+    for z in (1, 3, 7):
+        bounds = EdgeStream.split_bounds(m, z)
+        with EdgeFileReader(path) as r:
+            subs = r.split(z)
+            assert len(subs) == z
+            for i, s in enumerate(subs):
+                lo, hi = int(bounds[i]), int(bounds[i + 1])
+                assert s.num_edges == hi - lo
+                assert (s.read_all() == edges[lo:hi]).all()
+                # Nested sub-ranges address locally.
+                if s.num_edges >= 2:
+                    assert (s.sub(1, s.num_edges).read_all() == edges[lo + 1 : hi]).all()
+
+
+def test_reader_io_accounting(graph_file):
+    path, edges, _ = graph_file
+    with EdgeFileReader(path) as r:
+        subs = r.split(2)
+        for s in subs:
+            for _ in s.chunks(100):
+                pass
+        # Sub-reader IO flows to the root counters.
+        assert r.rows_read == len(edges)
+        assert r.read_seconds >= 0.0
+
+
+def test_writer_streams_and_infers_n(tmp_path):
+    path = str(tmp_path / "w.adw")
+    rng = np.random.default_rng(0)
+    chunks = [random_edges(rng, 50, 40) for _ in range(5)]
+    with EdgeFileWriter(path) as w:
+        for c in chunks:
+            w.append(c)
+    all_edges = np.concatenate(chunks)
+    got, n = read_edge_file(path)
+    assert (got == all_edges).all()
+    assert n == int(all_edges.max()) + 1
+
+
+def test_version_and_magic_rejection(tmp_path):
+    header_fmt = "<8sIIQQQ"
+    bad_version = str(tmp_path / "v99.adw")
+    with open(bad_version, "wb") as f:
+        f.write(struct.pack(header_fmt, MAGIC, 99, 1, 0, 0, 0).ljust(HEADER_BYTES, b"\0"))
+    with pytest.raises(ValueError, match="version 99"):
+        EdgeFileReader(bad_version)
+
+    bad_magic = str(tmp_path / "magic.adw")
+    with open(bad_magic, "wb") as f:
+        f.write(struct.pack(header_fmt, b"NOTADWSE", 1, 1, 0, 0, 0).ljust(HEADER_BYTES, b"\0"))
+    with pytest.raises(ValueError, match="not an ADWISE"):
+        EdgeFileReader(bad_magic)
+
+    bad_dtype = str(tmp_path / "dtype.adw")
+    with open(bad_dtype, "wb") as f:
+        f.write(struct.pack(header_fmt, MAGIC, 1, 7, 0, 0, 0).ljust(HEADER_BYTES, b"\0"))
+    with pytest.raises(ValueError, match="dtype"):
+        EdgeFileReader(bad_dtype)
+
+    truncated = str(tmp_path / "trunc.adw")
+    with open(truncated, "wb") as f:
+        f.write(struct.pack(header_fmt, MAGIC, 1, 1, 1000, 10, 0).ljust(HEADER_BYTES, b"\0"))
+        f.write(b"\0" * 16)  # 2 rows of payload, header claims 1000
+    with pytest.raises(ValueError, match="truncated"):
+        EdgeFileReader(truncated)
+
+    short = str(tmp_path / "short.adw")
+    with open(short, "wb") as f:
+        f.write(b"ADW")
+    with pytest.raises(ValueError, match="truncated header"):
+        EdgeFileReader(short)
+
+
+# ----------------------------------------------------------------------------
+# Text ingest
+# ----------------------------------------------------------------------------
+
+_ADVERSARIAL = """# SNAP-style comment
+% matrix-market-style comment
+// c-style comment
+
+5\t7
+  7   5
+3 3
+5 7 99 extra fields ignored
+
+\t
+9\t2
+"""
+
+
+def test_ingest_adversarial(tmp_path):
+    src = str(tmp_path / "adv.txt")
+    dst = str(tmp_path / "adv.adw")
+    with open(src, "w") as f:
+        f.write(_ADVERSARIAL)
+    rep = ingest_text(src, dst)
+    edges, n = read_edge_file(dst)
+    # Self-loop and the duplicate (5,7) are preserved: the file IS the stream.
+    expect = np.array([[5, 7], [7, 5], [3, 3], [5, 7], [9, 2]], np.int32)
+    assert (edges == expect).all()
+    assert n == 10  # max id + 1 inferred
+    assert rep.comment_lines == 3
+    assert rep.blank_lines == 3  # empty line, whitespace-only line, trailing
+    assert rep.num_edges == 5
+
+
+def test_ingest_relabel_dense_first_appearance(tmp_path):
+    src = str(tmp_path / "sparse.txt")
+    dst = str(tmp_path / "sparse.adw")
+    with open(src, "w") as f:
+        f.write("1000000 42\n42 -3\n1000000 7\n")
+    with pytest.raises(ValueError, match="negative"):
+        ingest_text(src, dst)
+    rep = ingest_text(src, dst, relabel=True)
+    edges, n = read_edge_file(dst)
+    # Dense ids in first-appearance order: 1000000->0, 42->1, -3->2, 7->3.
+    assert (edges == np.array([[0, 1], [1, 2], [0, 3]])).all()
+    assert n == 4 and rep.num_vertices == 4
+
+
+def test_ingest_malformed_line_reports_position(tmp_path):
+    src = str(tmp_path / "bad.txt")
+    dst = str(tmp_path / "bad.adw")
+    with open(src, "w") as f:
+        f.write("1 2\n# ok\nonly_one_field\n")
+    with pytest.raises(ValueError, match=r"bad\.txt:3"):
+        ingest_text(src, dst)
+    # A failed ingest must not leave a valid-looking truncated binary behind.
+    assert not os.path.exists(dst)
+    with open(src, "w") as f:
+        f.write("1 2\n3 notanint\n")
+    with pytest.raises(ValueError, match=r"bad\.txt:2"):
+        ingest_text(src, dst)
+    assert not os.path.exists(dst)
+
+
+def test_writer_abort_on_exception(tmp_path):
+    path = str(tmp_path / "partial.adw")
+    with pytest.raises(RuntimeError):
+        with EdgeFileWriter(path) as w:
+            w.append(np.array([[0, 1]], np.int32))
+            raise RuntimeError("body failed")
+    assert not os.path.exists(path)
+
+
+def test_ingest_chunking_invariance(tmp_path):
+    """The chunk_lines bound never changes the output stream."""
+    rng = np.random.default_rng(5)
+    edges = random_edges(rng, 40, 200)
+    src = str(tmp_path / "c.txt")
+    with open(src, "w") as f:
+        for i, (u, v) in enumerate(edges):
+            if i % 17 == 0:
+                f.write("# interleaved comment\n")
+            f.write(f"{u} {v}\n")
+    outs = []
+    for chunk_lines in (3, 64, 10_000):
+        dst = str(tmp_path / f"c{chunk_lines}.adw")
+        ingest_text(src, dst, chunk_lines=chunk_lines)
+        outs.append(read_edge_file(dst))
+    for got, n in outs:
+        assert (got == edges).all()
+        assert n == outs[0][1]
+    # Relabeled: the incremental id table must give the same global
+    # first-appearance mapping for every chunking.
+    relabeled = []
+    for chunk_lines in (3, 10_000):
+        dst = str(tmp_path / f"r{chunk_lines}.adw")
+        ingest_text(src, dst, relabel=True, chunk_lines=chunk_lines)
+        relabeled.append(read_edge_file(dst))
+    assert (relabeled[0][0] == relabeled[1][0]).all()
+    assert relabeled[0][1] == relabeled[1][1]
+    # And the mapping is first-appearance order: sequential dense ids.
+    flat = relabeled[0][0].reshape(-1)
+    first_seen = flat[np.sort(np.unique(flat, return_index=True)[1])]
+    assert (first_seen == np.arange(relabeled[0][1])).all()
+
+
+def test_ingest_pinned_num_vertices(tmp_path):
+    src = str(tmp_path / "p.txt")
+    dst = str(tmp_path / "p.adw")
+    with open(src, "w") as f:
+        f.write("0 1\n1 2\n")
+    ingest_text(src, dst, num_vertices=500)
+    _, n = read_edge_file(dst)
+    assert n == 500
+    # Ids beyond a pinned n fail at ingest time, not at partition time.
+    with pytest.raises(ValueError, match="pinned num_vertices"):
+        ingest_text(src, dst, num_vertices=2)
+
+
+# ----------------------------------------------------------------------------
+# External shuffle
+# ----------------------------------------------------------------------------
+
+def test_shuffle_is_permutation_and_deterministic(graph_file, tmp_path):
+    path, edges, n = graph_file
+    a = str(tmp_path / "a.adw")
+    b = str(tmp_path / "b.adw")
+    shuffle_file(path, a, seed=3, chunk_edges=300)
+    shuffle_file(path, b, seed=3, chunk_edges=300)
+    got_a, n_a = read_edge_file(a)
+    got_b, _ = read_edge_file(b)
+    assert n_a == n
+    assert (got_a == got_b).all(), "same seed must give the same permutation"
+    assert got_a.shape == edges.shape
+    assert not (got_a == edges).all(), "shuffle must not be the identity"
+    order = lambda e: e[np.lexsort((e[:, 1], e[:, 0]))]
+    assert (order(got_a) == order(edges)).all(), "rows must be a permutation"
+    c = str(tmp_path / "c.adw")
+    shuffle_file(path, c, seed=4, chunk_edges=300)
+    got_c, _ = read_edge_file(c)
+    assert not (got_c == got_a).all(), "different seeds, different permutation"
+
+
+def test_shuffle_recursive_buckets(graph_file, tmp_path, monkeypatch):
+    """With the open-file cap forced to 2, buckets overflow the chunk budget
+    and must be re-scattered recursively — still a uniform permutation."""
+    import repro.graph.io.shuffle as sh
+
+    monkeypatch.setattr(sh, "_MAX_OPEN", 2)
+    path, edges, _ = graph_file
+    out = str(tmp_path / "rec.adw")
+    shuffle_file(path, out, seed=9, chunk_edges=150)
+    got, _ = read_edge_file(out)
+    order = lambda e: e[np.lexsort((e[:, 1], e[:, 0]))]
+    assert (order(got) == order(edges)).all()
+    assert not (got == edges).all()
+
+
+# ----------------------------------------------------------------------------
+# EdgeStream bridges + the NpzFile leak fix
+# ----------------------------------------------------------------------------
+
+def test_edgestream_file_bridges(tmp_path, tiny_social):
+    edges, n = tiny_social
+    stream = EdgeStream(edges, n)
+    p = str(tmp_path / "bridge.adw")
+    stream.to_file(p)
+    back = EdgeStream.from_file(p)
+    assert back.num_vertices == n and (back.edges == stream.edges).all()
+
+
+def test_edgestream_load_owns_arrays(tmp_path, tiny_social):
+    """`load` copies out of the NpzFile under a context manager: the handle
+    is closed and the returned arrays are owned (mutable, no lazy backing)."""
+    edges, n = tiny_social
+    p = str(tmp_path / "s.npz")
+    EdgeStream(edges, n).save(p)
+    loaded = EdgeStream.load(p)
+    assert (loaded.edges == EdgeStream(edges, n).edges).all()
+    # Owned data: mutating must not raise and must not touch the file.
+    loaded.edges[0, 0] = 123
+    again = EdgeStream.load(p)
+    assert again.edges[0, 0] != 123 or edges[0, 0] == 123
+
+
+# ----------------------------------------------------------------------------
+# Chunked metric accumulation
+# ----------------------------------------------------------------------------
+
+def test_chunked_metrics_match_in_memory(graph_file):
+    path, edges, n = graph_file
+    k = 8
+    rng = np.random.default_rng(0)
+    assign = rng.integers(0, k, len(edges)).astype(np.int32)
+    ref_rep = replica_sets_from_assignment(edges, assign, n, k)
+    with EdgeFileReader(path) as r:
+        pairs = (
+            (chunk, assign[s : s + len(chunk)])
+            for s, chunk in zip(range(0, len(edges), 301), r.chunks(301))
+        )
+        rep = replica_sets_from_chunks(pairs, n, k)
+    assert (rep == ref_rep).all()
+
+    with EdgeFileReader(path) as r:
+        pairs = (
+            (chunk, assign[s : s + len(chunk)])
+            for s, chunk in zip(range(0, len(edges), 301), r.chunks(301))
+        )
+        q = quality_from_chunks(pairs, n, k)
+    assert q["replication_degree"] == replication_degree(ref_rep)
+    assert q["imbalance"] == partition_balance(assign, k)
+    assert q["unassigned"] == 0
+
+
+def test_chunked_metrics_unassigned_policies(graph_file):
+    path, edges, n = graph_file
+    k = 4
+    assign = np.zeros(len(edges), np.int32)
+    assign[::5] = -1
+    with EdgeFileReader(path) as r:
+        pairs = ((c, assign[s : s + len(c)])
+                 for s, c in zip(range(0, len(edges), 200), r.chunks(200)))
+        with pytest.raises(ValueError, match="unassigned"):
+            replica_sets_from_chunks(pairs, n, k)
+    with EdgeFileReader(path) as r:
+        pairs = ((c, assign[s : s + len(c)])
+                 for s, c in zip(range(0, len(edges), 200), r.chunks(200)))
+        q = quality_from_chunks(pairs, n, k, unassigned="drop")
+    assert q["unassigned"] == int((assign < 0).sum())
+
+
+def test_rmat_roundtrip_property():
+    """Random R-MAT graphs survive the write→read round trip bit-for-bit."""
+    for seed in range(3):
+        import tempfile
+
+        edges, n = rmat(8, 500, seed=seed)
+        with tempfile.TemporaryDirectory() as td:
+            p = os.path.join(td, "r.adw")
+            write_edge_file(p, edges, n)
+            got, n2 = read_edge_file(p)
+            assert n2 == n and (got == edges).all()

@@ -1,0 +1,381 @@
+"""Out-of-core partitioning driver: registry-wide bit-parity with the
+in-memory path (z=1 and z>1 spotlight), bounded resident edge memory, and
+the 2PS clustering `lax.scan` port against its numpy oracle."""
+import os
+import weakref
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdwiseConfig,
+    partition_file,
+    run_partitioner,
+    spotlight_partition,
+)
+from repro.core.restream import (
+    VertexClusteringState,
+    _degrees,
+    streaming_vertex_clustering,
+    streaming_vertex_clustering_np,
+)
+from repro.engine import partition_latency
+from repro.graph import rmat
+from repro.graph.io import EdgeFileReader, write_edge_file
+
+from conftest import random_edges
+
+K = 8
+WMAX = 8  # one shared window_max so scan compilations are reused across tests
+
+
+def _write(tmp_path, edges, n, name="g.adw"):
+    p = str(tmp_path / name)
+    write_edge_file(p, edges, n)
+    return p
+
+
+@pytest.fixture(scope="module")
+def rmat_file(tmp_path_factory):
+    """One moderately sized R-MAT graph shared by the parity tests."""
+    edges, n = rmat(9, 2500, seed=13)
+    td = tmp_path_factory.mktemp("oocore")
+    path = str(td / "rmat.adw")
+    write_edge_file(path, edges, n)
+    return path, edges, n
+
+
+# ----------------------------------------------------------------------------
+# Registry-wide parity: file-driven == in-memory, z == 1
+# ----------------------------------------------------------------------------
+
+_Z1_CASES = [
+    ("hash", {}),
+    ("grid", {}),
+    ("dbh", {}),
+    ("hdrf", {}),
+    ("hdrf", dict(lam=1.5)),
+    ("greedy", {}),
+    ("adwise", dict(window_max=WMAX)),
+    ("2ps", dict(window_max=WMAX)),
+    ("adwise-restream", dict(window_max=WMAX, passes=2)),
+]
+
+
+@pytest.mark.parametrize("strategy,cfg", _Z1_CASES,
+                         ids=[f"{s}-{i}" for i, (s, _) in enumerate(_Z1_CASES)])
+def test_partition_file_parity_z1(rmat_file, tmp_path, strategy, cfg):
+    path, edges, n = rmat_file
+    ref = run_partitioner(strategy, edges, n, K, seed=0, **cfg)
+    with EdgeFileReader(path) as r:
+        res = partition_file(r, strategy, K, seed=0, chunk_edges=400,
+                             spill_dir=str(tmp_path), **cfg)
+    assert (np.asarray(res.assign) == ref.assign).all(), (
+        f"{strategy}: file-driven assignment diverged from in-memory"
+    )
+    assert res.stats["unassigned"] == 0
+    assert res.stats["rows_read"] >= len(edges)  # at least one full pass
+    assert res.stats["io_wall_s"] >= 0.0
+
+
+def test_partition_file_parity_random_rmat_property(tmp_path):
+    """Random R-MAT streams (varying skew/seed): the cheap strategies stay
+    bit-identical through the file path — the registry-wide property."""
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        edges, n = rmat(8, int(rng.integers(200, 900)),
+                        a=float(rng.uniform(0.3, 0.6)), seed=seed)
+        if len(edges) == 0:
+            continue
+        path = _write(tmp_path, edges, n, f"p{seed}.adw")
+        chunk = int(rng.integers(37, 300))
+        for strategy in ("hash", "grid", "dbh", "hdrf", "greedy"):
+            ref = run_partitioner(strategy, edges, n, K, seed=seed)
+            with EdgeFileReader(path) as r:
+                res = partition_file(r, strategy, K, seed=seed,
+                                     chunk_edges=chunk,
+                                     spill_dir=str(tmp_path / f"s{seed}{strategy}"))
+            assert (np.asarray(res.assign) == ref.assign).all(), (
+                strategy, seed, chunk)
+
+
+def test_partition_file_chunk_size_invariance(rmat_file, tmp_path):
+    """The chunk bound never changes the ADWISE scan's output."""
+    path, edges, n = rmat_file
+    cfg = dict(window_max=WMAX)
+    outs = []
+    for chunk in (400, 997):
+        with EdgeFileReader(path) as r:
+            res = partition_file(r, "adwise", K, seed=0, chunk_edges=chunk,
+                                 spill_dir=str(tmp_path / f"c{chunk}"), **cfg)
+        outs.append(np.asarray(res.assign).copy())
+    assert (outs[0] == outs[1]).all()
+
+
+# ----------------------------------------------------------------------------
+# z > 1 spotlight parity (the acceptance configuration)
+# ----------------------------------------------------------------------------
+
+_SPOT_CASES = [
+    ("hash", {}, None),
+    ("dbh", {}, None),
+    ("hdrf", {}, None),
+    ("greedy", {}, None),
+    ("2ps", dict(window_max=WMAX), dict(window_max=WMAX)),
+    ("adwise", dict(window_max=WMAX), None),
+    ("adwise-restream", dict(window_max=WMAX, passes=2),
+     dict(window_max=WMAX, passes=2)),
+]
+
+
+@pytest.mark.parametrize("strategy,cfg,scfg", _SPOT_CASES,
+                         ids=[s for s, _, _ in _SPOT_CASES])
+def test_partition_file_parity_spotlight(rmat_file, tmp_path, strategy, cfg, scfg):
+    """z=4, spread=2: file-driven spotlight == in-memory spotlight for every
+    registry strategy (batched for the adwise family — per-instance readers
+    over the split_bounds byte ranges — masked loop for the baselines)."""
+    path, edges, n = rmat_file
+    z, spread = 4, 2
+    if strategy == "adwise":
+        ref = spotlight_partition(edges, n, K, z=z, spread=spread,
+                                  strategy="adwise",
+                                  cfg=AdwiseConfig(k=K, window_max=WMAX), seed=0)
+    else:
+        ref = spotlight_partition(edges, n, K, z=z, spread=spread,
+                                  strategy=strategy, seed=0, strategy_cfg=scfg)
+    with EdgeFileReader(path) as r:
+        res = partition_file(r, strategy, K, z=z, spread=spread, seed=0,
+                             chunk_edges=400, spill_dir=str(tmp_path), **cfg)
+    assert (np.asarray(res.assign) == ref.assign).all(), (
+        f"{strategy}: file-driven z={z} spotlight diverged from in-memory"
+    )
+    assert res.stats["z"] == z
+
+
+def test_partition_file_on_sub_reader(rmat_file, tmp_path):
+    """partition_file accepts a row-range sub-reader, including z>1 (the
+    sub-reader re-splits its own range and forwards IO accounting)."""
+    path, edges, n = rmat_file
+    half = len(edges) // 2
+    ref = spotlight_partition(edges[:half], n, K, z=2, spread=4,
+                              strategy="hdrf", seed=0)
+    with EdgeFileReader(path) as r:
+        sub = r.sub(0, half)
+        res = partition_file(sub, "hdrf", K, z=2, spread=4, seed=0,
+                             chunk_edges=300, spill_dir=str(tmp_path))
+        assert (np.asarray(res.assign) == ref.assign).all()
+        assert res.stats["rows_read"] == half  # accounting flows to the root
+
+
+def test_partition_file_spotlight_rejects_grid(rmat_file, tmp_path):
+    path, _, _ = rmat_file
+    with EdgeFileReader(path) as r:
+        with pytest.raises(ValueError, match="spotlight"):
+            partition_file(r, "grid", K, z=4, spread=2,
+                           spill_dir=str(tmp_path))
+
+
+# ----------------------------------------------------------------------------
+# Bounded resident edge memory (counting reader)
+# ----------------------------------------------------------------------------
+
+
+class CountingReader:
+    """Reader proxy that counts the edge rows of every array it has handed
+    out that is still alive (weakref finalizers; CPython refcounting frees
+    drained chunks promptly). ``peak`` is the high-water mark."""
+
+    def __init__(self, inner, counter=None):
+        self._inner = inner
+        self._c = counter if counter is not None else {"live": 0, "peak": 0, "max_req": 0}
+        self.num_edges = inner.num_edges
+        self.num_vertices = inner.num_vertices
+        self.path = getattr(inner, "path", None)
+
+    # shared-counter stats
+    @property
+    def peak(self):
+        return self._c["peak"]
+
+    @property
+    def max_request(self):
+        return self._c["max_req"]
+
+    @property
+    def rows_read(self):
+        root = self._inner
+        while hasattr(root, "_parent"):
+            root = root._parent
+        return getattr(root, "rows_read", 0)
+
+    @property
+    def read_seconds(self):
+        root = self._inner
+        while hasattr(root, "_parent"):
+            root = root._parent
+        return getattr(root, "read_seconds", 0.0)
+
+    def read(self, start, count):
+        arr = self._inner.read(start, count)
+        c = self._c
+        rows = len(arr)
+        c["live"] += rows
+        c["peak"] = max(c["peak"], c["live"])
+        c["max_req"] = max(c["max_req"], rows)
+        weakref.finalize(arr, CountingReader._dec, c, rows)
+        return arr
+
+    @staticmethod
+    def _dec(c, rows):
+        c["live"] -= rows
+
+    def chunks(self, chunk_edges):
+        for start in range(0, self.num_edges, chunk_edges):
+            yield self.read(start, chunk_edges)
+
+    def read_all(self):
+        return self.read(0, self.num_edges)
+
+    def sub(self, start, stop):
+        return CountingReader(self._inner.sub(start, stop), self._c)
+
+    def split(self, z):
+        return [CountingReader(s, self._c) for s in self._inner.split(z)]
+
+
+@pytest.mark.parametrize("strategy,cfg,z", [
+    ("adwise", dict(window_max=WMAX), 1),
+    ("adwise-restream", dict(window_max=WMAX, passes=2), 1),
+    ("hdrf", {}, 1),
+    ("2ps", dict(window_max=WMAX), 1),
+    ("adwise", dict(window_max=WMAX), 4),
+])
+def test_partition_file_memory_bounded(tmp_path, strategy, cfg, z):
+    """Peak live edge rows handed out by the reader stay O(chunk) — far
+    below m — while the output still matches the in-memory path."""
+    edges, n = rmat(9, 2500, seed=13)
+    m = len(edges)
+    path = _write(tmp_path, edges, n)
+    chunk = 400
+    with EdgeFileReader(path) as inner:
+        r = CountingReader(inner)
+        res = partition_file(r, strategy, K, z=z,
+                             spread=2 if z > 1 else None, seed=0,
+                             chunk_edges=chunk, spill_dir=str(tmp_path / "sp"),
+                             **cfg)
+    # Buffer refills copy the chunk out and drop it; at most a couple of
+    # read results are alive at once per instance.
+    bound = 3 * max(chunk, WMAX + 1) * max(z, 1)
+    assert r.max_request <= max(chunk, WMAX + 1), (
+        f"a single read pulled {r.max_request} rows (> chunk bound)"
+    )
+    assert r.peak <= bound, f"peak live rows {r.peak} > bound {bound}"
+    assert r.peak < m / 2, "memory bound is not meaningfully below m"
+    assert res.stats["peak_resident_edges"] < 4 * chunk * max(z, 1) + 1
+    # And bounded-memory execution still matches the resident-array path.
+    if z == 1:
+        ref = run_partitioner(strategy, edges, n, K, seed=0, **cfg)
+        assert (np.asarray(res.assign) == ref.assign).all()
+
+
+# ----------------------------------------------------------------------------
+# IO accounting drives the latency model
+# ----------------------------------------------------------------------------
+
+def test_stream_reads_billed_per_strategy(rmat_file, tmp_path):
+    path, edges, n = rmat_file
+    m = len(edges)
+    expected = {"hash": 1, "dbh": 2, "2ps": 3}
+    for strategy, reads in expected.items():
+        cfg = dict(window_max=WMAX) if strategy == "2ps" else {}
+        with EdgeFileReader(path) as r:
+            res = partition_file(r, strategy, K, seed=0, chunk_edges=500,
+                                 spill_dir=str(tmp_path / strategy), **cfg)
+        assert res.stats["stream_reads"] == reads, strategy
+        assert res.stats["stream_reads_measured"] == reads, strategy
+        assert res.stats["rows_read"] == reads * m, strategy
+        # partition_latency bills the measured read count.
+        lat = partition_latency(res.stats, m, K)
+        base = partition_latency(dict(res.stats, stream_reads=1), m, K)
+        assert lat >= base
+
+
+def test_restream_file_stats(rmat_file, tmp_path):
+    path, edges, n = rmat_file
+    with EdgeFileReader(path) as r:
+        res = partition_file(r, "adwise-restream", K, seed=0, chunk_edges=500,
+                             spill_dir=str(tmp_path), window_max=WMAX,
+                             passes=3, keep_best=True)
+    s = res.stats
+    assert s["passes_run"] == 3 and s["stream_reads"] == 3
+    assert len(s["pass_rd"]) == 3
+    # Intermediate pass spills were deleted; only the final spill remains.
+    spill_files = [f for f in os.listdir(str(tmp_path)) if f.endswith(".i32")]
+    assert spill_files == ["assign.i32"], spill_files
+    # keep_best: final quality equals the best pass's.
+    ref = run_partitioner("adwise-restream", edges, n, K, seed=0,
+                          window_max=WMAX, passes=3, keep_best=True)
+    assert (np.asarray(res.assign) == ref.assign).all()
+    assert s["pass_rd"] == ref.stats["pass_rd"]
+    assert s["best_pass"] == ref.stats["best_pass"]
+
+
+def test_partition_file_empty_and_errors(tmp_path):
+    p = _write(tmp_path, np.zeros((0, 2), np.int32), 5, "empty.adw")
+    with EdgeFileReader(p) as r:
+        res = partition_file(r, "adwise", K, spill_dir=str(tmp_path))
+    assert res.assign.shape == (0,)
+
+    edges, n = rmat(8, 200, seed=0)
+    p = _write(tmp_path, edges, n, "e.adw")
+    with EdgeFileReader(p) as r:
+        with pytest.raises(KeyError, match="out-of-core"):
+            partition_file(r, "nope", K, spill_dir=str(tmp_path))
+        with pytest.raises(TypeError, match="unknown config"):
+            partition_file(r, "adwise", K, bogus=1, spill_dir=str(tmp_path))
+        with pytest.raises(TypeError, match="unknown config"):
+            partition_file(r, "hdrf", K, bogus=1, spill_dir=str(tmp_path))
+
+
+# ----------------------------------------------------------------------------
+# 2PS clustering: lax.scan port == numpy oracle
+# ----------------------------------------------------------------------------
+
+def test_clustering_scan_matches_numpy_oracle_adversarial():
+    """Self-loops, duplicate edges, hubs, random streams: identical cluster
+    ids AND identical volumes at every k."""
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(5, 90))
+        m = int(rng.integers(1, 400))
+        u = rng.integers(0, n, m)
+        v = np.where(rng.random(m) < 0.15, u, rng.integers(0, n, m))  # loops
+        edges = np.stack([u, v], 1).astype(np.int32)
+        for k in (2, 5):
+            cl_np, vols_np = streaming_vertex_clustering_np(edges, n, k)
+            cl_sc, vols_sc = streaming_vertex_clustering(edges, n, k)
+            assert (cl_np == cl_sc).all(), (seed, k)
+            assert len(vols_np) == len(vols_sc)
+            assert (vols_np == vols_sc).all(), (seed, k)
+
+
+def test_clustering_scan_chunking_invariance():
+    rng = np.random.default_rng(2)
+    edges = random_edges(rng, 60, 300)
+    n, k, m = 60, 4, len(edges)
+    one_cl, one_vols = streaming_vertex_clustering(edges, n, k)
+    st = VertexClusteringState(n, k, m, _degrees(edges, n), chunk_edges=71)
+    for s in range(0, m, 71):
+        st.update(edges[s : s + 71])
+    cl, vols = st.finalize()
+    assert (cl == one_cl).all() and (vols == one_vols).all()
+
+
+def test_2ps_registry_uses_scan_port(tiny_graph):
+    """The '2ps' registry entry now runs the scan clustering; its phase-1
+    result equals the oracle, so quality claims carry over unchanged."""
+    edges, n = tiny_graph
+    edges = edges[:1500]
+    cl_np, vols_np = streaming_vertex_clustering_np(edges, n, K)
+    cl_sc, vols_sc = streaming_vertex_clustering(edges, n, K)
+    assert (cl_np == cl_sc).all() and (vols_np == vols_sc).all()

@@ -28,3 +28,7 @@ python -m benchmarks.run --smoke
 # engine mesh on 2 fake CPU devices, every run.
 XLA_FLAGS="--xla_force_host_platform_device_count=2" \
   python -m benchmarks.bench_scaling --smoke --in-process
+
+# Out-of-core path: text ingest -> binary -> file-driven partitioning in a
+# tmpdir, with bit-parity against the in-memory path asserted inside.
+python -m benchmarks.bench_io --smoke
