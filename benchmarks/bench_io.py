@@ -5,13 +5,18 @@
 
 Everything runs in a tmpdir on an R-MAT graph:
 
-  1. text ingest MB/s (SNAP-style edge list -> binary edge-stream format),
-  2. binary read-through MB/s (bounded-chunk reader) and external shuffle wall,
+  1. text ingest MB/s — the vectorized bytes-level parser against the
+     per-line reference parser (same binary asserted, speedup reported),
+  2. binary read-through MB/s (bounded-chunk reader) and external shuffle
+     wall (hard O(chunk) bucket bound reported from the ShuffleReport),
   3. file-driven vs in-memory partitioning wall for a set of strategies —
      `partition_file` (bounded resident edge memory, spill to disk) against
      the resident-array registry path, with the parity of the two assignments
      asserted (the file path is bit-identical by construction; the bench
-     fails loudly if that ever regresses).
+     fails loudly if that ever regresses). For the ring-buffer scan path the
+     bench also asserts the host→device traffic contract: each stream row
+     ships once (h2d_rows == m), and per-scan-call traffic is the refill
+     size, NOT a full (z, B, 2) buffer re-upload.
 """
 from __future__ import annotations
 
@@ -25,7 +30,13 @@ import numpy as np
 
 from repro.core import partition_file, run_partitioner
 from repro.graph import rmat
-from repro.graph.io import EdgeFileReader, ingest_text, shuffle_file, write_edge_file
+from repro.graph.io import (
+    EdgeFileReader,
+    ingest_text,
+    read_edge_file,
+    shuffle_file,
+    write_edge_file,
+)
 
 
 def main(argv=None):
@@ -55,17 +66,29 @@ def main(argv=None):
     out = dict(m=m, n=n, k=args.k, chunk_edges=args.chunk_edges, rows=[])
 
     with tempfile.TemporaryDirectory() as td:
-        # --- 1) text ingest MB/s -----------------------------------------
+        # --- 1) text ingest MB/s: vectorized vs reference parser ---------
         txt = os.path.join(td, "g.txt")
         with open(txt, "w") as f:
             f.write("# bench graph\n")
             np.savetxt(f, edges, fmt="%d")
         binary = os.path.join(td, "g.adw")
-        rep = ingest_text(txt, binary)
+        rep_py = ingest_text(txt, os.path.join(td, "g_py.adw"),
+                             parser="python")
+        rep = ingest_text(txt, binary, parser="bytes")
+        ref_bin, ref_n = read_edge_file(os.path.join(td, "g_py.adw"))
+        fast_bin, fast_n = read_edge_file(binary)
+        assert (ref_bin == fast_bin).all() and ref_n == fast_n, (
+            "bytes ingester diverged from the per-line reference parser"
+        )
+        mbs_py = rep_py.bytes_read / 1e6 / max(rep_py.wall_s, 1e-9)
         mbs = rep.bytes_read / 1e6 / max(rep.wall_s, 1e-9)
-        print(f"ingest: {m} edges, {rep.bytes_read/1e6:.1f} MB text in "
-              f"{rep.wall_s:.2f}s = {mbs:.1f} MB/s")
+        print(f"ingest: {m} edges, {rep.bytes_read/1e6:.1f} MB text — "
+              f"bytes parser {mbs:.1f} MB/s vs python parser "
+              f"{mbs_py:.1f} MB/s ({mbs / max(mbs_py, 1e-9):.1f}x, "
+              f"parity asserted)")
         out["ingest_mb_s"] = mbs
+        out["ingest_python_mb_s"] = mbs_py
+        out["ingest_speedup"] = mbs / max(mbs_py, 1e-9)
 
         # --- 2) binary read-through + external shuffle -------------------
         with EdgeFileReader(binary) as r:
@@ -79,17 +102,22 @@ def main(argv=None):
         out["read_mb_s"] = read_mbs
         shuf = os.path.join(td, "g_shuf.adw")
         t0 = time.perf_counter()
-        shuffle_file(binary, shuf, seed=1, chunk_edges=args.chunk_edges)
+        shrep = shuffle_file(binary, shuf, seed=1,
+                             chunk_edges=args.chunk_edges)
         t_shuf = time.perf_counter() - t0
+        assert shrep.max_loaded_rows <= shrep.bound_rows
         print(f"external shuffle: {t_shuf:.2f}s "
-              f"({m * 8 / 1e6 / max(t_shuf, 1e-9):.0f} MB/s effective)")
+              f"({m * 8 / 1e6 / max(t_shuf, 1e-9):.0f} MB/s effective, "
+              f"max bucket {shrep.max_loaded_rows} <= hard bound "
+              f"{shrep.bound_rows} rows, depth {shrep.depth})")
         out["shuffle_s"] = t_shuf
+        out["shuffle_max_bucket_rows"] = shrep.max_loaded_rows
 
         # --- 3) file-driven vs in-memory partitioning wall ---------------
         # Rebuild the binary from the in-memory array so both paths see the
         # exact same stream (ingest already guarantees it; belt and braces).
         write_edge_file(binary, edges, n)
-        print("strategy,in_memory_s,file_s,file_io_s,overhead,parity")
+        print("strategy,in_memory_s,file_s,file_io_s,overhead,h2d_rows_per_call,parity")
         for strat in args.strategies:
             cfg = dict(window_max=args.window) if strat == "adwise" else {}
             t0 = time.perf_counter()
@@ -104,12 +132,31 @@ def main(argv=None):
                 t_file = time.perf_counter() - t0
             parity = bool((np.asarray(res.assign) == ref.assign).all())
             assert parity, f"file-driven {strat} diverged from in-memory"
+            h2d_rows = res.stats.get("h2d_rows", 0)
+            calls = res.stats.get("scan_calls", 0)
+            ring_rows = res.stats.get("buffer_rows", 0)
+            h2d_per_call = h2d_rows / calls if calls else 0.0
+            if strat == "adwise":
+                # The device-resident ring's contract: every stream row
+                # ships exactly once, and per-scan-call traffic is the
+                # refill (bounded by max_span), not a (z, B, 2) re-upload.
+                assert h2d_rows == m, (h2d_rows, m)
+                if calls >= 2:
+                    assert h2d_per_call < ring_rows, (
+                        f"h2d per call {h2d_per_call:.0f} should be below "
+                        f"the full ring ({ring_rows} rows) — refill-only "
+                        "uploads regressed"
+                    )
             row = dict(strategy=strat, t_memory_s=t_mem, t_file_s=t_file,
                        io_wall_s=res.stats["io_wall_s"],
-                       overhead=t_file / max(t_mem, 1e-9), parity=parity)
+                       overhead=t_file / max(t_mem, 1e-9), parity=parity,
+                       h2d_rows=int(h2d_rows), scan_calls=int(calls),
+                       ring_rows=int(ring_rows),
+                       h2d_bytes=int(res.stats.get("h2d_bytes", 0)))
             out["rows"].append(row)
             print(f"{strat},{t_mem:.3f},{t_file:.3f},"
-                  f"{res.stats['io_wall_s']:.3f},{row['overhead']:.2f}x,{parity}")
+                  f"{res.stats['io_wall_s']:.3f},{row['overhead']:.2f}x,"
+                  f"{h2d_per_call:.0f}/{ring_rows},{parity}")
 
     if args.json:
         json.dump(out, open(args.json, "w"), indent=1)

@@ -7,12 +7,62 @@
 --smoke exists so CI (and the test suite) can prove every bench entrypoint
 still *runs* — tiny graphs, k=8, minimal steps — without paying benchmark
 wall-clock.
+
+--json-dir DIR additionally writes a machine-readable ``BENCH_<n>.json``
+summary (n auto-increments over the files already in DIR, so a kept
+directory accumulates the perf trajectory run over run): partition walls,
+host→device stream traffic, ingest MB/s, engine supersteps/s, and the raw
+per-bench rows. tools/ci.sh passes ``bench_logs/`` and keeps the file.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
+import re
 import sys
 import time
+
+
+def _next_bench_path(json_dir: str) -> str:
+    os.makedirs(json_dir, exist_ok=True)
+    taken = [
+        int(m.group(1))
+        for f in os.listdir(json_dir)
+        if (m := re.fullmatch(r"BENCH_(\d+)\.json", f))
+    ]
+    return os.path.join(json_dir, f"BENCH_{max(taken, default=-1) + 1}.json")
+
+
+def _summarize(results: dict) -> dict:
+    """The headline numbers the perf trajectory tracks, pulled from the raw
+    bench returns (absent benches simply contribute nothing)."""
+    head: dict = {}
+    io = results.get("io") or {}
+    if io:
+        head["ingest_mb_s"] = io.get("ingest_mb_s")
+        head["ingest_python_mb_s"] = io.get("ingest_python_mb_s")
+        head["ingest_speedup"] = io.get("ingest_speedup")
+        head["read_mb_s"] = io.get("read_mb_s")
+        for row in io.get("rows", []):
+            if row.get("strategy") == "adwise":
+                head["partition_file_wall_s"] = row.get("t_file_s")
+                head["partition_memory_wall_s"] = row.get("t_memory_s")
+                head["h2d_bytes"] = row.get("h2d_bytes")
+                head["h2d_rows_per_call"] = (
+                    row["h2d_rows"] / row["scan_calls"]
+                    if row.get("scan_calls") else None
+                )
+                head["ring_rows"] = row.get("ring_rows")
+    for row in results.get("scaling") or []:
+        head.setdefault("supersteps_per_s", {})[str(row.get("devices"))] = (
+            row.get("supersteps_per_s")
+        )
+        head.setdefault("partition_batched_s", {})[str(row.get("devices"))] = (
+            row.get("t_partition_batched_s")
+        )
+    return head
 
 
 def main(argv=None):
@@ -20,6 +70,9 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="fastest possible pass over every bench entrypoint")
+    ap.add_argument("--json-dir", default=None,
+                    help="write a BENCH_<n>.json machine-readable summary "
+                         "into this directory (auto-incrementing n)")
     args = ap.parse_args(argv)
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -39,12 +92,13 @@ def main(argv=None):
         roofline,
     )
 
+    results: dict = {}
     if args.smoke:
         k = ["--k", "8"]
         print("=== Fig.7a-f: total latency (smoke) ===")
-        bench_total_latency.main(["--scale", "0.006", *k,
-                                  "--graphs", "brain_like",
-                                  "--windows", "8", "--baselines", "dbh"])
+        results["total_latency"] = bench_total_latency.main(
+            ["--scale", "0.006", *k, "--graphs", "brain_like",
+             "--windows", "8", "--baselines", "dbh"])
         print("\n=== Fig.7g-i: replication degree (smoke) ===")
         bench_replication.main(["--scale", "0.006", *k, "--graphs", "brain_like"])
         print("\n=== re-streaming pass sweep (smoke) ===")
@@ -53,9 +107,9 @@ def main(argv=None):
         print("\n=== Fig.8: spotlight spread sweep (smoke) ===")
         bench_spotlight.main(["--scale", "0.01", *k, "--z", "4"])
         print("\n=== multi-device scaling (smoke: N in {1,2}) ===")
-        bench_scaling.main(["--smoke"])
-        print("\n=== out-of-core I/O: ingest + file-driven partitioning (smoke) ===")
-        bench_io.main(["--smoke"])
+        results["scaling"] = bench_scaling.main(["--smoke"])
+        print("\n=== out-of-core I/O: ingest + ring-buffer partitioning (smoke) ===")
+        results["io"] = bench_io.main(["--smoke"])
         print("\n=== §III ablations (smoke) ===")
         bench_window.main(["--scale", "0.004", *k])
         print("\n=== ADWISE-balance MoE routing (smoke) ===")
@@ -65,29 +119,45 @@ def main(argv=None):
         print("\n=== roofline table ===")
         roofline.main([])
         print(f"\nsmoke pass over all bench entrypoints done in {time.time()-t0:.0f}s")
-        return 0
+    else:
+        print("=== Fig.7a-f: total latency (partition + modeled processing) ===")
+        results["total_latency"] = bench_total_latency.main(["--scale", str(scale)])
+        print("\n=== Fig.7g-i: replication degree per strategy and L ===")
+        bench_replication.main(["--scale", str(scale)])
+        print("\n=== re-streaming: RD vs pass count (adwise-restream / 2ps) ===")
+        bench_restream.main(["--scale", str(scale / 2)])
+        print("\n=== Fig.8: spotlight spread sweep ===")
+        bench_spotlight.main(["--scale", str(scale * 1.5)])
+        print("\n=== multi-device scaling: batched spotlight + engine vs N ===")
+        results["scaling"] = bench_scaling.main(
+            ["--scale", str(scale / 2), "--devices", "1,2,4,8"])
+        print("\n=== out-of-core I/O: ingest MB/s + file vs in-memory wall ===")
+        results["io"] = bench_io.main(["--scale", str(scale)])
+        print("\n=== §III ablations: window / lazy / clustering / lambda ===")
+        bench_window.main(["--scale", str(scale / 2)])
+        print("\n=== beyond-paper: ADWISE-balance MoE routing ===")
+        bench_moe_balance.main(["--steps", "12" if not args.full else "40"])
+        print("\n=== kernels (interpret-mode wall times, CPU-indicative) ===")
+        bench_kernels.main(["--quick"] if not args.full else [])
+        print("\n=== roofline table (from dry-run artifact, if present) ===")
+        roofline.main([])
+        print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
 
-    print("=== Fig.7a-f: total latency (partition + modeled processing) ===")
-    bench_total_latency.main(["--scale", str(scale)])
-    print("\n=== Fig.7g-i: replication degree per strategy and L ===")
-    bench_replication.main(["--scale", str(scale)])
-    print("\n=== re-streaming: RD vs pass count (adwise-restream / 2ps) ===")
-    bench_restream.main(["--scale", str(scale / 2)])
-    print("\n=== Fig.8: spotlight spread sweep ===")
-    bench_spotlight.main(["--scale", str(scale * 1.5)])
-    print("\n=== multi-device scaling: batched spotlight + engine vs N ===")
-    bench_scaling.main(["--scale", str(scale / 2), "--devices", "1,2,4,8"])
-    print("\n=== out-of-core I/O: ingest MB/s + file vs in-memory wall ===")
-    bench_io.main(["--scale", str(scale)])
-    print("\n=== §III ablations: window / lazy / clustering / lambda ===")
-    bench_window.main(["--scale", str(scale / 2)])
-    print("\n=== beyond-paper: ADWISE-balance MoE routing ===")
-    bench_moe_balance.main(["--steps", "12" if not args.full else "40"])
-    print("\n=== kernels (interpret-mode wall times, CPU-indicative) ===")
-    bench_kernels.main(["--quick"] if not args.full else [])
-    print("\n=== roofline table (from dry-run artifact, if present) ===")
-    roofline.main([])
-    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    if args.json_dir:
+        path = _next_bench_path(args.json_dir)
+        doc = dict(
+            mode="full" if args.full else ("smoke" if args.smoke else "default"),
+            wall_s=round(time.time() - t0, 2),
+            platform=platform.platform(),
+            python=platform.python_version(),
+            summary=_summarize(results),
+            io=results.get("io"),
+            scaling=results.get("scaling"),
+            total_latency=results.get("total_latency"),
+        )
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, default=str)
+        print(f"bench summary -> {path}")
     return 0
 
 

@@ -13,24 +13,29 @@ the whole stream through `jax.lax.scan`:
          over (W_max × k), emit the assignment, update the vertex cache and
          the controller.
 
-The stream is processed in a handful of chunks at the Python level so the
-(C2) latency model can be calibrated against wall-clock between chunks —
-inside the scan, per-edge latency is `score_rows × k × cost_per_score +
-base_cost`, with `cost_per_score` measured, not guessed.
+This module owns the *per-step math* (the Carry / step function) and the
+thin public entry points. The chunked stepping loop around the scan — carry
+initialization, warm-state resume, r_sel/cap resolution, budget wiring and
+recalibration, resident vs ring-buffer chunk sources — lives once in
+:mod:`repro.core.driver`; `partition_stream`, `partition_stream_batched`,
+the out-of-core path (`repro.core.oocore`) and every re-streaming pass are
+all callers of the same :class:`~repro.core.driver.ScanDriver`.
+
+Stream addressing: the step reads refill rows at ``src % m_pad``. For a
+resident source ``m_pad`` is the (per-instance) stream length, so the mod is
+the identity on every live index; for the out-of-core ring buffer it IS the
+ring invariant (logical row ``s`` lives in slot ``s % B``). Padding reads
+beyond the live range are masked by the ``fill`` mask, so both modes run the
+very same trace with bit-identical outputs.
 """
 from __future__ import annotations
 
-import math
-import time
-from functools import partial
 from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro import compat
 from repro.core import scoring
 from repro.core.types import AdwiseConfig, PartitionResult
 
@@ -171,16 +176,13 @@ def _make_step(
     cfg: AdwiseConfig,
     num_vertices: int,
     r_sel: int,
-    stream: jax.Array,  # (m_pad, 2) int32 — full stream OR a rolling buffer
+    stream: jax.Array,  # (m_pad, 2) int32 — full stream OR the ring buffer
     m_real: jax.Array,  # () int32
     allowed: jax.Array,  # (K,) bool
     cap: jax.Array,  # () int32 (BIG when disabled)
     has_budget: bool,
     prev_assign: jax.Array,  # (m_pad,) int32 — prior-pass partition, -1 = none
     update_deg: bool,  # False on warm-started passes (degrees already final)
-    base: jax.Array,  # () int32 — stream index of stream[0] (out-of-core
-    #   chunk-carry path: `stream`/`prev_assign` hold rows [base, base+m_pad)
-    #   of the logical stream; the in-memory paths pass 0)
 ):
     w_max, k, b = cfg.window_max, cfg.k, cfg.assign_batch
     v_dummy = num_vertices  # scatter dump row
@@ -196,7 +198,10 @@ def _make_step(
         rank = jnp.cumsum(inv.astype(jnp.int32)) - 1
         fill = inv & (rank < take)
         src = carry.cursor + rank
-        src_c = jnp.clip(src - base, 0, m_pad - 1)
+        # Ring addressing: logical row s lives at slot s % m_pad. For a
+        # resident stream m_pad == m, so this is the identity on every live
+        # index; reads past the live range are masked by `fill`.
+        src_c = src % m_pad
         fill_uv = stream[src_c]
         win_uv = jnp.where(fill[:, None], fill_uv, carry.win_uv)
         win_sidx = jnp.where(fill, src, carry.win_sidx)
@@ -397,116 +402,6 @@ def _make_step(
     return step
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "cfg", "num_vertices", "r_sel", "n_steps", "has_budget", "update_deg",
-    ),
-)
-def _run_chunk(
-    carry: Carry,
-    stream: jax.Array,
-    m_real: jax.Array,
-    allowed: jax.Array,
-    cap: jax.Array,
-    prev_assign: jax.Array,
-    base: jax.Array,
-    *,
-    cfg: AdwiseConfig,
-    num_vertices: int,
-    r_sel: int,
-    n_steps: int,
-    has_budget: bool,
-    update_deg: bool,
-) -> tuple[Carry, StepOut]:
-    step = _make_step(
-        cfg, num_vertices, r_sel, stream, m_real, allowed, cap, has_budget,
-        prev_assign, update_deg, base,
-    )
-    return jax.lax.scan(step, carry, None, length=n_steps)
-
-
-@partial(
-    jax.jit,
-    static_argnames=(
-        "cfg", "num_vertices", "r_sel", "n_steps", "has_budget", "update_deg",
-        "n_shards",
-    ),
-)
-def _run_chunk_batched(
-    carry: Carry,  # leaves carry a leading (z,) instance axis
-    streams: jax.Array,  # (z, per, 2) int32
-    m_real: jax.Array,  # (z,) int32
-    allowed: jax.Array,  # (z, K) bool
-    cap: jax.Array,  # (z,) int32
-    prev_assign: jax.Array,  # (z, per) int32
-    base: jax.Array,  # (z,) int32 — per-instance buffer offsets (0 in-memory)
-    *,
-    cfg: AdwiseConfig,
-    num_vertices: int,
-    r_sel: int,
-    n_steps: int,
-    has_budget: bool,
-    update_deg: bool,
-    n_shards: int = 0,
-) -> tuple[Carry, StepOut]:
-    """All z instance scans as ONE program: `vmap` of the step function over
-    the leading instance axis, optionally `shard_map`-ped over an
-    ("instances",) mesh axis so instances land on separate devices.
-
-    ``n_shards == 0`` means pure vmap (single device); ``n_shards > 1`` wraps
-    the vmapped scan in shard_map over the first ``n_shards`` local devices
-    (z must be divisible by n_shards — each device runs z/n_shards instances).
-    """
-
-    def one(carry, stream, m_real, allowed, cap, prev, base):
-        step = _make_step(
-            cfg, num_vertices, r_sel, stream, m_real, allowed, cap,
-            has_budget, prev, update_deg, base,
-        )
-        return jax.lax.scan(step, carry, None, length=n_steps)
-
-    batched = jax.vmap(one)
-    if n_shards > 1:
-        mesh = compat.make_mesh(
-            (n_shards,), ("instances",),
-            devices=np.array(jax.devices()[:n_shards]),
-        )
-        batched = compat.shard_map(
-            batched,
-            mesh=mesh,
-            in_specs=(P("instances"),) * 7,
-            out_specs=P("instances"),
-            check_replication=False,
-        )
-    return batched(carry, streams, m_real, allowed, cap, prev_assign, base)
-
-
-def _cap_value(cfg: AdwiseConfig, m: int, n_allowed: int) -> int:
-    if cfg.cap_slack is None:
-        return int(_BIG_I32)
-    return int(math.ceil(cfg.cap_slack * m / max(n_allowed, 1))) + 1
-
-
-def _resolve_backend(backend: str, z: int) -> tuple[str, int]:
-    """(effective backend, n_shards). 'auto' picks shard_map when multiple
-    devices are visible; shard_map degrades to vmap when no device count > 1
-    divides z."""
-    if backend == "auto":
-        backend = "shard_map" if jax.device_count() > 1 else "vmap"
-    if backend == "vmap":
-        return "vmap", 0
-    if backend != "shard_map":
-        raise ValueError(
-            f"backend must be 'auto', 'vmap' or 'shard_map', got {backend!r}"
-        )
-    nd = min(jax.device_count(), z)
-    n_shards = max((d for d in range(1, nd + 1) if z % d == 0), default=1)
-    if n_shards <= 1:
-        return "vmap", 0
-    return "shard_map", n_shards
-
-
 def partition_stream(
     edges: np.ndarray,
     num_vertices: int,
@@ -518,6 +413,9 @@ def partition_stream(
     warm: Optional[WarmState] = None,
 ) -> PartitionResult:
     """Partition an edge stream with ADWISE (vectorized scan).
+
+    Thin caller of :class:`repro.core.driver.ScanDriver` over a single
+    resident instance (z == 1).
 
     Args:
       edges: (m, 2) int32 edge stream.
@@ -536,121 +434,37 @@ def partition_stream(
 
     Returns: PartitionResult with assign (int32[m]) and stats.
     """
+    from repro.core.driver import ResidentSource, ScanDriver
+
     m = int(len(edges))
     k = cfg.k
     if m == 0:
         return PartitionResult(np.zeros((0,), np.int32), dict(k=k, unassigned=0))
-    b = cfg.assign_batch
-    r_sel = cfg.window_max
-    if cfg.lazy:
-        r_sel = min(cfg.window_max, max(b, cfg.lazy_budget or max(8, cfg.window_max // 8)))
-    allowed_np = (
-        np.ones((k,), bool) if allowed is None else np.asarray(allowed, bool)
+    source = ResidentSource(
+        np.ascontiguousarray(edges, np.int32).reshape(1, m, 2),
+        np.array([m], np.int64),
     )
-    n_allowed = max(int(allowed_np.sum()), 1)
-    cap_val = _cap_value(cfg, m, n_allowed)
-
-    steps_total = -(-m // b) + -(-cfg.window_max // b) + 2
-    n_chunks = max(1, min(n_chunks, steps_total))
-    chunk_steps = -(-steps_total // n_chunks)
-    n_chunks = -(-steps_total // chunk_steps)
-
-    budget = cfg.latency_budget if cfg.latency_budget is not None else 0.0
-    has_budget = cfg.latency_budget is not None
-    if warm is None:
-        carry = _init_carry(cfg, num_vertices, budget)
-        prev_assign_np = np.full((m,), -1, np.int32)
-        update_deg = True
-    else:
-        carry = Carry.warm_start(
-            cfg, num_vertices, budget,
-            replicas=warm.replicas, deg=warm.deg, sizes=warm.sizes,
-        )
-        if warm.prev_assign is None:
-            prev_assign_np = np.full((m,), -1, np.int32)
-        else:
-            prev_assign_np = np.asarray(warm.prev_assign, np.int32)
-            assert prev_assign_np.shape == (m,), "prev_assign must align with the stream"
-        update_deg = False
-    fixed_cost = cost_per_score is not None
-    if fixed_cost:
-        carry = carry._replace(cost_per_score=jnp.float32(cost_per_score))
-
-    stream = jnp.asarray(edges, jnp.int32)
-    m_real = jnp.int32(m)
-    allowed_j = jnp.asarray(allowed_np)
-    cap_j = jnp.int32(cap_val)
-    prev_j = jnp.asarray(prev_assign_np)
-
-    def run_chunk(carry):
-        return _run_chunk(
-            carry,
-            stream,
-            m_real,
-            allowed_j,
-            cap_j,
-            prev_j,
-            jnp.int32(0),
-            cfg=cfg,
-            num_vertices=num_vertices,
-            r_sel=r_sel,
-            n_steps=chunk_steps,
-            has_budget=has_budget,
-            update_deg=update_deg,
-        )
-
-    outs = []
-    t0 = time.perf_counter()
-    for _ in range(n_chunks):
-        carry, out = run_chunk(carry)
-        outs.append(jax.tree.map(np.asarray, out))
-        if has_budget and not fixed_cost:
-            # Recalibrate the latency model against reality.
-            jax.block_until_ready(carry.score_rows)
-            wall = time.perf_counter() - t0
-            rows = max(int(carry.score_rows), 1)
-            carry = carry._replace(
-                cost_per_score=jnp.float32(wall / (rows * k)),
-                budget_left=jnp.float32(cfg.latency_budget - wall),
-            )
-    # Bounded drain: the static `steps_total` heuristic can under-provision
-    # scan steps when the vertex-disjoint top-b pick stalls (e.g. star graphs
-    # with assign_batch > 1 assign one edge per step, not b). Each step with a
-    # non-empty window assigns >= 1 edge (the capacity caps sum to > m, so an
-    # allowed partition below cap always exists), so ceil(m / chunk_steps)
-    # extra chunks are always enough.
-    drain_left = -(-m // chunk_steps) + 2
-    while int(carry.assigned) < m and drain_left > 0:
-        carry, out = run_chunk(carry)
-        outs.append(jax.tree.map(np.asarray, out))
-        drain_left -= 1
-    wall = time.perf_counter() - t0
-
-    sidx = np.concatenate([o.sidx.reshape(-1) for o in outs])
-    pout = np.concatenate([o.p.reshape(-1) for o in outs])
+    drv = ScanDriver(
+        source, cfg, num_vertices,
+        allowed=None if allowed is None else np.asarray(allowed, bool)[None],
+        warm=None if warm is None else [warm],
+        cost_per_score=cost_per_score,
+        backend="vmap",
+    )
+    res = drv.run(n_chunks=n_chunks)
+    sidx, pout = res.sidx[0], res.p[0]
     assign = np.full((m,), -1, np.int32)
     live = sidx >= 0
     assign[sidx[live]] = pout[live]
     unassigned = int((assign < 0).sum())
-    assert unassigned == 0 and int(carry.assigned) == m, (
+    assert unassigned == 0 and int(res.assigned[0]) == m, (
         f"partition_stream left {unassigned} of {m} edges unassigned "
-        f"(scan assigned counter: {int(carry.assigned)}) — drain loop failed"
+        f"(scan assigned counter: {int(res.assigned[0])}) — drain loop failed"
     )
-    w_trace = np.concatenate([np.atleast_1d(o.w_cap) for o in outs])
     stats = dict(
-        k=k,
-        name="adwise",
-        wall_time_s=wall,
-        score_count=int(carry.score_rows) * k,
-        score_rows=int(carry.score_rows),
-        final_w=int(carry.w_cap),
-        w_trace=w_trace,
-        lam_final=float(carry.lam),
-        assigned=int(carry.assigned),
+        drv.stats_base(res, 0),
+        w_trace=res.w_trace[0],
         unassigned=unassigned,
-        warm=warm is not None,
-        r_sel=r_sel,
-        modeled_cost_per_score=float(carry.cost_per_score),
     )
     return PartitionResult(assign, stats)
 
@@ -669,13 +483,13 @@ def partition_stream_batched(
 ) -> list[PartitionResult]:
     """Run ``z`` independent ADWISE instance scans as ONE batched program.
 
-    This is the device-parallel spotlight entry point: where
-    :func:`partition_stream` traces one `lax.scan` per instance and a Python
-    loop runs them sequentially, this runs the *same* step function `vmap`-ped
-    over a leading instance axis — and, when multiple devices are visible,
-    `shard_map`-ped over an ``("instances",)`` mesh axis so each device
-    executes its slice of instances in parallel (the paper's z-machine
-    parallel-loading model on real hardware).
+    This is the device-parallel spotlight entry point: the same step
+    function `vmap`-ped over a leading instance axis — and, when multiple
+    devices are visible, `shard_map`-ped over an ``("instances",)`` mesh
+    axis so each device executes its slice of instances in parallel (the
+    paper's z-machine parallel-loading model on real hardware). Thin caller
+    of :class:`repro.core.driver.ScanDriver` over a z-instance resident
+    source.
 
     Args:
       streams: (z, per, 2) int32 — per-instance padded edge chunks
@@ -701,6 +515,8 @@ def partition_stream_batched(
       :func:`partition_stream` — the batched step function is the same
       trace, vmapped.
     """
+    from repro.core.driver import ResidentSource, ScanDriver
+
     streams = np.ascontiguousarray(streams, np.int32)
     valid = np.asarray(valid, bool)
     assert streams.ndim == 3 and streams.shape[2] == 2, streams.shape
@@ -714,161 +530,45 @@ def partition_stream_batched(
     k = cfg.k
     m_per = valid.sum(axis=1).astype(np.int64)  # (z,)
     m_max = int(m_per.max()) if z else 0
-    if allowed is None:
-        allowed_np = np.ones((z, k), bool)
-    else:
-        allowed_np = np.asarray(allowed, bool)
-        assert allowed_np.shape == (z, k), (allowed_np.shape, (z, k))
+    if allowed is not None:
+        allowed = np.asarray(allowed, bool)
+        assert allowed.shape == (z, k), (allowed.shape, (z, k))
     if m_max == 0:
         return [
             PartitionResult(np.zeros((0,), np.int32), dict(k=k, unassigned=0))
             for _ in range(z)
         ]
 
-    b = cfg.assign_batch
-    r_sel = cfg.window_max
-    if cfg.lazy:
-        r_sel = min(cfg.window_max, max(b, cfg.lazy_budget or max(8, cfg.window_max // 8)))
-    caps = np.array(
-        [
-            _cap_value(cfg, int(m_per[i]), max(int(allowed_np[i].sum()), 1))
-            for i in range(z)
-        ],
-        np.int32,
+    drv = ScanDriver(
+        ResidentSource(streams, m_per), cfg, num_vertices,
+        allowed=allowed,
+        warm=list(warm) if warm is not None else None,
+        cost_per_score=cost_per_score,
+        backend=backend,
     )
-
-    # Scan-step provisioning mirrors partition_stream, sized by the largest
-    # instance so every instance gets enough steps (smaller ones idle).
-    steps_total = -(-m_max // b) + -(-cfg.window_max // b) + 2
-    n_chunks = max(1, min(n_chunks, steps_total))
-    chunk_steps = -(-steps_total // n_chunks)
-    n_chunks = -(-steps_total // chunk_steps)
-
-    budget = cfg.latency_budget if cfg.latency_budget is not None else 0.0
-    has_budget = cfg.latency_budget is not None
-    if warm is None:
-        base = _init_carry(cfg, num_vertices, budget)
-        carry = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (z,) + x.shape), base
-        )
-        prev_np = np.full((z, per), -1, np.int32)
-        update_deg = True
-    else:
-        assert len(warm) == z, f"need one WarmState per instance, got {len(warm)}"
-        has_prev = [w.prev_assign is not None for w in warm]
-        assert all(has_prev) or not any(has_prev), (
-            "all instances must agree on whether prev_assign is provided"
-        )
-        carries = [
-            Carry.warm_start(
-                cfg, num_vertices, budget,
-                replicas=w.replicas, deg=w.deg, sizes=w.sizes,
-            )
-            for w in warm
-        ]
-        carry = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
-        prev_np = np.full((z, per), -1, np.int32)
-        if all(has_prev):
-            for i, w in enumerate(warm):
-                pa = np.asarray(w.prev_assign, np.int32)
-                assert pa.shape == (int(m_per[i]),), (
-                    f"instance {i}: prev_assign must align with its stream"
-                )
-                prev_np[i, : len(pa)] = pa
-        update_deg = False
-    fixed_cost = cost_per_score is not None
-    if fixed_cost:
-        carry = carry._replace(
-            cost_per_score=jnp.full((z,), cost_per_score, jnp.float32)
-        )
-
-    backend_used, n_shards = _resolve_backend(backend, z)
-    streams_j = jnp.asarray(streams)
-    m_real_j = jnp.asarray(m_per.astype(np.int32))
-    allowed_j = jnp.asarray(allowed_np)
-    caps_j = jnp.asarray(caps)
-    prev_j = jnp.asarray(prev_np)
-
-    def run_chunk(carry):
-        return _run_chunk_batched(
-            carry,
-            streams_j,
-            m_real_j,
-            allowed_j,
-            caps_j,
-            prev_j,
-            jnp.zeros((z,), jnp.int32),
-            cfg=cfg,
-            num_vertices=num_vertices,
-            r_sel=r_sel,
-            n_steps=chunk_steps,
-            has_budget=has_budget,
-            update_deg=update_deg,
-            n_shards=n_shards,
-        )
-
-    outs = []
-    t0 = time.perf_counter()
-    for _ in range(n_chunks):
-        carry, out = run_chunk(carry)
-        outs.append(jax.tree.map(np.asarray, out))
-        if has_budget and not fixed_cost:
-            # One program runs all instances: calibrate the shared per-row
-            # cost from the batched wall over the total row count.
-            jax.block_until_ready(carry.score_rows)
-            wall = time.perf_counter() - t0
-            rows = max(int(np.asarray(carry.score_rows).sum()), 1)
-            carry = carry._replace(
-                cost_per_score=jnp.full((z,), wall / (rows * k), jnp.float32),
-                budget_left=jnp.full(
-                    (z,), cfg.latency_budget - wall, jnp.float32
-                ),
-            )
-    # Bounded drain, as in partition_stream (see comment there): every step
-    # with a non-empty window assigns >= 1 edge per instance.
-    drain_left = -(-m_max // chunk_steps) + 2
-    while (np.asarray(carry.assigned) < m_per).any() and drain_left > 0:
-        carry, out = run_chunk(carry)
-        outs.append(jax.tree.map(np.asarray, out))
-        drain_left -= 1
-    wall = time.perf_counter() - t0
-
-    sidx = np.concatenate([o.sidx.reshape(z, -1) for o in outs], axis=1)
-    pout = np.concatenate([o.p.reshape(z, -1) for o in outs], axis=1)
-    w_trace = np.concatenate([o.w_cap.reshape(z, -1) for o in outs], axis=1)
-    assigned = np.asarray(carry.assigned)
+    res = drv.run(n_chunks=n_chunks)
     results = []
     for i in range(z):
         m_i = int(m_per[i])
         assign = np.full((m_i,), -1, np.int32)
-        live = sidx[i] >= 0
-        assign[sidx[i][live]] = pout[i][live]
+        live = res.sidx[i] >= 0
+        assign[res.sidx[i][live]] = res.p[i][live]
         unassigned = int((assign < 0).sum())
-        assert unassigned == 0 and int(assigned[i]) == m_i, (
+        assert unassigned == 0 and int(res.assigned[i]) == m_i, (
             f"batched instance {i} left {unassigned} of {m_i} edges "
-            f"unassigned (scan counter: {int(assigned[i])}) — drain failed"
+            f"unassigned (scan counter: {int(res.assigned[i])}) — drain failed"
         )
         stats = dict(
-            k=k,
-            name="adwise",
+            drv.stats_base(res, i),
             batched=True,
-            backend=backend_used,
-            n_shards=n_shards,
+            backend=res.backend,
+            n_shards=res.n_shards,
             z=z,
             instance=i,
             # One program ran all z instances; the batched wall IS the
             # parallel-model wall, shared by every instance.
-            wall_time_s=wall,
-            score_count=int(np.asarray(carry.score_rows)[i]) * k,
-            score_rows=int(np.asarray(carry.score_rows)[i]),
-            final_w=int(np.asarray(carry.w_cap)[i]),
-            w_trace=w_trace[i],
-            lam_final=float(np.asarray(carry.lam)[i]),
-            assigned=int(assigned[i]),
+            w_trace=res.w_trace[i],
             unassigned=unassigned,
-            warm=warm is not None,
-            r_sel=r_sel,
-            modeled_cost_per_score=float(np.asarray(carry.cost_per_score)[i]),
         )
         results.append(PartitionResult(assign, stats))
     return results

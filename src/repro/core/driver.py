@@ -1,0 +1,674 @@
+"""Unified streaming-scan driver: ONE engine behind every ADWISE scan caller.
+
+Before this module, the paper's core loop — adaptive window scan with
+per-step latency billing (§III-A) — was implemented four times over:
+``partition_stream``, ``partition_stream_batched`` (core/adwise.py), the
+out-of-core ADWISE path (core/oocore.py), and the warm-started re-streaming
+passes each re-derived ``r_sel``, the capacity caps, budget wiring, carry
+initialization, and the chunked stepping loop. :class:`ScanDriver` owns all
+of that once, over a *pluggable chunk source*:
+
+* :class:`ResidentSource` — the whole stream is uploaded to device once
+  (``streams[z, per, 2]``); scan calls index it directly with ``base=0``
+  semantics. This is the in-memory path (`partition_stream`,
+  `partition_stream_batched`, every re-streaming pass over a resident
+  array).
+* :class:`FileSource` — a **device-resident ring buffer**: a donated
+  ``(z, B, 2)`` buffer lives on device across scan calls, logical stream row
+  ``s`` occupies slot ``s % B``, and each refill ships ONLY the new tail
+  rows through ``jax.lax.dynamic_update_slice`` — host→device traffic per
+  scan call drops from O(B) (the PR-4 full re-upload) to O(refill). Rows
+  are uploaded in quantized spans (multiples of ``Rq``, a power of two) so
+  the update kernel compiles for a bounded set of shapes; ``B`` is a
+  multiple of ``Rq`` sized so a quantized refill always covers the next
+  scan call's worst-case consumption (``window_max + S * assign_batch``
+  rows per S-step call — the same cursor-advance bound PR 4 proved).
+
+Both modes run the *same* vmapped (optionally shard_mapped) step function
+from ``repro.core.adwise`` — the per-step math is one trace, so the file
+path stays bit-identical to the in-memory path (the registry-wide parity
+tests in tests/test_oocore.py are the oracle, plus the ring-specific
+property tests in tests/test_driver.py).
+
+Host→device accounting: the driver counts every stream-buffer byte it ships
+(``h2d_rows`` / ``h2d_bytes`` / ``h2d_calls``), callers surface the counters
+in partition stats, and ``repro.engine.latency_model.partition_latency``
+bills them against :data:`~repro.engine.latency_model.H2D_BW_BPS`.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Callable, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.adwise import Carry, WarmState, _init_carry, _make_step
+from repro.core.types import AdwiseConfig
+
+__all__ = [
+    "ResidentSource",
+    "FileSource",
+    "RingBuf",
+    "ScanDriver",
+    "DriveResult",
+    "resolve_backend",
+]
+
+
+def resolve_backend(backend: str, z: int) -> tuple[str, int]:
+    """(effective backend, n_shards). 'auto' picks shard_map when multiple
+    devices are visible; shard_map degrades to vmap when no device count > 1
+    divides z."""
+    if backend == "auto":
+        backend = "shard_map" if jax.device_count() > 1 else "vmap"
+    if backend == "vmap":
+        return "vmap", 0
+    if backend != "shard_map":
+        raise ValueError(
+            f"backend must be 'auto', 'vmap' or 'shard_map', got {backend!r}"
+        )
+    nd = min(jax.device_count(), z)
+    n_shards = max((d for d in range(1, nd + 1) if z % d == 0), default=1)
+    if n_shards <= 1:
+        return "vmap", 0
+    return "shard_map", n_shards
+
+
+# ----------------------------------------------------------------------------
+# Scan executors: one vmapped program for all z instances, resident or ring
+# ----------------------------------------------------------------------------
+
+
+class RingBuf(NamedTuple):
+    """Device-resident stream ring: slot ``s % B`` holds logical row ``s``.
+
+    Threaded through every ring-mode scan call as part of the donated carry,
+    so XLA aliases it in place — only the refill spans ever cross the
+    host→device boundary.
+    """
+
+    uv: jax.Array  # (B, 2) int32 per instance (batched: (z, B, 2))
+    prev: jax.Array  # (B,) int32 prior-pass assignment, -1 = none
+
+
+def _shard_over_instances(fn, n_shards: int, n_args: int):
+    mesh = compat.make_mesh(
+        (n_shards,), ("instances",),
+        devices=np.array(jax.devices()[:n_shards]),
+    )
+    return compat.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P("instances"),) * n_args,
+        out_specs=P("instances"),
+        check_replication=False,
+    )
+
+
+@partial(
+    jax.jit,
+    donate_argnums=(0,),
+    static_argnames=(
+        "cfg", "num_vertices", "r_sel", "n_steps", "has_budget", "update_deg",
+        "n_shards",
+    ),
+)
+def _run_scan_resident(
+    carry: Carry,  # every leaf carries a leading (z,) instance axis
+    streams: jax.Array,  # (z, per, 2) int32
+    m_real: jax.Array,  # (z,) int32
+    allowed: jax.Array,  # (z, K) bool
+    cap: jax.Array,  # (z,) int32
+    prev_assign: jax.Array,  # (z, per) int32
+    *,
+    cfg: AdwiseConfig,
+    num_vertices: int,
+    r_sel: int,
+    n_steps: int,
+    has_budget: bool,
+    update_deg: bool,
+    n_shards: int = 0,
+):
+    """All z instance scans as ONE program over a fully resident stream."""
+
+    def one(carry, stream, m_real, allowed, cap, prev):
+        step = _make_step(
+            cfg, num_vertices, r_sel, stream, m_real, allowed, cap,
+            has_budget, prev, update_deg,
+        )
+        return jax.lax.scan(step, carry, None, length=n_steps)
+
+    batched = jax.vmap(one)
+    if n_shards > 1:
+        batched = _shard_over_instances(batched, n_shards, 6)
+    return batched(carry, streams, m_real, allowed, cap, prev_assign)
+
+
+@partial(
+    jax.jit,
+    donate_argnums=(0,),
+    static_argnames=(
+        "cfg", "num_vertices", "r_sel", "n_steps", "has_budget", "update_deg",
+        "n_shards",
+    ),
+)
+def _run_scan_ring(
+    carry_buf: tuple,  # (Carry, RingBuf), each leaf with a leading (z,) axis
+    m_real: jax.Array,  # (z,) int32
+    allowed: jax.Array,  # (z, K) bool
+    cap: jax.Array,  # (z,) int32
+    *,
+    cfg: AdwiseConfig,
+    num_vertices: int,
+    r_sel: int,
+    n_steps: int,
+    has_budget: bool,
+    update_deg: bool,
+    n_shards: int = 0,
+):
+    """Ring-mode scan: the stream buffer rides in the donated carry and is
+    returned untouched, so XLA aliases it across calls (zero copies, zero
+    re-upload)."""
+
+    def one(carry_buf, m_real, allowed, cap):
+        carry, buf = carry_buf
+        step = _make_step(
+            cfg, num_vertices, r_sel, buf.uv, m_real, allowed, cap,
+            has_budget, buf.prev, update_deg,
+        )
+        carry, outs = jax.lax.scan(step, carry, None, length=n_steps)
+        return (carry, buf), outs
+
+    batched = jax.vmap(one)
+    if n_shards > 1:
+        batched = _shard_over_instances(batched, n_shards, 4)
+    return batched(carry_buf, m_real, allowed, cap)
+
+
+@partial(jax.jit, donate_argnums=(0,), static_argnames=("with_prev",))
+def _ring_write(
+    buf: RingBuf,
+    uv_rows: jax.Array,  # (c, 2) int32 — the ONLY stream bytes shipped h2d
+    prev_rows: jax.Array,  # (c,) int32 (dummy empty when with_prev=False)
+    instance: jax.Array,  # () int32
+    slot: jax.Array,  # () int32 — c never wraps past B (spans pre-split)
+    *,
+    with_prev: bool,
+) -> RingBuf:
+    uv = jax.lax.dynamic_update_slice(
+        buf.uv, uv_rows[None], (instance, slot, jnp.int32(0))
+    )
+    if with_prev:
+        prev = jax.lax.dynamic_update_slice(
+            buf.prev, prev_rows[None], (instance, slot)
+        )
+    else:
+        prev = buf.prev
+    return RingBuf(uv, prev)
+
+
+# ----------------------------------------------------------------------------
+# Chunk sources
+# ----------------------------------------------------------------------------
+
+
+class ResidentSource:
+    """Whole stream resident on device: ONE upload for the entire run.
+
+    ``streams`` is the (z, per, 2) padded instance layout
+    (:meth:`repro.graph.stream.EdgeStream.split_padded`); ``m_per[i]`` is the
+    real (un-padded) length of instance i's stream. z == 1 wraps a plain
+    (m, 2) stream as (1, m, 2).
+    """
+
+    resident = True
+
+    def __init__(self, streams: np.ndarray, m_per: np.ndarray):
+        streams = np.ascontiguousarray(streams, np.int32)
+        assert streams.ndim == 3 and streams.shape[2] == 2, streams.shape
+        self.z, self.per = int(streams.shape[0]), int(streams.shape[1])
+        self.m_per = np.asarray(m_per, np.int64)
+        assert self.m_per.shape == (self.z,)
+        assert (self.m_per <= self.per).all()
+        self.streams = streams
+
+    @property
+    def upload_rows(self) -> int:
+        return self.z * self.per
+
+
+class FileSource:
+    """Bounded device-resident ring buffer over per-instance stream readers.
+
+    ``readers[i]`` is instance i's locally addressed stream (an
+    ``EdgeFileReader`` / sub-reader, or anything with ``num_edges`` and
+    ``read(start, count)``); ``prev_read[i](start, count)`` optionally
+    supplies the prior pass's placements for buffered re-streaming
+    revocation.
+
+    Sizing: ``S = (B0 - window_max) // assign_batch`` scan steps per call
+    consume at most ``F = window_max + S * assign_batch`` rows (window
+    refill ceiling + per-step assignments — the PR-4 cursor-advance bound),
+    where ``B0 = max(chunk_edges, window_max + assign_batch)``. Refills are
+    quantized to spans that are multiples of ``Rq`` (a power of two, so the
+    `dynamic_update_slice` kernel compiles for a bounded shape set); the
+    ring holds ``B = (⌈F/Rq⌉ + 2) · Rq`` rows, so a quantized refill always
+    leaves ≥ F uploaded-but-unread rows ahead of the cursor while never
+    overwriting a live slot (row ``s`` may land in slot ``s % B`` only once
+    row ``s − B`` is behind the cursor).
+
+    Invariants (checked): ``cursor ≤ hi ≤ cursor + B`` and ``hi`` advances
+    monotonically — every stream row is read from disk and shipped to the
+    device exactly once per pass.
+    """
+
+    resident = False
+
+    def __init__(
+        self,
+        readers: Sequence,
+        *,
+        chunk_edges: int,
+        cfg: AdwiseConfig,
+        prev_read: Optional[List[Callable[[int, int], np.ndarray]]] = None,
+    ):
+        self.readers = list(readers)
+        self.z = len(self.readers)
+        self.m_per = np.array([r.num_edges for r in self.readers], np.int64)
+        self.prev_read = prev_read
+        w_max, b = cfg.window_max, cfg.assign_batch
+        b0 = int(max(chunk_edges, w_max + b))
+        self.scan_steps = max(1, (b0 - w_max) // b)
+        f = w_max + self.scan_steps * b  # worst-case rows consumed per call
+        self.Rq = 1 << max(2, (max(f // 8, 1)).bit_length())
+        self.B = (-(-f // self.Rq) + 2) * self.Rq
+        # Single disk reads (and update-kernel spans) stay within the
+        # b0 = max(chunk_edges, window_max + assign_batch) bound even though
+        # the ring is slightly larger; kept a multiple of Rq so span shapes
+        # stay quantized.
+        self.max_span = max(self.Rq, (b0 // self.Rq) * self.Rq)
+        # Host-side high-water mark: rows [0, hi) are on device.
+        self.hi = np.zeros((self.z,), np.int64)
+        self.h2d_rows = 0
+        self.h2d_bytes = 0
+        self.h2d_calls = 0
+
+    def alloc(self) -> RingBuf:
+        """Fresh device ring: uv zeros, prev all -1 (= no prior placement —
+        0 would be a real partition id and would trigger false revocation)."""
+        return RingBuf(
+            uv=jnp.zeros((self.z, self.B, 2), jnp.int32),
+            prev=jnp.full((self.z, self.B), -1, jnp.int32),
+        )
+
+    def refill(self, buf: RingBuf, cursors: np.ndarray) -> RingBuf:
+        """Ship the new tail rows for every instance; returns the new ring.
+
+        ``cursors[i]`` is instance i's scan cursor — rows behind it are dead
+        and their slots are free to overwrite.
+        """
+        self.h2d_calls += 1
+        with_prev = self.prev_read is not None
+        dummy_prev = np.zeros((0,), np.int32)
+        for i in range(self.z):
+            cur = int(cursors[i])
+            m_i = int(self.m_per[i])
+            hi = int(self.hi[i])
+            assert cur <= hi, (
+                f"instance {i}: scan cursor {cur} overran the uploaded "
+                f"high-water mark {hi} — ring refill bound violated"
+            )
+            target = min(cur + self.B, m_i)
+            if target <= hi:
+                continue
+            span_total = target - hi
+            if target < m_i:
+                # Quantize to Rq blocks (bounded kernel-shape set); the
+                # remainder is covered because B ≥ F + 2·Rq keeps ≥ F rows
+                # ahead of the cursor even after flooring.
+                span_total -= span_total % self.Rq
+            end = hi + span_total
+            while hi < end:
+                slot = hi % self.B
+                # Never wrap inside a write; never exceed the chunk bound.
+                c = min(end - hi, self.B - slot, self.max_span)
+                rows = self.readers[i].read(hi, c)
+                assert len(rows) == c, (
+                    f"instance {i}: reader returned {len(rows)} of {c} rows "
+                    f"at offset {hi}"
+                )
+                if with_prev:
+                    prows = np.ascontiguousarray(
+                        self.prev_read[i](hi, c), np.int32
+                    )
+                else:
+                    prows = dummy_prev
+                buf = _ring_write(
+                    buf,
+                    np.ascontiguousarray(rows, np.int32),
+                    prows,
+                    np.int32(i),
+                    np.int32(slot),
+                    with_prev=with_prev,
+                )
+                self.h2d_rows += c
+                self.h2d_bytes += c * 8 + (c * 4 if with_prev else 0)
+                hi += c
+            self.hi[i] = hi
+        return buf
+
+
+# ----------------------------------------------------------------------------
+# The driver
+# ----------------------------------------------------------------------------
+
+
+class DriveResult(NamedTuple):
+    """Raw outcome of one driven scan; callers assemble their stats shapes."""
+
+    # Per-instance step outputs, concatenated over every scan call — only
+    # collected in resident mode (the file path streams them to `on_assign`
+    # to stay O(chunk)): (z, T·b) / (z, T·b) / (z, T).
+    sidx: Optional[np.ndarray]
+    p: Optional[np.ndarray]
+    w_trace: Optional[np.ndarray]
+    # Final carry counters, one row per instance.
+    assigned: np.ndarray  # (z,) int
+    score_rows: np.ndarray  # (z,) int
+    final_w: np.ndarray  # (z,) int
+    lam: np.ndarray  # (z,) f32
+    cost_per_score: np.ndarray  # (z,) f32
+    # Run-level accounting.
+    wall_time_s: float
+    r_sel: int
+    backend: str
+    n_shards: int
+    scan_calls: int
+    h2d_rows: int
+    h2d_bytes: int
+    buffer_rows: int  # ring B (file mode) / per (resident mode)
+    scan_steps_per_call: int
+
+
+class ScanDriver:
+    """One streaming-scan engine for every ADWISE entry point.
+
+    Owns carry initialization (cold or warm-started from per-instance
+    :class:`~repro.core.adwise.WarmState`), ``r_sel`` / capacity-cap
+    resolution, latency-budget wiring (including the between-chunks
+    wall-clock recalibration of the modeled cost), backend/shard resolution,
+    and the chunked stepping loop over the given source. Callers stay thin:
+    they build a source, run the driver, and format stats.
+    """
+
+    def __init__(
+        self,
+        source,
+        cfg: AdwiseConfig,
+        num_vertices: int,
+        *,
+        allowed: Optional[np.ndarray] = None,  # (z, k) bool
+        warm: Optional[Sequence[WarmState]] = None,
+        cost_per_score: Optional[float] = None,
+        backend: str = "vmap",
+    ):
+        self.source = source
+        self.cfg = cfg
+        self.num_vertices = num_vertices
+        z, k = source.z, cfg.k
+        self.z = z
+        self.m_per = source.m_per
+        self.r_sel = cfg.resolve_r_sel()
+
+        if allowed is None:
+            allowed_np = np.ones((z, k), bool)
+        else:
+            allowed_np = np.asarray(allowed, bool)
+            assert allowed_np.shape == (z, k), (allowed_np.shape, (z, k))
+        caps = np.array(
+            [
+                cfg.cap_value(int(self.m_per[i]), max(int(allowed_np[i].sum()), 1))
+                for i in range(z)
+            ],
+            np.int32,
+        )
+
+        self.has_budget = cfg.latency_budget is not None
+        budget = cfg.latency_budget if self.has_budget else 0.0
+        self.warm = warm is not None
+        self.update_deg = warm is None
+        per = getattr(source, "per", 0)
+        prev_np = np.full((z, per), -1, np.int32) if source.resident else None
+        if warm is None:
+            base = _init_carry(cfg, num_vertices, budget)
+            carry = jax.tree.map(lambda x: jnp.broadcast_to(x, (z,) + x.shape), base)
+        else:
+            assert len(warm) == z, f"need one WarmState per instance, got {len(warm)}"
+            has_prev = [w.prev_assign is not None for w in warm]
+            assert all(has_prev) or not any(has_prev), (
+                "all instances must agree on whether prev_assign is provided"
+            )
+            # File mode feeds prior placements through the source's
+            # prev_read range reads, never through resident prev arrays —
+            # silently dropping them would skip revocation.
+            assert source.resident or not any(has_prev), (
+                "file-mode warm states must not carry prev_assign; pass "
+                "prev_read to the FileSource instead"
+            )
+            carries = [
+                Carry.warm_start(
+                    cfg, num_vertices, budget,
+                    replicas=w.replicas, deg=w.deg, sizes=w.sizes,
+                )
+                for w in warm
+            ]
+            carry = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
+            if source.resident and all(has_prev):
+                for i, w in enumerate(warm):
+                    pa = np.asarray(w.prev_assign, np.int32)
+                    assert pa.shape == (int(self.m_per[i]),), (
+                        f"instance {i}: prev_assign must align with its stream"
+                    )
+                    prev_np[i, : len(pa)] = pa
+        self.fixed_cost = cost_per_score is not None
+        if self.fixed_cost:
+            carry = carry._replace(
+                cost_per_score=jnp.full((z,), cost_per_score, jnp.float32)
+            )
+        self.carry = carry
+        self.backend, self.n_shards = resolve_backend(backend, z)
+        self._m_real_j = jnp.asarray(self.m_per.astype(np.int32))
+        self._allowed_j = jnp.asarray(allowed_np)
+        self._caps_j = jnp.asarray(caps)
+        self._prev_np = prev_np
+
+    # -- budget recalibration (shared by both modes) -----------------------
+    def _recalibrate(self, carry: Carry, t0: float) -> Carry:
+        if not (self.has_budget and not self.fixed_cost):
+            return carry
+        # Recalibrate the modeled cost against measured wall between scan
+        # calls: one program runs all instances, so the shared per-row cost
+        # comes from the batched wall over the total row count.
+        jax.block_until_ready(carry.score_rows)
+        wall = time.perf_counter() - t0
+        rows = max(int(np.asarray(carry.score_rows).sum()), 1)
+        return carry._replace(
+            cost_per_score=jnp.full(
+                (self.z,), wall / (rows * self.cfg.k), jnp.float32
+            ),
+            budget_left=jnp.full(
+                (self.z,), self.cfg.latency_budget - wall, jnp.float32
+            ),
+        )
+
+    # -- resident mode -----------------------------------------------------
+    def _run_resident(self, n_chunks: int) -> DriveResult:
+        src, cfg = self.source, self.cfg
+        z, b = self.z, cfg.assign_batch
+        m_max = int(self.m_per.max())
+        # Scan-step provisioning sized by the largest instance (smaller ones
+        # idle); the drain below covers top-b pick stalls (star graphs with
+        # assign_batch > 1 assign one edge per step, not b — each step with
+        # a non-empty window assigns >= 1 edge, so ceil(m/chunk_steps) extra
+        # chunks always finish).
+        steps_total = -(-m_max // b) + -(-cfg.window_max // b) + 2
+        n_chunks = max(1, min(n_chunks, steps_total))
+        chunk_steps = -(-steps_total // n_chunks)
+        n_chunks = -(-steps_total // chunk_steps)
+
+        streams_j = jnp.asarray(src.streams)
+        prev_j = jnp.asarray(self._prev_np)
+        h2d_rows = src.upload_rows
+        h2d_bytes = src.upload_rows * 8 + self._prev_np.size * 4
+        carry = self.carry
+
+        def run_chunk(carry):
+            return _run_scan_resident(
+                carry, streams_j, self._m_real_j, self._allowed_j,
+                self._caps_j, prev_j,
+                cfg=cfg, num_vertices=self.num_vertices, r_sel=self.r_sel,
+                n_steps=chunk_steps, has_budget=self.has_budget,
+                update_deg=self.update_deg, n_shards=self.n_shards,
+            )
+
+        outs = []
+        calls = 0
+        t0 = time.perf_counter()
+        for _ in range(n_chunks):
+            carry, out = run_chunk(carry)
+            calls += 1
+            outs.append(jax.tree.map(np.asarray, out))
+            carry = self._recalibrate(carry, t0)
+        drain_left = -(-m_max // chunk_steps) + 2
+        while (np.asarray(carry.assigned) < self.m_per).any() and drain_left > 0:
+            carry, out = run_chunk(carry)
+            calls += 1
+            outs.append(jax.tree.map(np.asarray, out))
+            drain_left -= 1
+        wall = time.perf_counter() - t0
+        self.carry = carry
+        return self._result(
+            carry, wall,
+            sidx=np.concatenate([o.sidx.reshape(z, -1) for o in outs], axis=1),
+            p=np.concatenate([o.p.reshape(z, -1) for o in outs], axis=1),
+            w_trace=np.concatenate([o.w_cap.reshape(z, -1) for o in outs], axis=1),
+            scan_calls=calls, h2d_rows=h2d_rows, h2d_bytes=h2d_bytes,
+            buffer_rows=src.per, steps_per_call=chunk_steps,
+        )
+
+    # -- ring (file) mode --------------------------------------------------
+    def _run_ring(self, on_assign) -> DriveResult:
+        src, cfg = self.source, self.cfg
+        z = self.z
+        m_max = int(self.m_per.max())
+        S = src.scan_steps
+        buf = src.alloc()
+        carry = self.carry
+        t0 = time.perf_counter()
+        iters = 0
+        # Every step with a non-empty window assigns >= 1 edge per instance
+        # (capacity caps sum to > m, so an allowed partition below cap always
+        # exists), so total steps are bounded by m_max plus the window
+        # build-up.
+        max_iters = -(-(m_max + cfg.window_max) // S) + 8
+        while True:
+            assigned = np.asarray(carry.assigned)
+            if (assigned >= self.m_per).all():
+                break
+            iters += 1
+            assert iters <= max_iters, (
+                f"streaming scan failed to converge: {assigned} of "
+                f"{self.m_per} assigned after {iters} calls"
+            )
+            buf = src.refill(buf, np.asarray(carry.cursor))
+            (carry, buf), out = _run_scan_ring(
+                (carry, buf), self._m_real_j, self._allowed_j, self._caps_j,
+                cfg=cfg, num_vertices=self.num_vertices, r_sel=self.r_sel,
+                n_steps=S, has_budget=self.has_budget,
+                update_deg=self.update_deg, n_shards=self.n_shards,
+            )
+            sidx = np.asarray(out.sidx).reshape(z, -1)
+            pout = np.asarray(out.p).reshape(z, -1)
+            for i in range(z):
+                live = sidx[i] >= 0
+                if live.any():
+                    on_assign(i, sidx[i][live].astype(np.int64), pout[i][live])
+            carry = self._recalibrate(carry, t0)
+        cursors = np.asarray(carry.cursor)
+        assert (cursors <= src.hi).all(), (
+            f"scan cursors {cursors} overran uploaded rows {src.hi}"
+        )
+        wall = time.perf_counter() - t0
+        self.carry = carry
+        return self._result(
+            carry, wall, sidx=None, p=None, w_trace=None,
+            scan_calls=iters, h2d_rows=src.h2d_rows, h2d_bytes=src.h2d_bytes,
+            buffer_rows=src.B, steps_per_call=S,
+        )
+
+    def _result(self, carry, wall, *, sidx, p, w_trace, scan_calls,
+                h2d_rows, h2d_bytes, buffer_rows, steps_per_call) -> DriveResult:
+        return DriveResult(
+            sidx=sidx,
+            p=p,
+            w_trace=w_trace,
+            assigned=np.asarray(carry.assigned),
+            score_rows=np.asarray(carry.score_rows),
+            final_w=np.asarray(carry.w_cap),
+            lam=np.asarray(carry.lam),
+            cost_per_score=np.asarray(carry.cost_per_score),
+            wall_time_s=wall,
+            r_sel=self.r_sel,
+            backend=self.backend,
+            n_shards=self.n_shards,
+            scan_calls=scan_calls,
+            h2d_rows=int(h2d_rows),
+            h2d_bytes=int(h2d_bytes),
+            buffer_rows=int(buffer_rows),
+            scan_steps_per_call=int(steps_per_call),
+        )
+
+    def run(
+        self,
+        *,
+        n_chunks: int = 8,
+        on_assign: Optional[Callable[[int, np.ndarray, np.ndarray], None]] = None,
+    ) -> DriveResult:
+        """Drive the scan to completion.
+
+        Resident sources step through ``n_chunks`` provisioned scan calls
+        (+ drain) and return the collected step outputs; file sources loop
+        refill→scan until every instance has assigned its stream, emitting
+        finished placements through ``on_assign(i, local_idx, p)`` (required
+        — the file path never holds O(m) outputs).
+        """
+        if self.source.resident:
+            return self._run_resident(n_chunks)
+        assert on_assign is not None, "file-mode driving requires on_assign"
+        return self._run_ring(on_assign)
+
+    def stats_base(self, res: DriveResult, instance: int) -> dict:
+        """The shared per-instance stat fields every caller reports."""
+        return dict(
+            k=self.cfg.k,
+            name="adwise",
+            wall_time_s=res.wall_time_s,
+            score_rows=int(res.score_rows[instance]),
+            score_count=int(res.score_rows[instance]) * self.cfg.k,
+            final_w=int(res.final_w[instance]),
+            lam_final=float(res.lam[instance]),
+            assigned=int(res.assigned[instance]),
+            warm=self.warm,
+            r_sel=res.r_sel,
+            modeled_cost_per_score=float(res.cost_per_score[instance]),
+            scan_calls=res.scan_calls,
+            h2d_rows=res.h2d_rows,
+            h2d_bytes=res.h2d_bytes,
+            buffer_rows=res.buffer_rows,
+            scan_steps_per_call=res.scan_steps_per_call,
+        )

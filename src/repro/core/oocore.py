@@ -9,21 +9,23 @@ disk each pass and reads the prior pass's placements back from its spill
 (never holding a resident edge array). Output is **bit-identical** to the
 in-memory path for every strategy:
 
-* ADWISE runs through the exact `lax.scan` step of
-  :func:`repro.core.adwise.partition_stream` — the step function gained a
-  ``base`` offset so each scan call indexes a bounded rolling buffer of the
-  stream instead of the whole array. Per scan call of ``S`` steps the cursor
-  advances at most ``window_max + S * assign_batch`` rows (the window can
-  hold at most ``window_max`` read-but-unassigned edges and each step assigns
-  at most ``assign_batch``), so a buffer of ``B`` rows is never overrun with
-  ``S = (B - window_max) // assign_batch`` — and the per-step math is the
-  very same trace the in-memory path runs with ``base=0``.
-* The z>1 spotlight path batches per-instance rolling buffers over
+* ADWISE runs through :class:`repro.core.driver.ScanDriver` over a
+  :class:`repro.core.driver.FileSource` — a **device-resident ring buffer**:
+  logical stream row ``s`` lives in ring slot ``s % B`` on device, each
+  refill ships only the new tail rows (`jax.lax.dynamic_update_slice` into
+  the donated buffer), and the scan step is the very same trace the
+  in-memory path runs (``s % m`` is the identity there). Per scan call of
+  ``S`` steps the cursor advances at most ``window_max + S * assign_batch``
+  rows (the window can hold at most ``window_max`` read-but-unassigned edges
+  and each step assigns at most ``assign_batch``), which bounds the refill —
+  host→device traffic is O(refill) per call, not O(B), and is reported as
+  ``h2d_rows`` / ``h2d_bytes`` in stats (billed by the latency model).
+* The z>1 spotlight path batches per-instance ring buffers over
   per-instance sub-readers (`EdgeFileReader.split` — the same ceil(m/z)
-  ``split_bounds`` byte ranges `EdgeStream` uses) through
-  ``_run_chunk_batched``, mirroring `spotlight_partition`'s batched backend;
-  baseline strategies run chunk-resumably per instance at the local spread-k
-  and are remapped, mirroring the loop backend.
+  ``split_bounds`` byte ranges `EdgeStream` uses) through the same driver,
+  mirroring `spotlight_partition`'s batched backend; baseline strategies run
+  chunk-resumably per instance at the local spread-k and are remapped,
+  mirroring the loop backend.
 * HDRF / Greedy resume their vertex-cache state across chunks
   (`repro.core.baselines.HdrfState` / ``GreedyState``); DBH takes a chunked
   degree pass then a chunked placement pass; Hash / Grid are stateless.
@@ -45,19 +47,11 @@ import tempfile
 import time
 from typing import Callable, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines
-from repro.core.adwise import (
-    Carry,
-    WarmState,
-    _cap_value,
-    _init_carry,
-    _resolve_backend,
-    _run_chunk_batched,
-)
+from repro.core.adwise import WarmState
+from repro.core.driver import FileSource, ScanDriver
 from repro.core.restream import VertexClusteringState, _pack_clusters
 from repro.core.spotlight import _SPOTLIGHT_INCOMPATIBLE, spread_mask
 from repro.core.types import AdwiseConfig, PartitionResult
@@ -152,7 +146,7 @@ class _PassMetrics:
 
 
 # ----------------------------------------------------------------------------
-# The rolling-buffer ADWISE driver (z >= 1 batched, warm-chunk path)
+# The ring-buffer ADWISE driver (z >= 1 batched, warm-chunk path)
 # ----------------------------------------------------------------------------
 
 
@@ -168,7 +162,10 @@ def _drive_adwise(
     prev_read: Optional[List[Callable[[int, int], np.ndarray]]] = None,
     backend: str = "auto",
 ) -> List[dict]:
-    """Feed z instance streams through the ADWISE scan in bounded buffers.
+    """Feed z instance streams through the ADWISE scan in a bounded
+    device-resident ring buffer — a thin caller of
+    :class:`repro.core.driver.ScanDriver` over a
+    :class:`~repro.core.driver.FileSource`.
 
     ``readers[i]`` is instance i's (locally addressed) stream;
     ``write_assign(i, local_idx, p)`` receives finished placements.
@@ -176,164 +173,31 @@ def _drive_adwise(
     buffered re-streaming revocation. Returns per-instance stats dicts.
     """
     z = len(readers)
-    k = cfg.k
-    b = cfg.assign_batch
-    w_max = cfg.window_max
     m_per = np.array([r.num_edges for r in readers], dtype=np.int64)
     m_max = int(m_per.max()) if z else 0
     if m_max == 0:
-        return [dict(k=k, score_rows=0, assigned=0, unassigned=0) for _ in range(z)]
+        return [dict(k=cfg.k, score_rows=0, assigned=0, unassigned=0)
+                for _ in range(z)]
 
-    r_sel = w_max
-    if cfg.lazy:
-        r_sel = min(w_max, max(b, cfg.lazy_budget or max(8, w_max // 8)))
-    if allowed is None:
-        allowed_np = np.ones((z, k), bool)
-    else:
-        allowed_np = np.asarray(allowed, bool)
-    caps = np.array(
-        [
-            _cap_value(cfg, int(m_per[i]), max(int(allowed_np[i].sum()), 1))
-            for i in range(z)
-        ],
-        np.int32,
-    )
-
-    # Buffer of B rows per instance; S scan steps consume at most
-    # w_max + S*b rows (window refill ceiling + per-step assignments), so the
-    # scan never reads past the buffered range.
-    B = int(max(chunk_edges, w_max + b))
-    S = max(1, (B - w_max) // b)
-
-    budget = cfg.latency_budget if cfg.latency_budget is not None else 0.0
-    has_budget = cfg.latency_budget is not None
-    if warm is None:
-        base_carry = _init_carry(cfg, num_vertices, budget)
-        carry = jax.tree.map(lambda x: jnp.broadcast_to(x, (z,) + x.shape), base_carry)
-        update_deg = True
-    else:
-        assert len(warm) == z
-        carries = [
-            Carry.warm_start(
-                cfg, num_vertices, budget,
-                replicas=w.replicas, deg=w.deg, sizes=w.sizes,
-            )
-            for w in warm
-        ]
-        carry = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
-        update_deg = False
-
-    backend_used, n_shards = _resolve_backend(backend, z)
-
-    bufs = np.zeros((z, B, 2), np.int32)
-    prevb = np.full((z, B), -1, np.int32)
-    base = np.zeros((z,), np.int64)
-    filled = np.zeros((z,), np.int64)
-    m_real_j = jnp.asarray(m_per.astype(np.int32))
-    allowed_j = jnp.asarray(allowed_np)
-    caps_j = jnp.asarray(caps)
-
-    t0 = time.perf_counter()
-    iters = 0
-    # Every step with a non-empty window assigns >= 1 edge per instance
-    # (capacity caps sum to > m, so an allowed partition below cap always
-    # exists), so total steps are bounded by m_max plus the window build-up.
-    max_iters = -(-(m_max + w_max) // S) + 8
-    while True:
-        assigned = np.asarray(carry.assigned)
-        if (assigned >= m_per).all():
-            break
-        iters += 1
-        assert iters <= max_iters, (
-            f"out-of-core scan failed to converge: {assigned} of {m_per} "
-            f"assigned after {iters} calls"
-        )
-        cursors = np.asarray(carry.cursor)
-        for i in range(z):
-            cur = int(cursors[i])
-            drop = cur - int(base[i])
-            if drop > 0:
-                keep = max(int(filled[i]) - drop, 0)
-                if keep > 0:
-                    # .copy(): overlapping same-array slice assignment is not
-                    # a guaranteed memmove; the copy is <= B rows (bounded).
-                    bufs[i, :keep] = bufs[i, drop : drop + keep].copy()
-                    prevb[i, :keep] = prevb[i, drop : drop + keep].copy()
-                base[i] = cur
-                filled[i] = keep
-            want_end = min(int(m_per[i]), int(base[i]) + B)
-            while int(base[i] + filled[i]) < want_end:
-                start = int(base[i] + filled[i])
-                arr = readers[i].read(start, want_end - start)
-                if len(arr) == 0:
-                    break
-                f0 = int(filled[i])
-                bufs[i, f0 : f0 + len(arr)] = arr
-                if prev_read is not None:
-                    prevb[i, f0 : f0 + len(arr)] = prev_read[i](start, len(arr))
-                filled[i] += len(arr)
-        carry, out = _run_chunk_batched(
-            carry,
-            jnp.asarray(bufs),
-            m_real_j,
-            allowed_j,
-            caps_j,
-            jnp.asarray(prevb),
-            jnp.asarray(base.astype(np.int32)),
-            cfg=cfg,
-            num_vertices=num_vertices,
-            r_sel=r_sel,
-            n_steps=S,
-            has_budget=has_budget,
-            update_deg=update_deg,
-            n_shards=n_shards,
-        )
-        sidx = np.asarray(out.sidx).reshape(z, -1)
-        pout = np.asarray(out.p).reshape(z, -1)
-        for i in range(z):
-            live = sidx[i] >= 0
-            if live.any():
-                write_assign(i, sidx[i][live].astype(np.int64), pout[i][live])
-        if has_budget:
-            # Recalibrate the modeled cost against measured wall, as the
-            # in-memory chunk loop does between scan calls.
-            jax.block_until_ready(carry.score_rows)
-            wall = time.perf_counter() - t0
-            rows = max(int(np.asarray(carry.score_rows).sum()), 1)
-            carry = carry._replace(
-                cost_per_score=jnp.full((z,), wall / (rows * k), jnp.float32),
-                budget_left=jnp.full((z,), cfg.latency_budget - wall, jnp.float32),
-            )
-    wall = time.perf_counter() - t0
-    assigned = np.asarray(carry.assigned)
-    score_rows = np.asarray(carry.score_rows)
-    w_caps = np.asarray(carry.w_cap)
-    lams = np.asarray(carry.lam)
+    source = FileSource(readers, chunk_edges=chunk_edges, cfg=cfg,
+                        prev_read=prev_read)
+    drv = ScanDriver(source, cfg, num_vertices, allowed=allowed, warm=warm,
+                     backend=backend)
+    res = drv.run(on_assign=write_assign)
     stats = []
     for i in range(z):
-        assert int(assigned[i]) == int(m_per[i]), (
-            f"instance {i}: {int(assigned[i])} of {int(m_per[i])} assigned"
+        assert int(res.assigned[i]) == int(m_per[i]), (
+            f"instance {i}: {int(res.assigned[i])} of {int(m_per[i])} assigned"
         )
         stats.append(
             dict(
-                k=k,
-                name="adwise",
+                drv.stats_base(res, i),
                 batched=True,
-                backend=backend_used,
-                n_shards=n_shards,
+                backend=res.backend,
+                n_shards=res.n_shards,
                 z=z,
                 instance=i,
-                wall_time_s=wall,
-                score_rows=int(score_rows[i]),
-                score_count=int(score_rows[i]) * k,
-                final_w=int(w_caps[i]),
-                lam_final=float(lams[i]),
-                assigned=int(assigned[i]),
                 unassigned=0,
-                warm=warm is not None,
-                r_sel=r_sel,
-                buffer_rows=B,
-                scan_steps_per_call=S,
             )
         )
     return stats
@@ -534,10 +398,19 @@ def _run_restream_chunks(
             for s in stats_list
         ]
 
+    def h2d_of(stats_list) -> tuple[int, int, int]:
+        # The driver's h2d counters are run-level (shared by every
+        # instance); pass-level totals accumulate over passes.
+        s0 = stats_list[0] if stats_list else {}
+        return (s0.get("h2d_rows", 0), s0.get("h2d_bytes", 0),
+                s0.get("scan_calls", 0))
+
     pm = metrics_of(spill)
     pass_rd = [[pm[i].rd] for i in range(z)]
     pass_imbalance = [[pm[i].imbalance] for i in range(z)]
     pass_score_rows = [[s] for s in score_rows_of(pass_stats)]
+    h2d_rows, h2d_bytes, scan_calls = h2d_of(pass_stats)
+    buffer_rows = pass_stats[0].get("buffer_rows", 0)
     best_spill = [spill] * z
     best_rd = [pass_rd[i][0] for i in range(z)]
     best_pass = [1] * z
@@ -568,6 +441,11 @@ def _run_restream_chunks(
             prev_read=prev_read, backend=backend,
         )
         pm = metrics_of(spill)
+        dr, db, dc = h2d_of(pass_stats)
+        h2d_rows += dr
+        h2d_bytes += db
+        scan_calls += dc
+        buffer_rows = max(buffer_rows, pass_stats[0].get("buffer_rows", 0))
         improved = 0.0
         for i in range(z):
             improved = max(improved, pass_rd[i][-1] - pm[i].rd)
@@ -608,6 +486,10 @@ def _run_restream_chunks(
         pass_score_rows=pass_score_rows[0] if z == 1 else None,
         score_rows=score_rows,
         score_count=score_rows * k,
+        h2d_rows=h2d_rows,
+        h2d_bytes=h2d_bytes,
+        scan_calls=scan_calls,
+        buffer_rows=buffer_rows,
         wall_time_s=time.perf_counter() - t0,
     )
 
@@ -643,10 +525,13 @@ def partition_file(
         ``spread``-partition block, exactly like
         :func:`repro.core.spotlight.spotlight_partition`.
       spread: partitions per instance (z > 1 only; default ``max(1, k // z)``).
-      chunk_edges: the resident-edge bound. Per instance, at most
-        ``max(chunk_edges, window_max + assign_batch)`` edge rows are buffered
-        (plus one in-flight read of at most that size); ``stats``
-        report the realized bound as ``peak_resident_edges``.
+      chunk_edges: the resident-edge bound. Per instance, the device-resident
+        ring holds O(max(chunk_edges, window_max + assign_batch)) rows (a
+        quantized multiple — see :class:`repro.core.driver.FileSource`) and
+        the host heap only ever holds one in-flight refill span of at most
+        ``max(chunk_edges, window_max + assign_batch)`` rows; ``stats``
+        report the realized bound as ``peak_resident_edges`` and the shipped
+        traffic as ``h2d_rows`` / ``h2d_bytes``.
       spill_dir: directory for assignment spill files (default: a fresh
         temp dir; the final spill backs the returned ``assign`` memmap, so
         the directory outlives the call — pass e.g. a pytest tmp_path to
@@ -680,6 +565,7 @@ def partition_file(
                  chunk_edges=chunk_edges, peak_resident_edges=0,
                  spill_path=None, wall_time_s=0.0, io_wall_s=0.0,
                  rows_read=0, stream_reads=0, stream_reads_measured=0,
+                 h2d_rows=0, h2d_bytes=0, scan_calls=0, buffer_rows=0,
                  unassigned=0),
         )
     if spill_dir is None:
@@ -768,9 +654,10 @@ def partition_file(
     rows_read = getattr(reader, "rows_read", 0) - rows_before
     io_wall = getattr(reader, "read_seconds", 0.0) - io_before
     measured_reads = max(1, int(round(rows_read / max(m, 1))))
-    # Resident-edge ceiling: per instance, the rolling buffer (or baseline
-    # chunk) plus one in-flight read of at most the same size.
-    buffer_rows = int(stats.get("buffer_rows", chunk_edges))
+    # Resident-edge ceiling: per instance, the (device-resident) ring buffer
+    # (or baseline chunk) plus host-side in-flight reads of at most the same
+    # size. Host heap itself only ever holds one refill span (<= chunk).
+    buffer_rows = int(stats.get("buffer_rows", chunk_edges) or chunk_edges)
     stats = dict(
         stats,
         k=k,

@@ -28,6 +28,14 @@ docstring: **pass count**. Two strategies ride on one warm-start mechanism
 
 Both are one-file registry entries; launchers and benchmarks pick them up
 by name.
+
+Every pass here is a thin call into :func:`repro.core.adwise.partition_stream`
+/ :func:`~repro.core.adwise.partition_stream_batched`, which route through
+the unified :class:`repro.core.driver.ScanDriver` — carry warm-starting,
+r_sel/cap resolution, and budget wiring live there, not per pass. Stats
+aggregate the per-pass host→device stream traffic (``h2d_rows`` /
+``h2d_bytes``), so the latency model bills a p-pass in-memory re-stream as p
+stream uploads.
 """
 from __future__ import annotations
 
@@ -133,6 +141,8 @@ def restream_partition(
     pass_imbalance: List[float] = [metrics.partition_balance(res.assign, k)]
     pass_wall: List[float] = [float(res.stats.get("wall_time_s", 0.0))]
     pass_score_rows: List[int] = [_score_rows(res.stats)]
+    h2d_rows = int(res.stats.get("h2d_rows", 0))
+    h2d_bytes = int(res.stats.get("h2d_bytes", 0))
     best_res, best_rd, best_pass = res, pass_rd[0], 1
     warm_wall = 0.0
 
@@ -147,6 +157,8 @@ def restream_partition(
         pass_imbalance.append(metrics.partition_balance(res.assign, k))
         pass_wall.append(float(res.stats.get("wall_time_s", 0.0)))
         pass_score_rows.append(_score_rows(res.stats))
+        h2d_rows += int(res.stats.get("h2d_rows", 0))
+        h2d_bytes += int(res.stats.get("h2d_bytes", 0))
         if pass_rd[-1] <= best_rd:
             best_res, best_rd, best_pass = res, pass_rd[-1], len(pass_rd)
         if eps is not None and (pass_rd[-2] - pass_rd[-1]) < eps:
@@ -172,6 +184,8 @@ def restream_partition(
         pass_score_rows=pass_score_rows,
         score_rows=score_rows,
         score_count=score_rows * k,
+        h2d_rows=h2d_rows,
+        h2d_bytes=h2d_bytes,
         # Pure partitioning wall: per-pass scan walls + warm-state handoff.
         # Quality metrics computed for stats are measurement, not work.
         wall_time_s=float(sum(pass_wall)) + warm_wall,
@@ -242,6 +256,9 @@ def restream_partition_batched(
                for i in range(z)]
     pass_score_rows = [[int(results[i].stats.get("score_rows", 0))]
                        for i in range(z)]
+    # h2d counters are run-level (one batched program per pass).
+    h2d_rows = int(results[0].stats.get("h2d_rows", 0))
+    h2d_bytes = int(results[0].stats.get("h2d_bytes", 0))
     best = list(results)
     best_rd = [pass_rd[i][0] for i in range(z)]
     best_pass = [1] * z
@@ -256,6 +273,8 @@ def restream_partition_batched(
             streams, valid, num_vertices, cfg,
             allowed=allowed, backend=backend, n_chunks=n_chunks, warm=warms,
         )
+        h2d_rows += int(results[0].stats.get("h2d_rows", 0))
+        h2d_bytes += int(results[0].stats.get("h2d_bytes", 0))
         improved = 0.0
         for i in range(z):
             rd = _rd(edges_i[i], results[i].assign, num_vertices, k)
@@ -285,6 +304,8 @@ def restream_partition_batched(
             pass_score_rows=pass_score_rows[i],
             score_rows=rows,
             score_count=rows * k,
+            h2d_rows=h2d_rows,
+            h2d_bytes=h2d_bytes,
             # All passes ran as batched programs; the accumulated batched
             # wall is shared by every instance (parallel model).
             wall_time_s=wall,

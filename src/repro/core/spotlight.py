@@ -21,7 +21,11 @@ controller state) gains a leading ``z`` axis, and
 ``("instances",)`` mesh axis when multiple devices are visible, so instances
 land on separate devices exactly as they land on separate machines in the
 paper. Instances share nothing: each keeps its own vertex cache (the
-parallel loading model — no communication during partitioning).
+parallel loading model — no communication during partitioning). The batched
+scan itself is driven by the unified :class:`repro.core.driver.ScanDriver`
+(one engine for the in-memory, re-streaming, and out-of-core ring-buffer
+paths), whose host→device accounting surfaces here as ``h2d_rows`` /
+``h2d_bytes``.
 
 Backends:
 
@@ -135,6 +139,9 @@ def _spotlight_batched(
         wall_time_serial_s=serial_wall,
         score_count=sum(r.stats.get("score_count", 0) for r in results),
         stream_reads=s0.get("stream_reads", 1),
+        # One batched program shipped one stream upload for all instances.
+        h2d_rows=s0.get("h2d_rows", 0),
+        h2d_bytes=s0.get("h2d_bytes", 0),
     )
     if strategy == "adwise-restream":
         stats["passes_run"] = s0.get("passes_run", 1)

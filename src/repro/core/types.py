@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, Optional
 
 import numpy as np
@@ -61,6 +62,32 @@ class AdwiseConfig:
         assert self.k >= 1
         assert 1 <= self.window_init <= self.window_max
         assert self.assign_batch >= 1
+
+    # -- derived quantities (single source of truth for every scan caller;
+    #    the streaming-scan driver in `repro.core.driver` resolves through
+    #    these instead of re-deriving per entry point) -----------------------
+
+    def resolve_r_sel(self) -> int:
+        """Lazy-traversal rescore budget R_sel: how many stale window slots
+        are rescored per step (§III-B). Non-lazy mode rescores the whole
+        window."""
+        if not self.lazy:
+            return self.window_max
+        return min(
+            self.window_max,
+            max(
+                self.assign_batch,
+                self.lazy_budget or max(8, self.window_max // 8),
+            ),
+        )
+
+    def cap_value(self, m: int, n_allowed: int) -> int:
+        """Hard per-partition capacity (Eq. 2 guarantee) for an instance
+        streaming ``m`` edges into ``n_allowed`` partitions; BIG when the
+        cap is disabled."""
+        if self.cap_slack is None:
+            return int(np.iinfo(np.int32).max)
+        return int(math.ceil(self.cap_slack * m / max(n_allowed, 1))) + 1
 
 
 @dataclasses.dataclass

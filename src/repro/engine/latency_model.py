@@ -62,6 +62,12 @@ TPU_POD = ClusterProfile(
 # ⇒ ~0.2 µs per (edge, partition) score evaluation + ~1 µs/edge stream IO).
 SCORE_COST_S = 2.3e-7
 EDGE_IO_COST_S = 1.0e-6
+# Host→device stream-buffer bandwidth (PCIe-gen4-class x16 sustained). The
+# scan drivers count every byte they ship (`h2d_bytes` in partition stats —
+# O(m) for the ring-buffer file path, O(m) once for resident uploads); the
+# model bills the transfer so buffer-management regressions (e.g. re-uploading
+# a full ring per scan call) show up as modeled latency, not just wall noise.
+H2D_BW_BPS = 16e9
 
 
 def partition_latency(stats: dict, m: int, k: int) -> float:
@@ -75,7 +81,9 @@ def partition_latency(stats: dict, m: int, k: int) -> float:
     stats['stream_reads'] (re-streaming reports passes_run there, 2PS
     reports 2), falling back to stats['passes_run'] / stats['passes'] and
     finally a single read — so Fig. 7-style plots bill re-streaming fairly
-    with ``m`` being the plain stream length everywhere. The *measured* CPU
+    with ``m`` being the plain stream length everywhere. Device-offloaded
+    scans additionally bill their measured host→device stream traffic
+    (stats['h2d_bytes'] / :data:`H2D_BW_BPS`). The *measured* CPU
     wall-clock stays in stats['wall_time_s'] for reference — the model keeps
     partitioning and processing in the same cluster units.
     """
@@ -89,7 +97,8 @@ def partition_latency(stats: dict, m: int, k: int) -> float:
         or stats.get("passes")
         or 1
     )
-    return scores * SCORE_COST_S + reads * m * EDGE_IO_COST_S
+    h2d = float(stats.get("h2d_bytes", 0)) / H2D_BW_BPS
+    return scores * SCORE_COST_S + reads * m * EDGE_IO_COST_S + h2d
 
 
 def process_latency(

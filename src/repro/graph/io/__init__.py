@@ -9,9 +9,14 @@ real, huge workloads). Three pieces:
   spotlight per-instance byte ranges).
 * :mod:`repro.graph.io.ingest` — one-pass SNAP-style text → binary ingester
   (comments, blank lines, whitespace variants, optional dense relabeling,
-  inferred n) with O(chunk) edge memory.
-* :mod:`repro.graph.io.shuffle` — two-pass external shuffle, O(chunk) memory,
-  for stream-order sensitivity experiments on file-resident graphs.
+  inferred n) with O(chunk) edge memory. Three parse tiers behind one
+  semantics: a C-tokenizer fast path for strict numeric blocks, a vectorized
+  ``np.frombuffer`` block parser, and the per-line reference loop (the
+  parity oracle, ``parser="python"``).
+* :mod:`repro.graph.io.shuffle` — two-pass external shuffle, O(chunk) memory
+  as a *hard* bound (oversized buckets recursively re-scatter; the realized
+  profile comes back as a :class:`ShuffleReport`), for stream-order
+  sensitivity experiments on file-resident graphs.
 
 ``repro.core.oocore.partition_file`` drives any registry partitioner over an
 :class:`EdgeFileReader` with bounded resident edge memory.
@@ -26,7 +31,7 @@ from repro.graph.io.format import (
     write_edge_file,
 )
 from repro.graph.io.ingest import IngestReport, ingest_text
-from repro.graph.io.shuffle import shuffle_file
+from repro.graph.io.shuffle import ShuffleReport, shuffle_file
 
 __all__ = [
     "MAGIC",
@@ -38,5 +43,6 @@ __all__ = [
     "write_edge_file",
     "IngestReport",
     "ingest_text",
+    "ShuffleReport",
     "shuffle_file",
 ]

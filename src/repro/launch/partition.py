@@ -276,6 +276,10 @@ def main(argv=None):
             f"({res.stats['stream_reads_measured']} stream reads, billed "
             f"{res.stats['stream_reads']}), io_wall={res.stats['io_wall_s']:.2f}s, "
             f"resident edges <= {res.stats['peak_resident_edges']}, "
+            f"h2d={res.stats.get('h2d_bytes', 0) / 1e6:.2f} MB "
+            f"({res.stats.get('h2d_rows', 0)} rows over "
+            f"{res.stats.get('scan_calls', 0)} scan calls, "
+            f"ring={res.stats.get('buffer_rows', 0)} rows), "
             f"spill={res.stats['spill_path']}"
         )
 

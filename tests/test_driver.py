@@ -1,0 +1,201 @@
+"""Unified streaming-scan driver (`repro.core.driver`): ring-buffer
+invariants, bit-parity between the device-resident ring (file) path and the
+resident full-upload path, and the host→device traffic accounting."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AdwiseConfig,
+    partition_file,
+    run_partitioner,
+    spotlight_partition,
+)
+from repro.core.adwise import partition_stream
+from repro.core.driver import (
+    FileSource,
+    ResidentSource,
+    ScanDriver,
+    resolve_backend,
+)
+from repro.graph import rmat
+from repro.graph.io import EdgeFileReader, write_edge_file
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def rmat_file(tmp_path_factory):
+    edges, n = rmat(8, 1100, seed=21)
+    td = tmp_path_factory.mktemp("driver")
+    path = str(td / "rmat.adw")
+    write_edge_file(path, edges, n)
+    return path, edges, n
+
+
+# ----------------------------------------------------------------------------
+# FileSource sizing / refill invariants
+# ----------------------------------------------------------------------------
+
+
+def test_file_source_sizing(rmat_file):
+    path, edges, n = rmat_file
+    for chunk, wmax, b in [(64, 8, 1), (400, 8, 2), (100, 16, 4), (7, 4, 1)]:
+        cfg = AdwiseConfig(k=K, window_max=wmax, assign_batch=b)
+        with EdgeFileReader(path) as r:
+            src = FileSource([r], chunk_edges=chunk, cfg=cfg)
+            f = wmax + src.scan_steps * b
+            assert src.B % src.Rq == 0
+            # Quantized refills always leave >= F consumable rows ahead.
+            assert src.B >= f + src.Rq - 1
+            assert src.Rq & (src.Rq - 1) == 0  # power of two
+            # Single reads never exceed the caller's chunk bound.
+            assert src.max_span <= max(chunk, wmax + b)
+            assert src.max_span % src.Rq == 0 or src.max_span == src.Rq
+
+
+def test_file_source_refill_overrun_guard(rmat_file):
+    """A cursor past the uploaded high-water mark is a bug, not a refill."""
+    path, _, n = rmat_file
+    cfg = AdwiseConfig(k=K, window_max=8)
+    with EdgeFileReader(path) as r:
+        src = FileSource([r], chunk_edges=100, cfg=cfg)
+        buf = src.alloc()
+        buf = src.refill(buf, np.zeros(1, np.int64))
+        with pytest.raises(AssertionError, match="overran"):
+            src.refill(buf, np.array([int(src.hi[0]) + 1], np.int64))
+
+
+def test_driver_direct_ring_run(rmat_file):
+    """Drive ScanDriver over a FileSource by hand: parity with the resident
+    path, cursors land exactly on the uploaded high-water mark, and every
+    stream row ships to the device exactly once."""
+    path, edges, n = rmat_file
+    m = len(edges)
+    cfg = AdwiseConfig(k=K, window_max=8)
+    ref = partition_stream(edges, n, cfg)
+    assign = np.full((m,), -1, np.int32)
+
+    def on_assign(i, idx, p):
+        assign[idx] = p
+
+    with EdgeFileReader(path) as r:
+        src = FileSource([r], chunk_edges=150, cfg=cfg)
+        drv = ScanDriver(src, cfg, n)
+        res = drv.run(on_assign=on_assign)
+        assert (src.hi == m).all()  # no over- or under-upload
+    assert (assign == ref.assign).all()
+    assert int(res.assigned[0]) == m
+    assert res.h2d_rows == m  # each row shipped exactly once
+    assert res.h2d_bytes == m * 8  # no prev-pass buffer on a cold pass
+    assert res.buffer_rows == src.B
+
+
+# ----------------------------------------------------------------------------
+# Property: ring path == full-upload path over random geometry
+# ----------------------------------------------------------------------------
+
+
+@settings(max_examples=6)
+@given(
+    chunk=st.integers(min_value=48, max_value=500),
+    wmax=st.sampled_from([4, 8]),
+    b=st.sampled_from([1, 2]),
+    z=st.sampled_from([1, 2, 4]),
+)
+def test_ring_parity_property(rmat_file, tmp_path_factory, chunk, wmax, b, z):
+    """For random (chunk_edges, window_max, assign_batch, z): the ring-buffer
+    file path assigns bit-identically to the in-memory path, never overruns
+    the refill cursor (asserted inside FileSource), and ships each stream
+    row once."""
+    path, edges, n = rmat_file
+    m = len(edges)
+    cfg = dict(window_max=wmax, assign_batch=b)
+    if z == 1:
+        ref = run_partitioner("adwise", edges, n, K, seed=0, **cfg)
+    else:
+        ref = spotlight_partition(
+            edges, n, K, z=z, spread=max(1, K // z), strategy="adwise",
+            cfg=AdwiseConfig(k=K, seed=0, **cfg),
+        )
+    td = tmp_path_factory.mktemp("ringprop")
+    with EdgeFileReader(path) as r:
+        res = partition_file(
+            r, "adwise", K, z=z, spread=max(1, K // z) if z > 1 else None,
+            seed=0, chunk_edges=chunk, spill_dir=str(td), **cfg,
+        )
+    assert (np.asarray(res.assign) == ref.assign).all(), (
+        f"ring diverged at chunk={chunk} wmax={wmax} b={b} z={z}"
+    )
+    assert res.stats["h2d_rows"] == m, "each row must ship exactly once"
+    assert res.stats["h2d_bytes"] == m * 8
+    if res.stats["scan_calls"] >= 2:
+        # The point of the ring: per-call traffic is the refill, not the
+        # full buffer re-upload (z * B rows per call).
+        full_upload = res.stats["scan_calls"] * z * res.stats["buffer_rows"]
+        assert res.stats["h2d_rows"] < full_upload
+
+
+def test_restream_ring_h2d_accounting(rmat_file, tmp_path):
+    """Re-streaming from disk: pass 1 ships (u, v) rows only; pass 2 also
+    ships the prior pass's placements (4 more bytes per row) for buffered
+    revocation — and still matches the in-memory restream bit for bit."""
+    path, edges, n = rmat_file
+    m = len(edges)
+    cfg = dict(window_max=8, passes=2)
+    ref = run_partitioner("adwise-restream", edges, n, K, seed=0, **cfg)
+    with EdgeFileReader(path) as r:
+        res = partition_file(r, "adwise-restream", K, seed=0, chunk_edges=200,
+                             spill_dir=str(tmp_path), **cfg)
+    assert (np.asarray(res.assign) == ref.assign).all()
+    assert res.stats["h2d_rows"] == 2 * m
+    assert res.stats["h2d_bytes"] == m * 8 + m * 12
+    # In-memory restream bills one full stream upload per pass.
+    assert ref.stats["h2d_rows"] == 2 * m
+
+
+# ----------------------------------------------------------------------------
+# Resident-source driving (the partition_stream / batched thin callers)
+# ----------------------------------------------------------------------------
+
+
+def test_partition_stream_reports_h2d(rmat_file):
+    path, edges, n = rmat_file
+    m = len(edges)
+    res = partition_stream(edges, n, AdwiseConfig(k=K, window_max=8))
+    # One resident upload: the (m, 2) stream plus the (m,) prev buffer.
+    assert res.stats["h2d_rows"] == m
+    assert res.stats["h2d_bytes"] == m * 8 + m * 4
+    assert res.stats["scan_calls"] >= 1
+    assert res.stats["unassigned"] == 0
+
+
+def test_resident_source_validates_shapes():
+    streams = np.zeros((2, 10, 2), np.int32)
+    src = ResidentSource(streams, np.array([10, 7]))
+    assert src.z == 2 and src.per == 10 and src.upload_rows == 20
+    with pytest.raises(AssertionError):
+        ResidentSource(streams, np.array([10, 11]))  # m_per > per
+
+
+def test_resolve_backend():
+    assert resolve_backend("vmap", 4) == ("vmap", 0)
+    # Single-device hosts degrade shard_map to vmap.
+    import jax
+
+    if jax.device_count() == 1:
+        assert resolve_backend("auto", 4) == ("vmap", 0)
+        assert resolve_backend("shard_map", 4) == ("vmap", 0)
+    with pytest.raises(ValueError, match="backend"):
+        resolve_backend("loop", 2)
+
+
+def test_driver_rejects_file_mode_without_sink(rmat_file):
+    path, _, n = rmat_file
+    cfg = AdwiseConfig(k=K, window_max=8)
+    with EdgeFileReader(path) as r:
+        src = FileSource([r], chunk_edges=100, cfg=cfg)
+        drv = ScanDriver(src, cfg, n)
+        with pytest.raises(AssertionError, match="on_assign"):
+            drv.run()

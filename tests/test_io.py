@@ -382,3 +382,200 @@ def test_rmat_roundtrip_property():
             write_edge_file(p, edges, n)
             got, n2 = read_edge_file(p)
             assert n2 == n and (got == edges).all()
+
+
+# ----------------------------------------------------------------------------
+# Vectorized bytes-level ingester vs the per-line parity oracle
+# ----------------------------------------------------------------------------
+
+
+def _ingest_both(tmp_path, content, name="p", newline="", **kw):
+    """Run both parsers over the same text; assert identical outcome."""
+    src = str(tmp_path / f"{name}.txt")
+    with open(src, "w", newline=newline) as f:
+        f.write(content)
+    outcomes = []
+    for parser in ("python", "bytes"):
+        dst = str(tmp_path / f"{name}.{parser}.adw")
+        try:
+            rep = ingest_text(src, dst, parser=parser, **kw)
+            outcomes.append(("ok", rep, read_edge_file(dst)))
+        except ValueError as e:
+            outcomes.append(("err", str(e).replace(src, "SRC"), None))
+    (k1, a1, d1), (k2, a2, d2) = outcomes
+    assert k1 == k2, f"{content!r}: python={k1} bytes={k2} ({a1} / {a2})"
+    if k1 == "err":
+        assert a1 == a2, f"{content!r}: error messages diverged"
+        return None
+    (e1, n1), (e2, n2) = d1, d2
+    assert (e1 == e2).all() and n1 == n2, f"{content!r}: binaries diverged"
+    for field in ("num_edges", "num_vertices", "lines", "comment_lines",
+                  "blank_lines", "bytes_read", "relabeled"):
+        assert getattr(a1, field) == getattr(a2, field), (content, field)
+    return a2
+
+
+def test_ingest_bytes_parser_parity(tmp_path):
+    """The vectorized parser reproduces the reference parser bit-for-bit on
+    every supported shape: comments (all three prefixes, interleaved),
+    blanks, tabs/multi-space, trailing fields, CRLF, a missing final
+    newline, and negative ids under relabel."""
+    rng = np.random.default_rng(11)
+    body = []
+    for i, (u, v) in enumerate(random_edges(rng, 300, 900)):
+        sep = ["\t", " ", "  ", " \t "][i % 4]
+        trail = " 7 0" if i % 5 == 0 else ""
+        body.append(f"{u}{sep}{v}{trail}")
+        if i % 97 == 0:
+            body.append("")
+        if i % 131 == 0:
+            body.append(["# note", "% note", "// note"][i % 3])
+    content = "# header\n% header2\n// header3\n" + "\n".join(body) + "\n"
+    rep = _ingest_both(tmp_path, content, name="mixed")
+    assert rep.comment_lines >= 3 and rep.blank_lines > 0
+    # Pure-clean body (tier-0 C tokenizer end to end).
+    clean = "\n".join(f"{u} {v}" for u, v in random_edges(rng, 99, 500))
+    _ingest_both(tmp_path, clean + "\n", name="clean")
+    # CRLF and a file without a trailing newline.
+    _ingest_both(tmp_path, "1 2\r\n3 4\r\n5 6", name="crlf")
+    # Lone-\r terminators (classic-Mac; text mode treats them as newlines).
+    _ingest_both(tmp_path, "1 2\r3 4\r# c\r5 6", name="mac")
+    # Signed / exotic-but-int()-valid tokens ride the python fallback.
+    _ingest_both(tmp_path, "+1 2\n3 +4\n", name="plus")
+    _ingest_both(tmp_path, "-3 -9\n-9 -3\n", name="neg", relabel=True)
+    # Empty and comment-only files.
+    _ingest_both(tmp_path, "", name="empty")
+    _ingest_both(tmp_path, "# a\n\n% b\n", name="comments_only")
+    # Valid non-ASCII text (accented comment, unicode NBSP separator —
+    # str.split() treats it as whitespace) parses identically.
+    _ingest_both(tmp_path, "# café\n1 2\n3 4\n", name="unicode")
+
+
+def test_ingest_bytes_parser_rejects_invalid_utf8(tmp_path):
+    """The text-mode reference decodes the whole file; the bytes parser
+    must fail on undecodable bytes exactly like it (not silently ingest)."""
+    src = str(tmp_path / "latin1.txt")
+    with open(src, "wb") as f:
+        f.write(b"# caf\xe9 header\n1 2\n3 4\n")
+    for parser in ("python", "bytes"):
+        with pytest.raises(UnicodeDecodeError):
+            ingest_text(src, str(tmp_path / f"{parser}.adw"), parser=parser)
+
+
+def test_ingest_bytes_parser_error_parity(tmp_path):
+    """Malformed inputs raise the exact reference error from every tier."""
+    for i, content in enumerate([
+        "1 2\n3\n",                      # too few fields
+        "1 2\nx y\n",                    # non-integer
+        "1 2\n3 4.5\n",                  # float id
+        "-1 5\n",                        # negative without relabel
+        "99999999999999999999 1\n",      # > int64 (overflow both parsers)
+        "1 2\n- 3\n",                    # lone dash
+        "1 2\r3 4\n5 6\nx y\n",          # lone-\r line before the bad line:
+                                         # the reported line number must
+                                         # count it (universal newlines)
+    ]):
+        assert _ingest_both(tmp_path, content, name=f"bad{i}") is None
+
+
+def test_ingest_id_policy_errors_report_exact_line(tmp_path):
+    """Negative-id / pinned-n violations point at the offending line itself
+    (not a batch or block start), identically for both parsers and any
+    batching."""
+    lines = [f"{i} {i + 1}" for i in range(100)]
+    lines[86] = "5 -7"  # line 87 (1-based)
+    src = str(tmp_path / "neg.txt")
+    with open(src, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    for parser, kw in [("python", dict(chunk_lines=30)),
+                       ("python", {}),
+                       ("bytes", dict(chunk_bytes=256)),
+                       ("bytes", {})]:
+        with pytest.raises(ValueError, match="near line 87"):
+            ingest_text(src, str(tmp_path / "o.adw"), parser=parser, **kw)
+    # Multiple violations of different types/magnitudes: the FIRST one in
+    # stream order wins, for every parser and every batch/block granularity
+    # (argmin/argmax would pick the most extreme value instead, which
+    # diverges once the violations straddle a batch boundary).
+    lines2 = [f"{i} {i + 1}" for i in range(60)]
+    lines2[9] = "5 -1"    # first violation (line 10)
+    lines2[44] = "-99 5"  # more extreme, later
+    src3 = str(tmp_path / "two.txt")
+    with open(src3, "w") as f:
+        f.write("\n".join(lines2) + "\n")
+    for parser, kw in [("python", dict(chunk_lines=30)), ("python", {}),
+                       ("bytes", dict(chunk_bytes=128)), ("bytes", {})]:
+        with pytest.raises(ValueError, match="id -1 near line 10"):
+            ingest_text(src3, str(tmp_path / "o3.adw"), parser=parser, **kw)
+    # Pinned-n violation, with comments/blanks shifting the data-row index.
+    content = "# head\n\n10 11\n999 1\n"
+    src2 = str(tmp_path / "pin.txt")
+    with open(src2, "w") as f:
+        f.write(content)
+    for parser in ("python", "bytes"):
+        with pytest.raises(ValueError, match="near line 4"):
+            ingest_text(src2, str(tmp_path / "o2.adw"), parser=parser,
+                        num_vertices=100)
+
+
+def test_ingest_bytes_chunking_invariance(tmp_path):
+    """Block boundaries never change the fast parser's output."""
+    rng = np.random.default_rng(3)
+    edges = random_edges(rng, 50, 400)
+    content = "# head\n" + "\n".join(f"{u} {v}" for u, v in edges) + "\n"
+    src = str(tmp_path / "blk.txt")
+    with open(src, "w") as f:
+        f.write(content)
+    outs = []
+    for cb in (16, 301, 1 << 20):
+        dst = str(tmp_path / f"blk{cb}.adw")
+        ingest_text(src, dst, parser="bytes", chunk_bytes=cb)
+        outs.append(read_edge_file(dst))
+    for got, n in outs:
+        assert (got == edges).all() and n == outs[0][1]
+
+
+# ----------------------------------------------------------------------------
+# External shuffle: the hard O(chunk) bucket bound
+# ----------------------------------------------------------------------------
+
+
+def test_shuffle_hard_bound_adversarial(tmp_path):
+    """An adversarially skewed stream (one dominant edge, sorted tail) with
+    a tiny open-file budget must recurse — and every in-memory bucket load
+    stays within the hard 2x-chunk bound, proven by the returned report."""
+    m, chunk = 6000, 64
+    skew = np.zeros((m // 2, 2), np.int32)          # one repeated edge
+    tail = np.stack([np.arange(m - m // 2), np.arange(m - m // 2)], 1)
+    edges = np.concatenate([skew, tail.astype(np.int32)])
+    src = str(tmp_path / "skew.adw")
+    write_edge_file(src, edges, int(edges.max()) + 1)
+    dst = str(tmp_path / "skew_shuf.adw")
+    rep = shuffle_file(src, dst, seed=5, chunk_edges=chunk, max_open=2)
+    assert rep.depth >= 2, "tiny max_open must force recursive re-splits"
+    assert rep.max_loaded_rows <= rep.bound_rows == 2 * chunk
+    got, _ = read_edge_file(dst)
+    order = lambda e: e[np.lexsort((e[:, 1], e[:, 0]))]
+    assert (order(got) == order(edges)).all()
+    assert not (got == edges).all()
+    # Deterministic in seed.
+    dst2 = str(tmp_path / "skew_shuf2.adw")
+    rep2 = shuffle_file(src, dst2, seed=5, chunk_edges=chunk, max_open=2)
+    got2, _ = read_edge_file(dst2)
+    assert (got == got2).all()
+    assert rep2.max_loaded_rows == rep.max_loaded_rows
+
+
+def test_shuffle_rejects_degenerate_fanout(tmp_path):
+    src = str(tmp_path / "x.adw")
+    write_edge_file(src, np.zeros((10, 2), np.int32), 1)
+    with pytest.raises(ValueError, match="max_open"):
+        shuffle_file(src, str(tmp_path / "y.adw"), max_open=1)
+
+
+def test_shuffle_report_default_path(graph_file, tmp_path):
+    path, edges, _ = graph_file
+    rep = shuffle_file(path, str(tmp_path / "s.adw"), seed=1, chunk_edges=300)
+    assert rep.num_edges == len(edges)
+    assert 0 < rep.max_loaded_rows <= rep.bound_rows
+    assert rep.buckets >= 1 and rep.depth >= 0

@@ -22,13 +22,22 @@ else
   python -m pytest -x -q
 fi
 
-python -m benchmarks.run --smoke
+# The smoke pass also writes a machine-readable BENCH_<n>.json into
+# bench_logs/ (kept / uploaded as a CI artifact), so the perf trajectory —
+# partition walls, h2d stream traffic, ingest MB/s, supersteps/s — is
+# tracked run over run instead of scrolling away in logs.
+python -m benchmarks.run --smoke --json-dir bench_logs
 
 # Multi-device path: batched spotlight (shard_map over instances) + padded
 # engine mesh on 2 fake CPU devices, every run.
 XLA_FLAGS="--xla_force_host_platform_device_count=2" \
   python -m benchmarks.bench_scaling --smoke --in-process
 
-# Out-of-core path: text ingest -> binary -> file-driven partitioning in a
-# tmpdir, with bit-parity against the in-memory path asserted inside.
+# Ring-buffer smoke: text ingest (bytes vs python parser parity) -> binary
+# -> file-driven partitioning in a tmpdir. Asserted inside: bit-parity with
+# the in-memory path, h2d_rows == m (each stream row ships to the device
+# once), and per-scan-call h2d below a full ring re-upload.
 python -m benchmarks.bench_io --smoke
+
+echo "bench summaries kept:"
+ls -l bench_logs/ 2>/dev/null || true
