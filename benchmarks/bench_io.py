@@ -17,6 +17,9 @@ Everything runs in a tmpdir on an R-MAT graph:
      bench also asserts the host→device traffic contract: each stream row
      ships once (h2d_rows == m), and per-scan-call traffic is the refill
      size, NOT a full (z, B, 2) buffer re-upload.
+  4. step-core scan vs numpy-oracle wall (hdrf / greedy / 2ps-l): the
+     device-resident `lax.scan` cores against the per-edge python loops they
+     replaced, parity asserted, rows kept in the BENCH_<n>.json summary.
 """
 from __future__ import annotations
 
@@ -47,6 +50,10 @@ def main(argv=None):
     ap.add_argument("--chunk-edges", type=int, default=1 << 14)
     ap.add_argument("--strategies", nargs="+",
                     default=["hdrf", "dbh", "adwise"])
+    ap.add_argument("--scan-oracle", nargs="*",
+                    default=["hdrf", "greedy", "2ps-l"],
+                    help="strategies timed scan-core vs numpy-oracle "
+                         "(in-memory, parity asserted); pass none to skip")
     ap.add_argument("--window", type=int, default=32)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny graph, k=8, fastest pass (CI)")
@@ -56,7 +63,7 @@ def main(argv=None):
         args.scale = 0.002
         args.k = 8
         args.chunk_edges = 2048
-        args.strategies = ["dbh", "adwise"]
+        args.strategies = ["dbh", "hdrf", "adwise"]
         args.window = 8
 
     m = max(1000, int(4e6 * args.scale))
@@ -157,6 +164,27 @@ def main(argv=None):
             print(f"{strat},{t_mem:.3f},{t_file:.3f},"
                   f"{res.stats['io_wall_s']:.3f},{row['overhead']:.2f}x,"
                   f"{h2d_per_call:.0f}/{ring_rows},{parity}")
+
+        # --- 4) step-core scan vs numpy-oracle wall ----------------------
+        out["scan_vs_oracle"] = []
+        if args.scan_oracle:
+            print("strategy,scan_s,oracle_s,oracle/scan,parity")
+        for strat in args.scan_oracle:
+            t0 = time.perf_counter()
+            res_s = run_partitioner(strat, edges, n, args.k, seed=0,
+                                    scan=True)
+            t_scan = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            res_o = run_partitioner(strat, edges, n, args.k, seed=0,
+                                    scan=False)
+            t_oracle = time.perf_counter() - t0
+            parity = bool((res_s.assign == res_o.assign).all())
+            assert parity, f"{strat}: scan core diverged from numpy oracle"
+            row = dict(strategy=strat, t_scan_s=t_scan, t_oracle_s=t_oracle,
+                       speedup=t_oracle / max(t_scan, 1e-9), parity=parity)
+            out["scan_vs_oracle"].append(row)
+            print(f"{strat},{t_scan:.3f},{t_oracle:.3f},"
+                  f"{row['speedup']:.2f}x,{parity}")
 
     if args.json:
         json.dump(out, open(args.json, "w"), indent=1)

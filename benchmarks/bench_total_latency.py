@@ -15,9 +15,12 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
+
+import numpy as np
 
 from benchmarks.common import run_strategy
-from repro.core import available_strategies
+from repro.core import available_strategies, run_partitioner
 from repro.engine import PAPER_CLUSTER, build_partitioned_graph, partition_latency, process_latency
 from repro.graph import make_graph
 
@@ -43,6 +46,11 @@ def main(argv=None):
     ap.add_argument("--restream-passes", nargs="+", type=int, default=[2],
                     help="adwise-restream pass counts swept at each window "
                          "(the second invested-latency knob); 0 disables")
+    ap.add_argument("--scan-oracle", nargs="*",
+                    default=["hdrf", "greedy", "2ps-l"],
+                    help="strategies timed as step-core scan vs numpy "
+                         "oracle per graph (parity asserted, rows kept in "
+                         "the json); pass none to skip")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
 
@@ -70,6 +78,28 @@ def main(argv=None):
                 # restream: passes_run) — partition_latency bills IO per read.
                 t_part = partition_latency(res.stats, len(edges), args.k)
                 parts.append((label, L, res, rd, g, t_part))
+        # Step-core scan vs numpy-oracle partition wall (the per-edge loops
+        # every core replaced stay as parity references — timed side by side
+        # so the perf trajectory tracks the scan's advantage per graph).
+        for strat in args.scan_oracle:
+            t0 = time.perf_counter()
+            res_s = run_partitioner(strat, edges, n, args.k, seed=0, scan=True)
+            t_scan = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            res_o = run_partitioner(strat, edges, n, args.k, seed=0,
+                                    scan=False)
+            t_oracle = time.perf_counter() - t0
+            assert (np.asarray(res_s.assign) == res_o.assign).all(), (
+                f"{strat}: scan core diverged from numpy oracle"
+            )
+            rows.append(dict(
+                graph=preset, kind="scan_vs_oracle", strategy=strat,
+                t_scan_s=t_scan, t_oracle_s=t_oracle,
+                speedup=t_oracle / max(t_scan, 1e-9),
+            ))
+            print(f"{preset},scan_vs_oracle,{strat},,"
+                  f"{t_scan:.3f},{t_oracle:.3f},"
+                  f"{t_oracle / max(t_scan, 1e-9):.2f}x,")
         for wname, (iters, width) in WORKLOADS.items():
             for strategy, L, res, rd, g, t_part in parts:
                 model = process_latency(g, iters, width, PAPER_CLUSTER)

@@ -55,6 +55,10 @@ def _summarize(results: dict) -> dict:
                     if row.get("scan_calls") else None
                 )
                 head["ring_rows"] = row.get("ring_rows")
+    for row in io.get("scan_vs_oracle", []):
+        head.setdefault("scan_core_speedup", {})[row["strategy"]] = (
+            row.get("speedup")
+        )
     for row in results.get("scaling") or []:
         head.setdefault("supersteps_per_s", {})[str(row.get("devices"))] = (
             row.get("supersteps_per_s")

@@ -37,29 +37,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scoring
-from repro.core.types import AdwiseConfig, PartitionResult
+from repro.core.types import AdwiseConfig, PartitionResult, WarmState
 
 __all__ = ["partition_stream", "partition_stream_batched", "WarmState"]
 
 NEG_INF = scoring.NEG_INF
 _BIG_I32 = np.int32(2**31 - 1)
-
-
-class WarmState(NamedTuple):
-    """State carried between re-streaming passes (`core/restream.py`).
-
-    ``replicas``/``deg``/``sizes`` warm-start the vertex cache of the next
-    pass; ``prev_assign`` (when given) enables buffered-re-streaming
-    revocation: an edge's previous assignment is subtracted from the
-    partition sizes at the moment the edge re-enters the window, so the
-    balance terms always see the *net* partition loads while the pass
-    re-places the stream.
-    """
-
-    replicas: np.ndarray  # (V, K) bool
-    deg: np.ndarray  # (V,) int — full (or partial) streamed degrees
-    sizes: np.ndarray  # (K,) int — partition loads at warm-start time
-    prev_assign: Optional[np.ndarray] = None  # (m,) int32, -1 = none
 
 
 class Carry(NamedTuple):
@@ -473,15 +456,16 @@ def partition_stream_batched(
     streams: np.ndarray,
     valid: np.ndarray,
     num_vertices: int,
-    cfg: AdwiseConfig,
+    cfg: Optional[AdwiseConfig],
     *,
+    core=None,
     allowed: Optional[np.ndarray] = None,
     backend: str = "auto",
     n_chunks: int = 8,
     cost_per_score: Optional[float] = None,
     warm: Optional[Sequence[WarmState]] = None,
 ) -> list[PartitionResult]:
-    """Run ``z`` independent ADWISE instance scans as ONE batched program.
+    """Run ``z`` independent instance scans as ONE batched program.
 
     This is the device-parallel spotlight entry point: the same step
     function `vmap`-ped over a leading instance axis — and, when multiple
@@ -497,7 +481,13 @@ def partition_stream_batched(
       valid: (z, per) bool — per-row *prefix* mask; row i's real stream is
         ``streams[i, :valid[i].sum()]``.
       num_vertices: |V| (shared; instances keep independent vertex caches).
-      cfg: AdwiseConfig (shared by all instances).
+      cfg: AdwiseConfig (shared by all instances); may be None when ``core``
+        is given.
+      core: optional :class:`repro.core.driver.StepCore` — ANY step-core
+        strategy (HdrfCore, GreedyCore, TpslCore, ...) vmaps over the z
+        instance axis through the exact same driver path as ADWISE;
+        per-instance state (e.g. HDRF's counter-based tie seeds ``seed+i``)
+        comes from the core's ``seed_instances`` hook.
       allowed: optional (z, k) bool — per-instance spotlight spread masks.
         Default: every instance may fill every partition.
       backend: 'vmap' (single device), 'shard_map' (instances sharded over
@@ -527,7 +517,8 @@ def partition_stream_batched(
     assert (valid[:, :-1] >= valid[:, 1:]).all() if per > 1 else True, (
         "valid must be a per-row prefix mask (padding only at the tail)"
     )
-    k = cfg.k
+    assert core is not None or cfg is not None, "need a cfg or a step-core"
+    k = core.k if core is not None else cfg.k
     m_per = valid.sum(axis=1).astype(np.int64)  # (z,)
     m_max = int(m_per.max()) if z else 0
     if allowed is not None:
@@ -540,7 +531,9 @@ def partition_stream_batched(
         ]
 
     drv = ScanDriver(
-        ResidentSource(streams, m_per), cfg, num_vertices,
+        ResidentSource(streams, m_per),
+        core if core is not None else cfg,
+        num_vertices,
         allowed=allowed,
         warm=list(warm) if warm is not None else None,
         cost_per_score=cost_per_score,

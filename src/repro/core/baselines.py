@@ -6,27 +6,46 @@
 * Hashing                          — edge hash (PowerGraph/GraphX default).
 * Grid   (GraphBuilder)            — 2D grid-constrained hashing.
 
-HDRF and Greedy are sequential by nature (they read the evolving vertex
-cache); they are implemented as tight numpy loops. DBH / Hashing / Grid are
-stateless given degrees and fully vectorized.
-
 Every partitioner is factored into a *chunk-resumable core* — a state object
-(vertex cache, partition loads, RNG) plus an ``assign_chunk`` step — so the
+(vertex cache, partition loads) plus an ``assign_chunk`` step — so the
 out-of-core driver (`repro.core.oocore.partition_file`) can stream a
 file-resident graph through the identical math in bounded-size chunks: the
-whole-array entry points below are exactly "init state, one chunk". HDRF's
-tie-break noise draws from the state's generator as the stream is consumed
-(numpy Generators fill sequentially, so any chunking of the stream sees the
-same noise sequence as the one-shot draw did).
+whole-array entry points below are exactly "init state, one chunk".
+
+HDRF and Greedy additionally exist as **step-cores**
+(:class:`HdrfCore` / :class:`GreedyCore`) — device-resident `lax.scan`
+programs that plug into :class:`repro.core.driver.ScanDriver` and ride the
+same resident / ring-buffer sources as ADWISE. To make the scan **bit-
+identical** to the numpy loops (the parity oracle), the scoring is fully
+integer-quantized:
+
+* θ and the balance fraction are quantized to 1/64 steps
+  (``tq = ((2A − d)·64) // A`` ∈ [64, 128] encodes ``(2 − θ)·64``;
+  ``bal_q = (gap·64) // (eps_q + spread)`` ∈ [0, 64]); λ is quantized to
+  ``round(λ·64)``. The combined score ``64·C_rep_q + λ_q·bal_q`` stays well
+  inside int32 with degrees clamped at 2²².
+* HDRF's tie-break noise is **counter-based**: a stateless uint32 hash of
+  (stream row id, partition, seed) packed into the low
+  :data:`TIE_BITS` bits of the argmax key — so any chunk geometry, the
+  batched scan, and the numpy oracle all draw the very same noise.
+
+Masked (spotlight) semantics: HDRF/Greedy accept an ``allowed`` partition
+mask and score at *global* k with disallowed columns masked out (balance
+over allowed loads only). Hash/DBH are stateless hashes; their masked form
+hashes into the allowed set by rank (identical to running at local
+k' = |allowed| and remapping).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Optional
+from typing import NamedTuple, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import PartitionResult
+from repro.core.types import PartitionResult, WarmState
 
 __all__ = [
     "hdrf_partition",
@@ -36,10 +55,24 @@ __all__ = [
     "grid_partition",
     "HdrfState",
     "GreedyState",
+    "HdrfCore",
+    "GreedyCore",
+    "hdrf_partition_scan",
+    "greedy_partition_scan",
     "hash_assign",
     "grid_assign",
     "dbh_assign",
+    "tie_break_hash",
 ]
+
+# Quantization of the HDRF scoring (shared by the numpy oracle and the scan
+# step-core; see module docstring).
+QB = 64  # 1/64 resolution for θ / balance fractions
+TIE_BITS = 10  # tie-noise bits packed under the quantized score
+_TIE_MASK = (1 << TIE_BITS) - 1
+_DEG_CLAMP = 1 << 22  # keeps 64·C_rep_q·2^TIE_BITS + λ_q·bal_q·2^TIE_BITS < 2^31
+_LAM_Q_MAX = 4096  # λ ≤ 64 — far above the useful HDRF range
+_U32 = np.uint64(0xFFFFFFFF)
 
 
 def _hash_vec(x: np.ndarray, k: int, salt: int = 0x9E3779B9) -> np.ndarray:
@@ -49,6 +82,54 @@ def _hash_vec(x: np.ndarray, k: int, salt: int = 0x9E3779B9) -> np.ndarray:
     h *= np.uint64(0xC2B2AE3D27D4EB4F)
     h ^= h >> np.uint64(29)
     return (h % np.uint64(k)).astype(np.int32)
+
+
+def _lam_q(lam: float) -> int:
+    return int(np.clip(round(float(lam) * QB), 0, _LAM_Q_MAX))
+
+
+def _eps_q(eps: float) -> int:
+    return max(int(round(float(eps))), 1)
+
+
+def tie_break_hash(rows: np.ndarray, k: int, seed: int) -> np.ndarray:
+    """Counter-based HDRF tie noise: uint32 hash of (row, partition, seed).
+
+    Stateless in the stream position, so every chunk geometry — and the
+    batched scan, which evaluates the same uint32 arithmetic on device —
+    draws identical noise. Returns int64 (len(rows), k) in [0, 2^TIE_BITS).
+    """
+    r = (np.asarray(rows, np.uint64) & _U32)[:, None]
+    p = np.arange(k, dtype=np.uint64)[None, :]
+    s = np.uint64(int(seed) & 0xFFFFFFFF)
+    h = (r * np.uint64(0x9E3779B9)) & _U32
+    h = h ^ ((p * np.uint64(0x85EBCA6B)) & _U32)
+    h = h ^ ((s * np.uint64(0xC2B2AE35)) & _U32)
+    h ^= h >> np.uint64(16)
+    h = (h * np.uint64(0x7FEB352D)) & _U32
+    h ^= h >> np.uint64(15)
+    h = (h * np.uint64(0x846CA68B)) & _U32
+    h ^= h >> np.uint64(16)
+    return (h & np.uint64(_TIE_MASK)).astype(np.int64)
+
+
+def _tie_hash_j(row: jax.Array, k: int, seed: jax.Array) -> jax.Array:
+    """Device twin of :func:`tie_break_hash` for one row: (k,) int32."""
+    p = jnp.arange(k, dtype=jnp.uint32)
+    h = row.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    h = h ^ (p * jnp.uint32(0x85EBCA6B)) ^ (seed * jnp.uint32(0xC2B2AE35))
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return (h & jnp.uint32(_TIE_MASK)).astype(jnp.int32)
+
+
+def _local_to_global(allowed: np.ndarray) -> np.ndarray:
+    l2g = np.flatnonzero(np.asarray(allowed, bool)).astype(np.int32)
+    assert len(l2g) > 0, "allowed mask selects no partition"
+    return l2g
 
 
 # ----------------------------------------------------------------------------
@@ -79,18 +160,43 @@ def dbh_assign(edges: np.ndarray, degrees: np.ndarray, k: int, seed: int = 0) ->
     return _hash_vec(key, k, salt=seed + 29)
 
 
-def hash_partition(edges: np.ndarray, num_vertices: int, k: int, seed: int = 0) -> PartitionResult:
-    """Random edge hashing (the PowerGraph default loader)."""
+def hash_partition(
+    edges: np.ndarray,
+    num_vertices: int,
+    k: int,
+    seed: int = 0,
+    allowed: Optional[np.ndarray] = None,
+) -> PartitionResult:
+    """Random edge hashing (the PowerGraph default loader).
+
+    ``allowed`` restricts placements to a partition subset by hashing into
+    it by rank (spotlight masked form).
+    """
     t0 = time.perf_counter()
-    assign = hash_assign(edges, num_vertices, k, seed=seed)
+    if allowed is None:
+        assign = hash_assign(edges, num_vertices, k, seed=seed)
+    else:
+        l2g = _local_to_global(allowed)
+        assign = l2g[hash_assign(edges, num_vertices, len(l2g), seed=seed)]
     return PartitionResult(assign, dict(k=k, wall_time_s=time.perf_counter() - t0, name="hash"))
 
 
-def grid_partition(edges: np.ndarray, num_vertices: int, k: int, seed: int = 0) -> PartitionResult:
+def grid_partition(
+    edges: np.ndarray,
+    num_vertices: int,
+    k: int,
+    seed: int = 0,
+    allowed: Optional[np.ndarray] = None,
+) -> PartitionResult:
     """GraphBuilder grid hashing: p drawn from intersection of row(u) and col(v).
 
     Constrains each vertex's replicas to a sqrt(k)-sized subset.
     """
+    if allowed is not None:
+        raise ValueError(
+            "grid imposes its own replica constraint and cannot honour a "
+            "spotlight spread mask"
+        )
     t0 = time.perf_counter()
     assign = grid_assign(edges, k, seed=seed)
     return PartitionResult(assign, dict(k=k, wall_time_s=time.perf_counter() - t0, name="grid"))
@@ -102,6 +208,7 @@ def dbh_partition(
     k: int,
     seed: int = 0,
     degrees: Optional[np.ndarray] = None,
+    allowed: Optional[np.ndarray] = None,
 ) -> PartitionResult:
     """Degree-Based Hashing: hash the lower-degree endpoint of each edge."""
     t0 = time.perf_counter()
@@ -109,50 +216,71 @@ def dbh_partition(
         degrees = np.zeros(num_vertices, dtype=np.int64)
         np.add.at(degrees, edges[:, 0], 1)
         np.add.at(degrees, edges[:, 1], 1)
-    assign = dbh_assign(edges, degrees, k, seed=seed)
+    if allowed is None:
+        assign = dbh_assign(edges, degrees, k, seed=seed)
+    else:
+        l2g = _local_to_global(allowed)
+        assign = l2g[dbh_assign(edges, degrees, len(l2g), seed=seed)]
     return PartitionResult(assign, dict(k=k, wall_time_s=time.perf_counter() - t0, name="dbh"))
 
 
 # ----------------------------------------------------------------------------
-# Sequential cores (stateful; chunk-resumable)
+# Sequential cores: numpy oracles (stateful; chunk-resumable)
 # ----------------------------------------------------------------------------
 
 
 class HdrfState:
-    """HDRF vertex cache + loads + tie-break RNG, resumable across chunks."""
+    """HDRF vertex cache + loads, resumable across chunks (parity oracle).
+
+    Integer-quantized scoring with counter-based tie noise keyed on the
+    running ``edges_seen`` row id — the assignment stream is invariant to
+    chunk geometry and bit-identical to the :class:`HdrfCore` scan.
+    """
 
     def __init__(self, num_vertices: int, k: int, lam: float = 1.1,
-                 eps: float = 1.0, seed: int = 0):
+                 eps: float = 1.0, seed: int = 0,
+                 allowed: Optional[np.ndarray] = None):
         self.k = k
-        self.lam = lam
-        self.eps = eps
+        self.lam_q = _lam_q(lam)
+        self.eps_q = _eps_q(eps)
+        self.seed = int(seed)
         self.deg = np.zeros(num_vertices, dtype=np.int64)
         self.replicas = np.zeros((num_vertices, k), dtype=bool)
         self.sizes = np.zeros(k, dtype=np.int64)
-        self.rng = np.random.default_rng(seed)
+        self.allowed = (
+            np.ones(k, bool) if allowed is None else np.asarray(allowed, bool)
+        )
+        assert self.allowed.shape == (k,) and self.allowed.any()
         self.edges_seen = 0
 
     def assign_chunk(self, edges: np.ndarray) -> np.ndarray:
         """Place a chunk of the stream; state advances in stream order."""
-        k, lam, eps = self.k, self.lam, self.eps
+        k, lam_q, eps_q = self.k, self.lam_q, self.eps_q
         deg, replicas, sizes = self.deg, self.replicas, self.sizes
+        allowed = self.allowed
+        aidx = np.flatnonzero(allowed)
         c = len(edges)
         assign = np.empty(c, dtype=np.int32)
-        # Sequential draws from the persistent generator: identical to the
-        # one-shot rng.random((m,)) of the whole stream, however chunked.
-        tie_noise = self.rng.random((c,)) * 1e-9
+        ties = tie_break_hash(
+            np.arange(self.edges_seen, self.edges_seen + c), k, self.seed
+        )
         for i in range(c):
             u, v = int(edges[i, 0]), int(edges[i, 1])
             deg[u] += 1
             deg[v] += 1
-            du, dv = deg[u], deg[v]
-            theta_u = du / (du + dv)
-            theta_v = 1.0 - theta_u
-            mx, mn = sizes.max(), sizes.min()
-            c_bal = (mx - sizes) / (eps + mx - mn)
-            c_rep = replicas[u] * (2.0 - theta_u) + replicas[v] * (2.0 - theta_v)
-            score = c_rep + lam * c_bal
-            p = int(np.argmax(score + tie_noise[i]))
+            du = min(int(deg[u]), _DEG_CLAMP)
+            dv = min(int(deg[v]), _DEG_CLAMP)
+            a = du + dv
+            tq_u = ((2 * a - du) * QB) // a
+            tq_v = ((2 * a - dv) * QB) // a
+            sal = sizes[aidx]
+            mx, mn = int(sal.max()), int(sal.min())
+            gap = np.clip(mx - sizes, 0, _DEG_CLAMP)
+            bal_q = (gap * QB) // (eps_q + min(mx - mn, _DEG_CLAMP))
+            rep_q = replicas[u] * tq_u + replicas[v] * tq_v
+            score_q = QB * rep_q.astype(np.int64) + lam_q * bal_q
+            combined = np.where(allowed, (score_q << TIE_BITS) + ties[i], -1)
+            p = int(np.argmax(combined))
             assign[i] = p
             sizes[p] += 1
             replicas[u, p] = True
@@ -164,21 +292,28 @@ class HdrfState:
 class GreedyState:
     """PowerGraph Greedy vertex cache + loads, resumable across chunks."""
 
-    def __init__(self, num_vertices: int, k: int):
+    def __init__(self, num_vertices: int, k: int,
+                 allowed: Optional[np.ndarray] = None):
         self.k = k
         self.replicas = np.zeros((num_vertices, k), dtype=bool)
         self.sizes = np.zeros(k, dtype=np.int64)
+        self.allowed = (
+            np.ones(k, bool) if allowed is None else np.asarray(allowed, bool)
+        )
+        assert self.allowed.shape == (k,) and self.allowed.any()
         self.edges_seen = 0
 
     def assign_chunk(self, edges: np.ndarray) -> np.ndarray:
-        k = self.k
         replicas, sizes = self.replicas, self.sizes
+        allowed = self.allowed
         c = len(edges)
         assign = np.empty(c, dtype=np.int32)
         for i in range(c):
             u, v = int(edges[i, 0]), int(edges[i, 1])
             ru, rv = replicas[u], replicas[v]
             inter = ru & rv
+            # Replicas only ever grow inside `allowed`, so every candidate
+            # set below is already a subset of the mask.
             if inter.any():
                 cand = inter
             elif ru.any() and rv.any():
@@ -188,7 +323,7 @@ class GreedyState:
             elif rv.any():
                 cand = rv
             else:
-                cand = np.ones(k, dtype=bool)
+                cand = allowed
             masked = np.where(cand, sizes, np.iinfo(np.int64).max)
             p = int(np.argmin(masked))
             assign[i] = p
@@ -206,18 +341,21 @@ def hdrf_partition(
     lam: float = 1.1,
     eps: float = 1.0,
     seed: int = 0,
+    allowed: Optional[np.ndarray] = None,
 ) -> PartitionResult:
-    """HDRF single-edge streaming (Petroni et al.).
+    """HDRF single-edge streaming (Petroni et al.) — numpy oracle.
 
     score(e=(u,v), p) = C_rep + lam * C_bal with
       C_rep = g(u,p) + g(v,p),   g(x,p) = 1{p in R_x} * (1 + (1 - theta_x))
       theta_u = deg(u) / (deg(u) + deg(v))
       C_bal = (maxsize - size_p) / (eps + maxsize - minsize)
-    Partial degrees are updated as the stream is consumed. lam=1.1 is the
-    authors' recommended default (used in the paper's evaluation).
+    quantized to 1/64 steps (see module docstring). Partial degrees are
+    updated as the stream is consumed. lam=1.1 is the authors' recommended
+    default (used in the paper's evaluation).
     """
     t0 = time.perf_counter()
-    state = HdrfState(num_vertices, k, lam=lam, eps=eps, seed=seed)
+    state = HdrfState(num_vertices, k, lam=lam, eps=eps, seed=seed,
+                      allowed=allowed)
     assign = state.assign_chunk(edges)
     return PartitionResult(
         assign,
@@ -227,18 +365,329 @@ def hdrf_partition(
 
 
 def greedy_partition(
-    edges: np.ndarray, num_vertices: int, k: int, seed: int = 0
+    edges: np.ndarray, num_vertices: int, k: int, seed: int = 0,
+    allowed: Optional[np.ndarray] = None,
 ) -> PartitionResult:
     """PowerGraph Greedy (Gonzalez et al., OSDI'12) placement rules.
 
     1. If R_u and R_v intersect: least-loaded partition in the intersection.
     2. Else if both non-empty: least-loaded partition in R_u | R_v.
     3. Else if one non-empty: least-loaded partition in it.
-    4. Else: least-loaded partition overall.
+    4. Else: least-loaded allowed partition overall.
     """
     t0 = time.perf_counter()
-    state = GreedyState(num_vertices, k)
+    state = GreedyState(num_vertices, k, allowed=allowed)
     assign = state.assign_chunk(edges)
     return PartitionResult(
         assign, dict(k=k, wall_time_s=time.perf_counter() - t0, name="greedy")
     )
+
+
+# ----------------------------------------------------------------------------
+# Step-cores: the same math as a device-resident lax.scan
+# ----------------------------------------------------------------------------
+
+
+class HdrfCarry(NamedTuple):
+    deg: jax.Array  # (V+1,) int32 — row V is a scatter dump
+    replicas: jax.Array  # (V+1, K) bool
+    sizes: jax.Array  # (K,) int32
+    seed: jax.Array  # () uint32 — per-instance tie-hash seed
+    cursor: jax.Array  # () int32
+    assigned: jax.Array  # () int32
+
+
+class GreedyCarry(NamedTuple):
+    replicas: jax.Array  # (V+1, K) bool
+    sizes: jax.Array  # (K,) int32
+    cursor: jax.Array  # () int32
+    assigned: jax.Array  # () int32
+
+
+def _single_edge_out(live, cursor, p):
+    from repro.core.adwise import StepOut
+
+    return StepOut(
+        sidx=jnp.where(live, cursor, -1)[None].astype(jnp.int32),
+        p=jnp.where(live, p, 0)[None].astype(jnp.int32),
+        w_cap=jnp.ones((), jnp.int32),
+        g_chosen=jnp.zeros((), jnp.float32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class HdrfCore:
+    """HDRF as a chunk-resumable step-core: one edge per scan step.
+
+    Bit-identical to :class:`HdrfState` — integer-quantized scoring, tie
+    noise from the counter-based hash of (cursor, partition, seed). The
+    base ``seed`` is excluded from the jit cache key (it only enters the
+    carry), so spotlight's per-instance ``seed + i`` shares one trace.
+    """
+
+    num_vertices: int
+    k: int
+    lam: float = 1.1
+    eps: float = 1.0
+    seed: int = dataclasses.field(default=0, compare=False)
+
+    name = "hdrf"
+    window_rows = 0
+    rows_per_step = 1
+    r_sel = 0
+    has_budget = False
+
+    def cap_value(self, m: int, n_allowed: int) -> int:
+        return int(np.iinfo(np.int32).max)
+
+    def init_carry(self, budget: float) -> HdrfCarry:
+        v1 = self.num_vertices + 1
+        return HdrfCarry(
+            deg=jnp.zeros((v1,), jnp.int32),
+            replicas=jnp.zeros((v1, self.k), bool),
+            sizes=jnp.zeros((self.k,), jnp.int32),
+            seed=jnp.uint32(self.seed & 0xFFFFFFFF),
+            cursor=jnp.zeros((), jnp.int32),
+            assigned=jnp.zeros((), jnp.int32),
+        )
+
+    def warm_carry(self, budget: float, warm: WarmState) -> HdrfCarry:
+        base = self.init_carry(budget)
+        v = self.num_vertices
+        return base._replace(
+            deg=base.deg.at[:v].set(jnp.asarray(warm.deg, jnp.int32)),
+            replicas=base.replicas.at[:v].set(jnp.asarray(warm.replicas, bool)),
+            sizes=jnp.asarray(warm.sizes, jnp.int32),
+        )
+
+    def seed_instances(self, carry, z: int):
+        seeds = jnp.asarray(
+            (int(self.seed) + np.arange(z)) & 0xFFFFFFFF, jnp.uint32
+        )
+        return carry._replace(seed=seeds)
+
+    def set_cost(self, carry, cost_per_score: float, z: int):
+        raise ValueError("hdrf core does not model per-score cost")
+
+    def recalibrate(self, carry, t0: float, z: int):
+        return carry
+
+    def counters(self, carry) -> dict:
+        assigned = np.asarray(carry.assigned)
+        z = assigned.shape[0]
+        return dict(
+            score_rows=assigned.astype(np.int64),
+            final_w=np.ones((z,), np.int64),
+            lam=np.full((z,), self.lam, np.float32),
+            cost_per_score=np.zeros((z,), np.float32),
+        )
+
+    def make_step(self, stream, m_real, allowed, cap, prev_assign):
+        k = self.k
+        v_dummy = self.num_vertices
+        m_pad = stream.shape[0]
+        lam_q = jnp.int32(_lam_q(self.lam))
+        eps_q = jnp.int32(_eps_q(self.eps))
+
+        def step(carry: HdrfCarry, _):
+            live = carry.cursor < m_real
+            live_i = live.astype(jnp.int32)
+            row = stream[carry.cursor % m_pad]
+            u = jnp.where(live, row[0], v_dummy)
+            v = jnp.where(live, row[1], v_dummy)
+            deg = carry.deg.at[u].add(live_i).at[v].add(live_i)
+            du = jnp.minimum(deg[u], _DEG_CLAMP)
+            dv = jnp.minimum(deg[v], _DEG_CLAMP)
+            a = jnp.maximum(du + dv, 1)
+            tq_u = ((2 * a - du) * QB) // a
+            tq_v = ((2 * a - dv) * QB) // a
+            sizes = carry.sizes
+            sal = jnp.where(allowed, sizes, jnp.int32(np.iinfo(np.int32).max))
+            mx = jnp.max(jnp.where(allowed, sizes, jnp.int32(np.iinfo(np.int32).min)))
+            mn = jnp.min(sal)
+            gap = jnp.clip(mx - sizes, 0, _DEG_CLAMP)
+            bal_q = (gap * QB) // (eps_q + jnp.minimum(mx - mn, _DEG_CLAMP))
+            rep_q = (
+                carry.replicas[u] * tq_u + carry.replicas[v] * tq_v
+            ).astype(jnp.int32)
+            score_q = QB * rep_q + lam_q * bal_q
+            tie = _tie_hash_j(carry.cursor, k, carry.seed)
+            combined = jnp.where(allowed, (score_q << TIE_BITS) + tie, -1)
+            p = jnp.argmax(combined).astype(jnp.int32)
+            u_w = jnp.where(live, u, v_dummy)
+            v_w = jnp.where(live, v, v_dummy)
+            new_carry = HdrfCarry(
+                deg=deg,
+                replicas=carry.replicas.at[u_w, p].max(live).at[v_w, p].max(live),
+                sizes=sizes.at[p].add(live_i),
+                seed=carry.seed,
+                cursor=carry.cursor + live_i,
+                assigned=carry.assigned + live_i,
+            )
+            return new_carry, _single_edge_out(live, carry.cursor, p)
+
+        return step
+
+
+@dataclasses.dataclass(frozen=True)
+class GreedyCore:
+    """PowerGraph Greedy as a step-core: one edge per scan step.
+
+    All-integer (argmin over masked loads, first-occurrence ties) — exactly
+    the :class:`GreedyState` loop.
+    """
+
+    num_vertices: int
+    k: int
+
+    name = "greedy"
+    window_rows = 0
+    rows_per_step = 1
+    r_sel = 0
+    has_budget = False
+
+    def cap_value(self, m: int, n_allowed: int) -> int:
+        return int(np.iinfo(np.int32).max)
+
+    def init_carry(self, budget: float) -> GreedyCarry:
+        v1 = self.num_vertices + 1
+        return GreedyCarry(
+            replicas=jnp.zeros((v1, self.k), bool),
+            sizes=jnp.zeros((self.k,), jnp.int32),
+            cursor=jnp.zeros((), jnp.int32),
+            assigned=jnp.zeros((), jnp.int32),
+        )
+
+    def warm_carry(self, budget: float, warm: WarmState) -> GreedyCarry:
+        base = self.init_carry(budget)
+        v = self.num_vertices
+        return base._replace(
+            replicas=base.replicas.at[:v].set(jnp.asarray(warm.replicas, bool)),
+            sizes=jnp.asarray(warm.sizes, jnp.int32),
+        )
+
+    def seed_instances(self, carry, z: int):
+        return carry
+
+    def set_cost(self, carry, cost_per_score: float, z: int):
+        raise ValueError("greedy core does not model per-score cost")
+
+    def recalibrate(self, carry, t0: float, z: int):
+        return carry
+
+    def counters(self, carry) -> dict:
+        assigned = np.asarray(carry.assigned)
+        z = assigned.shape[0]
+        return dict(
+            score_rows=assigned.astype(np.int64),
+            final_w=np.ones((z,), np.int64),
+            lam=np.zeros((z,), np.float32),
+            cost_per_score=np.zeros((z,), np.float32),
+        )
+
+    def make_step(self, stream, m_real, allowed, cap, prev_assign):
+        v_dummy = self.num_vertices
+        m_pad = stream.shape[0]
+        big = jnp.int32(np.iinfo(np.int32).max)
+
+        def step(carry: GreedyCarry, _):
+            live = carry.cursor < m_real
+            live_i = live.astype(jnp.int32)
+            row = stream[carry.cursor % m_pad]
+            u = jnp.where(live, row[0], v_dummy)
+            v = jnp.where(live, row[1], v_dummy)
+            ru = carry.replicas[u]
+            rv = carry.replicas[v]
+            inter = ru & rv
+            union = ru | rv
+            has_u, has_v = jnp.any(ru), jnp.any(rv)
+            cand = jnp.where(
+                jnp.any(inter),
+                inter,
+                jnp.where(
+                    has_u & has_v,
+                    union,
+                    jnp.where(has_u, ru, jnp.where(has_v, rv, allowed)),
+                ),
+            )
+            masked = jnp.where(cand, carry.sizes, big)
+            p = jnp.argmin(masked).astype(jnp.int32)
+            u_w = jnp.where(live, u, v_dummy)
+            v_w = jnp.where(live, v, v_dummy)
+            new_carry = GreedyCarry(
+                replicas=carry.replicas.at[u_w, p].max(live).at[v_w, p].max(live),
+                sizes=carry.sizes.at[p].add(live_i),
+                cursor=carry.cursor + live_i,
+                assigned=carry.assigned + live_i,
+            )
+            return new_carry, _single_edge_out(live, carry.cursor, p)
+
+        return step
+
+
+def _scan_partition(
+    core,
+    edges: np.ndarray,
+    *,
+    allowed: Optional[np.ndarray] = None,
+    warm: Optional[WarmState] = None,
+    backend: str = "vmap",
+    n_chunks: int = 8,
+) -> PartitionResult:
+    """Run a single-instance step-core over a resident stream."""
+    from repro.core.driver import ResidentSource, ScanDriver
+
+    m = int(len(edges))
+    if m == 0:
+        return PartitionResult(np.zeros((0,), np.int32), dict(k=core.k, unassigned=0))
+    source = ResidentSource(
+        np.ascontiguousarray(edges, np.int32).reshape(1, m, 2),
+        np.array([m], np.int64),
+    )
+    drv = ScanDriver(
+        source, core,
+        allowed=None if allowed is None else np.asarray(allowed, bool)[None],
+        warm=None if warm is None else [warm],
+        backend=backend,
+    )
+    res = drv.run(n_chunks=n_chunks)
+    sidx, pout = res.sidx[0], res.p[0]
+    assign = np.full((m,), -1, np.int32)
+    live = sidx >= 0
+    assign[sidx[live]] = pout[live]
+    unassigned = int((assign < 0).sum())
+    assert unassigned == 0 and int(res.assigned[0]) == m, (
+        f"{core.name} scan left {unassigned} of {m} edges unassigned"
+    )
+    return PartitionResult(assign, dict(drv.stats_base(res, 0), unassigned=0))
+
+
+def hdrf_partition_scan(
+    edges: np.ndarray,
+    num_vertices: int,
+    k: int,
+    lam: float = 1.1,
+    eps: float = 1.0,
+    seed: int = 0,
+    allowed: Optional[np.ndarray] = None,
+    backend: str = "vmap",
+) -> PartitionResult:
+    """HDRF via the :class:`HdrfCore` lax.scan — bit-identical to
+    :func:`hdrf_partition` (the numpy oracle)."""
+    core = HdrfCore(num_vertices=int(num_vertices), k=int(k),
+                    lam=float(lam), eps=float(eps), seed=int(seed))
+    return _scan_partition(core, edges, allowed=allowed, backend=backend)
+
+
+def greedy_partition_scan(
+    edges: np.ndarray,
+    num_vertices: int,
+    k: int,
+    seed: int = 0,
+    allowed: Optional[np.ndarray] = None,
+    backend: str = "vmap",
+) -> PartitionResult:
+    """Greedy via the :class:`GreedyCore` lax.scan — bit-identical to
+    :func:`greedy_partition` (the numpy oracle)."""
+    core = GreedyCore(num_vertices=int(num_vertices), k=int(k))
+    return _scan_partition(core, edges, allowed=allowed, backend=backend)

@@ -24,11 +24,41 @@ of that once, over a *pluggable chunk source*:
   scan call's worst-case consumption (``window_max + S * assign_batch``
   rows per S-step call — the same cursor-advance bound PR 4 proved).
 
-Both modes run the *same* vmapped (optionally shard_mapped) step function
-from ``repro.core.adwise`` — the per-step math is one trace, so the file
-path stays bit-identical to the in-memory path (the registry-wide parity
-tests in tests/test_oocore.py are the oracle, plus the ring-specific
-property tests in tests/test_driver.py).
+Both modes run the *same* vmapped (optionally shard_mapped) step function —
+the per-step math is one trace, so the file path stays bit-identical to the
+in-memory path (the registry-wide parity tests in tests/test_oocore.py are
+the oracle, plus the ring-specific property tests in tests/test_driver.py).
+
+Step-cores
+----------
+The per-step math itself is pluggable. A **step-core** (:class:`StepCore`)
+is a hashable, frozen description of one streaming strategy that the driver
+jit-specializes on. A core implements:
+
+* ``make_step(stream, m_real, allowed, cap, prev_assign) -> step`` — the
+  step factory. ``step(carry, _) -> (carry, StepOut)`` is scanned by
+  ``jax.lax.scan``; it must read stream rows at ``src % m_pad`` (the ring
+  invariant: for a resident source the mod is the identity, for the ring it
+  maps logical row ``s`` to slot ``s % B``) and must never read more than
+  ``window_rows + rows_per_step`` rows ahead of ``carry.cursor`` in one
+  step (the refill bound the :class:`FileSource` sizing proves).
+* ``init_carry(budget)`` / ``warm_carry(budget, warm)`` — cold start and
+  warm resume from a :class:`~repro.core.types.WarmState`. The carry is any
+  pytree obeying the contract in :mod:`repro.core.types` (``.cursor`` and
+  ``.assigned`` int32 leaves).
+* ``seed_instances(carry, z)`` — batched hook: derive per-instance state
+  (e.g. counter-based tie-break seeds ``seed + i``) after the driver stacks
+  z carries.
+* ``window_rows`` / ``rows_per_step`` — the look-ahead and per-step
+  consumption bounds the driver sizes scan calls and the ring with
+  (ADWISE: ``window_max`` / ``assign_batch``; single-edge baselines 0 / 1).
+* ``counters(carry)`` / ``recalibrate(carry, t0, z)`` / ``set_cost`` —
+  stats extraction and the optional latency-budget hooks.
+
+``AdwiseCore`` wraps the adaptive-window math from ``repro.core.adwise``;
+``repro.core.baselines`` provides ``HdrfCore`` / ``GreedyCore`` and
+``repro.core.restream`` the 2PS-L phase-2 core — all four ride the very
+same driver, sources, and h2d accounting.
 
 Host→device accounting: the driver counts every stream-buffer byte it ships
 (``h2d_rows`` / ``h2d_bytes`` / ``h2d_calls``), callers surface the counters
@@ -37,6 +67,7 @@ bills them against :data:`~repro.engine.latency_model.H2D_BW_BPS`.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from functools import partial
 from typing import Callable, List, NamedTuple, Optional, Sequence
@@ -47,10 +78,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.adwise import Carry, WarmState, _init_carry, _make_step
-from repro.core.types import AdwiseConfig
+from repro.core.adwise import Carry, _init_carry, _make_step
+from repro.core.types import AdwiseConfig, WarmState
 
 __all__ = [
+    "StepCore",
+    "AdwiseCore",
     "ResidentSource",
     "FileSource",
     "RingBuf",
@@ -77,6 +110,147 @@ def resolve_backend(backend: str, z: int) -> tuple[str, int]:
     if n_shards <= 1:
         return "vmap", 0
     return "shard_map", n_shards
+
+
+# ----------------------------------------------------------------------------
+# The step-core interface
+# ----------------------------------------------------------------------------
+
+
+class StepCore:
+    """Base class for streaming-strategy step-cores (see module docstring).
+
+    Concrete cores are **frozen dataclasses** holding only hashable scalars
+    (k, |V|, quantized weights, ...) — the core object is a jit static
+    argument, so its identity selects the compiled trace. All per-instance
+    *state* (vertex caches, seeds, cursors) lives in the carry, never in the
+    core.
+    """
+
+    name: str = "core"
+    # Look-ahead rows the step may read beyond the last assignment (ring
+    # sizing adds this to the per-call consumption bound).
+    window_rows: int = 0
+    # Max stream rows consumed (and assignments emitted) per scan step.
+    rows_per_step: int = 1
+    # Lazy-traversal rescore budget (diagnostics; ADWISE-specific).
+    r_sel: int = 0
+    has_budget: bool = False
+
+    # -- required hooks ----------------------------------------------------
+    def make_step(self, stream, m_real, allowed, cap, prev_assign):
+        raise NotImplementedError
+
+    def init_carry(self, budget: float):
+        raise NotImplementedError
+
+    def warm_carry(self, budget: float, warm: WarmState):
+        raise NotImplementedError(f"{self.name} does not support warm starts")
+
+    # -- optional hooks ----------------------------------------------------
+    def cap_value(self, m: int, n_allowed: int) -> int:
+        """Hard per-partition capacity for an instance streaming m edges."""
+        return int(np.iinfo(np.int32).max)
+
+    def seed_instances(self, carry, z: int):
+        """Derive per-instance carry state after batching (default: none)."""
+        return carry
+
+    def set_cost(self, carry, cost_per_score: float, z: int):
+        raise ValueError(f"{self.name} core does not model per-score cost")
+
+    def recalibrate(self, carry, t0: float, z: int):
+        """Between-chunks budget recalibration (no-op unless has_budget)."""
+        return carry
+
+    def counters(self, carry) -> dict:
+        """Final per-instance counters for :class:`DriveResult` (each (z,))."""
+        assigned = np.asarray(carry.assigned)
+        z = assigned.shape[0]
+        return dict(
+            score_rows=assigned.astype(np.int64),
+            final_w=np.ones((z,), np.int64),
+            lam=np.zeros((z,), np.float32),
+            cost_per_score=np.zeros((z,), np.float32),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class AdwiseCore(StepCore):
+    """ADWISE adaptive-window scan as a step-core (math in core/adwise.py)."""
+
+    cfg: AdwiseConfig
+    num_vertices: int
+    update_deg: bool = True  # False on warm passes: degrees already final
+
+    name = "adwise"
+
+    @property
+    def k(self) -> int:
+        return self.cfg.k
+
+    @property
+    def window_rows(self) -> int:
+        return self.cfg.window_max
+
+    @property
+    def rows_per_step(self) -> int:
+        return self.cfg.assign_batch
+
+    @property
+    def r_sel(self) -> int:
+        return self.cfg.resolve_r_sel()
+
+    @property
+    def has_budget(self) -> bool:
+        return self.cfg.latency_budget is not None
+
+    def cap_value(self, m: int, n_allowed: int) -> int:
+        return self.cfg.cap_value(m, n_allowed)
+
+    def make_step(self, stream, m_real, allowed, cap, prev_assign):
+        return _make_step(
+            self.cfg, self.num_vertices, self.r_sel, stream, m_real, allowed,
+            cap, self.has_budget, prev_assign, self.update_deg,
+        )
+
+    def init_carry(self, budget: float) -> Carry:
+        return _init_carry(self.cfg, self.num_vertices, budget)
+
+    def warm_carry(self, budget: float, warm: WarmState) -> Carry:
+        return Carry.warm_start(
+            self.cfg, self.num_vertices, budget,
+            replicas=warm.replicas, deg=warm.deg, sizes=warm.sizes,
+        )
+
+    def set_cost(self, carry, cost_per_score: float, z: int):
+        return carry._replace(
+            cost_per_score=jnp.full((z,), cost_per_score, jnp.float32)
+        )
+
+    def recalibrate(self, carry, t0: float, z: int):
+        # Recalibrate the modeled cost against measured wall between scan
+        # calls: one program runs all instances, so the shared per-row cost
+        # comes from the batched wall over the total row count.
+        jax.block_until_ready(carry.score_rows)
+        wall = time.perf_counter() - t0
+        rows = max(int(np.asarray(carry.score_rows).sum()), 1)
+        return carry._replace(
+            cost_per_score=jnp.full(
+                (z,), wall / (rows * self.cfg.k), jnp.float32
+            ),
+            budget_left=jnp.full(
+                (z,), self.cfg.latency_budget - wall, jnp.float32
+            ),
+        )
+
+    def counters(self, carry) -> dict:
+        return dict(
+            score_rows=np.asarray(carry.score_rows),
+            final_w=np.asarray(carry.w_cap),
+            lam=np.asarray(carry.lam),
+            cost_per_score=np.asarray(carry.cost_per_score),
+        )
 
 
 # ----------------------------------------------------------------------------
@@ -113,34 +287,24 @@ def _shard_over_instances(fn, n_shards: int, n_args: int):
 @partial(
     jax.jit,
     donate_argnums=(0,),
-    static_argnames=(
-        "cfg", "num_vertices", "r_sel", "n_steps", "has_budget", "update_deg",
-        "n_shards",
-    ),
+    static_argnames=("core", "n_steps", "n_shards"),
 )
 def _run_scan_resident(
-    carry: Carry,  # every leaf carries a leading (z,) instance axis
+    carry,  # core carry; every leaf carries a leading (z,) instance axis
     streams: jax.Array,  # (z, per, 2) int32
     m_real: jax.Array,  # (z,) int32
     allowed: jax.Array,  # (z, K) bool
     cap: jax.Array,  # (z,) int32
     prev_assign: jax.Array,  # (z, per) int32
     *,
-    cfg: AdwiseConfig,
-    num_vertices: int,
-    r_sel: int,
+    core: StepCore,
     n_steps: int,
-    has_budget: bool,
-    update_deg: bool,
     n_shards: int = 0,
 ):
     """All z instance scans as ONE program over a fully resident stream."""
 
     def one(carry, stream, m_real, allowed, cap, prev):
-        step = _make_step(
-            cfg, num_vertices, r_sel, stream, m_real, allowed, cap,
-            has_budget, prev, update_deg,
-        )
+        step = core.make_step(stream, m_real, allowed, cap, prev)
         return jax.lax.scan(step, carry, None, length=n_steps)
 
     batched = jax.vmap(one)
@@ -152,23 +316,16 @@ def _run_scan_resident(
 @partial(
     jax.jit,
     donate_argnums=(0,),
-    static_argnames=(
-        "cfg", "num_vertices", "r_sel", "n_steps", "has_budget", "update_deg",
-        "n_shards",
-    ),
+    static_argnames=("core", "n_steps", "n_shards"),
 )
 def _run_scan_ring(
-    carry_buf: tuple,  # (Carry, RingBuf), each leaf with a leading (z,) axis
+    carry_buf: tuple,  # (carry, RingBuf), each leaf with a leading (z,) axis
     m_real: jax.Array,  # (z,) int32
     allowed: jax.Array,  # (z, K) bool
     cap: jax.Array,  # (z,) int32
     *,
-    cfg: AdwiseConfig,
-    num_vertices: int,
-    r_sel: int,
+    core: StepCore,
     n_steps: int,
-    has_budget: bool,
-    update_deg: bool,
     n_shards: int = 0,
 ):
     """Ring-mode scan: the stream buffer rides in the donated carry and is
@@ -177,10 +334,7 @@ def _run_scan_ring(
 
     def one(carry_buf, m_real, allowed, cap):
         carry, buf = carry_buf
-        step = _make_step(
-            cfg, num_vertices, r_sel, buf.uv, m_real, allowed, cap,
-            has_budget, buf.prev, update_deg,
-        )
+        step = core.make_step(buf.uv, m_real, allowed, cap, buf.prev)
         carry, outs = jax.lax.scan(step, carry, None, length=n_steps)
         return (carry, buf), outs
 
@@ -251,14 +405,17 @@ class FileSource:
     supplies the prior pass's placements for buffered re-streaming
     revocation.
 
-    Sizing: ``S = (B0 - window_max) // assign_batch`` scan steps per call
-    consume at most ``F = window_max + S * assign_batch`` rows (window
-    refill ceiling + per-step assignments — the PR-4 cursor-advance bound),
-    where ``B0 = max(chunk_edges, window_max + assign_batch)``. Refills are
-    quantized to spans that are multiples of ``Rq`` (a power of two, so the
-    `dynamic_update_slice` kernel compiles for a bounded shape set); the
-    ring holds ``B = (⌈F/Rq⌉ + 2) · Rq`` rows, so a quantized refill always
-    leaves ≥ F uploaded-but-unread rows ahead of the cursor while never
+    Sizing (strategy-agnostic, driven by the step-core's look-ahead and
+    consumption bounds ``W = core.window_rows``, ``b = core.rows_per_step``
+    — ADWISE: ``window_max`` / ``assign_batch``, single-edge baselines
+    0 / 1): ``S = (B0 - W) // b`` scan steps per call consume at most
+    ``F = W + S · b`` rows (look-ahead refill ceiling + per-step
+    assignments — the PR-4 cursor-advance bound), where
+    ``B0 = max(chunk_edges, W + b)``. Refills are quantized to spans that
+    are multiples of ``Rq`` (a power of two, so the `dynamic_update_slice`
+    kernel compiles for a bounded shape set); the ring holds
+    ``B = (⌈F/Rq⌉ + 2) · Rq`` rows, so a quantized refill always leaves
+    ≥ F uploaded-but-unread rows ahead of the cursor while never
     overwriting a live slot (row ``s`` may land in slot ``s % B`` only once
     row ``s − B`` is behind the cursor).
 
@@ -274,14 +431,19 @@ class FileSource:
         readers: Sequence,
         *,
         chunk_edges: int,
-        cfg: AdwiseConfig,
+        cfg: Optional[AdwiseConfig] = None,
+        core: Optional[StepCore] = None,
         prev_read: Optional[List[Callable[[int, int], np.ndarray]]] = None,
     ):
         self.readers = list(readers)
         self.z = len(self.readers)
         self.m_per = np.array([r.num_edges for r in self.readers], np.int64)
         self.prev_read = prev_read
-        w_max, b = cfg.window_max, cfg.assign_batch
+        if core is not None:
+            w_max, b = core.window_rows, core.rows_per_step
+        else:
+            assert cfg is not None, "FileSource needs a cfg or a step-core"
+            w_max, b = cfg.window_max, cfg.assign_batch
         b0 = int(max(chunk_edges, w_max + b))
         self.scan_steps = max(1, (b0 - w_max) // b)
         f = w_max + self.scan_steps * b  # worst-case rows consumed per call
@@ -396,21 +558,22 @@ class DriveResult(NamedTuple):
 
 
 class ScanDriver:
-    """One streaming-scan engine for every ADWISE entry point.
+    """One streaming-scan engine for every step-core strategy.
 
     Owns carry initialization (cold or warm-started from per-instance
-    :class:`~repro.core.adwise.WarmState`), ``r_sel`` / capacity-cap
-    resolution, latency-budget wiring (including the between-chunks
-    wall-clock recalibration of the modeled cost), backend/shard resolution,
-    and the chunked stepping loop over the given source. Callers stay thin:
-    they build a source, run the driver, and format stats.
+    :class:`~repro.core.types.WarmState`), capacity-cap resolution,
+    latency-budget wiring (including the between-chunks wall-clock
+    recalibration of the modeled cost), backend/shard resolution, and the
+    chunked stepping loop over the given source. Callers stay thin: they
+    build a source and a step-core (or pass an :class:`AdwiseConfig`, which
+    wraps into an :class:`AdwiseCore`), run the driver, and format stats.
     """
 
     def __init__(
         self,
         source,
-        cfg: AdwiseConfig,
-        num_vertices: int,
+        core,  # a StepCore, or an AdwiseConfig (compat: wraps AdwiseCore)
+        num_vertices: Optional[int] = None,
         *,
         allowed: Optional[np.ndarray] = None,  # (z, k) bool
         warm: Optional[Sequence[WarmState]] = None,
@@ -418,12 +581,20 @@ class ScanDriver:
         backend: str = "vmap",
     ):
         self.source = source
-        self.cfg = cfg
+        if isinstance(core, AdwiseConfig):
+            assert num_vertices is not None, "AdwiseConfig path needs |V|"
+            self.cfg: Optional[AdwiseConfig] = core
+            core = AdwiseCore(
+                cfg=core, num_vertices=num_vertices, update_deg=warm is None
+            )
+        else:
+            self.cfg = getattr(core, "cfg", None)
+        self.core = core
         self.num_vertices = num_vertices
-        z, k = source.z, cfg.k
+        z, k = source.z, core.k
         self.z = z
         self.m_per = source.m_per
-        self.r_sel = cfg.resolve_r_sel()
+        self.r_sel = core.r_sel
 
         if allowed is None:
             allowed_np = np.ones((z, k), bool)
@@ -432,20 +603,19 @@ class ScanDriver:
             assert allowed_np.shape == (z, k), (allowed_np.shape, (z, k))
         caps = np.array(
             [
-                cfg.cap_value(int(self.m_per[i]), max(int(allowed_np[i].sum()), 1))
+                core.cap_value(int(self.m_per[i]), max(int(allowed_np[i].sum()), 1))
                 for i in range(z)
             ],
             np.int32,
         )
 
-        self.has_budget = cfg.latency_budget is not None
-        budget = cfg.latency_budget if self.has_budget else 0.0
+        self.has_budget = core.has_budget
+        budget = (self.cfg.latency_budget or 0.0) if self.has_budget else 0.0
         self.warm = warm is not None
-        self.update_deg = warm is None
         per = getattr(source, "per", 0)
         prev_np = np.full((z, per), -1, np.int32) if source.resident else None
         if warm is None:
-            base = _init_carry(cfg, num_vertices, budget)
+            base = core.init_carry(budget)
             carry = jax.tree.map(lambda x: jnp.broadcast_to(x, (z,) + x.shape), base)
         else:
             assert len(warm) == z, f"need one WarmState per instance, got {len(warm)}"
@@ -460,13 +630,7 @@ class ScanDriver:
                 "file-mode warm states must not carry prev_assign; pass "
                 "prev_read to the FileSource instead"
             )
-            carries = [
-                Carry.warm_start(
-                    cfg, num_vertices, budget,
-                    replicas=w.replicas, deg=w.deg, sizes=w.sizes,
-                )
-                for w in warm
-            ]
+            carries = [core.warm_carry(budget, w) for w in warm]
             carry = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
             if source.resident and all(has_prev):
                 for i, w in enumerate(warm):
@@ -475,11 +639,10 @@ class ScanDriver:
                         f"instance {i}: prev_assign must align with its stream"
                     )
                     prev_np[i, : len(pa)] = pa
+        carry = core.seed_instances(carry, z)
         self.fixed_cost = cost_per_score is not None
         if self.fixed_cost:
-            carry = carry._replace(
-                cost_per_score=jnp.full((z,), cost_per_score, jnp.float32)
-            )
+            carry = core.set_cost(carry, cost_per_score, z)
         self.carry = carry
         self.backend, self.n_shards = resolve_backend(backend, z)
         self._m_real_j = jnp.asarray(self.m_per.astype(np.int32))
@@ -488,35 +651,22 @@ class ScanDriver:
         self._prev_np = prev_np
 
     # -- budget recalibration (shared by both modes) -----------------------
-    def _recalibrate(self, carry: Carry, t0: float) -> Carry:
+    def _recalibrate(self, carry, t0: float):
         if not (self.has_budget and not self.fixed_cost):
             return carry
-        # Recalibrate the modeled cost against measured wall between scan
-        # calls: one program runs all instances, so the shared per-row cost
-        # comes from the batched wall over the total row count.
-        jax.block_until_ready(carry.score_rows)
-        wall = time.perf_counter() - t0
-        rows = max(int(np.asarray(carry.score_rows).sum()), 1)
-        return carry._replace(
-            cost_per_score=jnp.full(
-                (self.z,), wall / (rows * self.cfg.k), jnp.float32
-            ),
-            budget_left=jnp.full(
-                (self.z,), self.cfg.latency_budget - wall, jnp.float32
-            ),
-        )
+        return self.core.recalibrate(carry, t0, self.z)
 
     # -- resident mode -----------------------------------------------------
     def _run_resident(self, n_chunks: int) -> DriveResult:
-        src, cfg = self.source, self.cfg
-        z, b = self.z, cfg.assign_batch
+        src, core = self.source, self.core
+        z, b = self.z, core.rows_per_step
         m_max = int(self.m_per.max())
         # Scan-step provisioning sized by the largest instance (smaller ones
         # idle); the drain below covers top-b pick stalls (star graphs with
-        # assign_batch > 1 assign one edge per step, not b — each step with
+        # rows_per_step > 1 assign one edge per step, not b — each step with
         # a non-empty window assigns >= 1 edge, so ceil(m/chunk_steps) extra
         # chunks always finish).
-        steps_total = -(-m_max // b) + -(-cfg.window_max // b) + 2
+        steps_total = -(-m_max // b) + -(-core.window_rows // b) + 2
         n_chunks = max(1, min(n_chunks, steps_total))
         chunk_steps = -(-steps_total // n_chunks)
         n_chunks = -(-steps_total // chunk_steps)
@@ -531,9 +681,7 @@ class ScanDriver:
             return _run_scan_resident(
                 carry, streams_j, self._m_real_j, self._allowed_j,
                 self._caps_j, prev_j,
-                cfg=cfg, num_vertices=self.num_vertices, r_sel=self.r_sel,
-                n_steps=chunk_steps, has_budget=self.has_budget,
-                update_deg=self.update_deg, n_shards=self.n_shards,
+                core=core, n_steps=chunk_steps, n_shards=self.n_shards,
             )
 
         outs = []
@@ -563,7 +711,7 @@ class ScanDriver:
 
     # -- ring (file) mode --------------------------------------------------
     def _run_ring(self, on_assign) -> DriveResult:
-        src, cfg = self.source, self.cfg
+        src, core = self.source, self.core
         z = self.z
         m_max = int(self.m_per.max())
         S = src.scan_steps
@@ -575,7 +723,7 @@ class ScanDriver:
         # (capacity caps sum to > m, so an allowed partition below cap always
         # exists), so total steps are bounded by m_max plus the window
         # build-up.
-        max_iters = -(-(m_max + cfg.window_max) // S) + 8
+        max_iters = -(-(m_max + core.window_rows) // S) + 8
         while True:
             assigned = np.asarray(carry.assigned)
             if (assigned >= self.m_per).all():
@@ -588,9 +736,7 @@ class ScanDriver:
             buf = src.refill(buf, np.asarray(carry.cursor))
             (carry, buf), out = _run_scan_ring(
                 (carry, buf), self._m_real_j, self._allowed_j, self._caps_j,
-                cfg=cfg, num_vertices=self.num_vertices, r_sel=self.r_sel,
-                n_steps=S, has_budget=self.has_budget,
-                update_deg=self.update_deg, n_shards=self.n_shards,
+                core=core, n_steps=S, n_shards=self.n_shards,
             )
             sidx = np.asarray(out.sidx).reshape(z, -1)
             pout = np.asarray(out.p).reshape(z, -1)
@@ -613,15 +759,16 @@ class ScanDriver:
 
     def _result(self, carry, wall, *, sidx, p, w_trace, scan_calls,
                 h2d_rows, h2d_bytes, buffer_rows, steps_per_call) -> DriveResult:
+        cnt = self.core.counters(carry)
         return DriveResult(
             sidx=sidx,
             p=p,
             w_trace=w_trace,
             assigned=np.asarray(carry.assigned),
-            score_rows=np.asarray(carry.score_rows),
-            final_w=np.asarray(carry.w_cap),
-            lam=np.asarray(carry.lam),
-            cost_per_score=np.asarray(carry.cost_per_score),
+            score_rows=np.asarray(cnt["score_rows"]),
+            final_w=np.asarray(cnt["final_w"]),
+            lam=np.asarray(cnt["lam"]),
+            cost_per_score=np.asarray(cnt["cost_per_score"]),
             wall_time_s=wall,
             r_sel=self.r_sel,
             backend=self.backend,
@@ -655,11 +802,11 @@ class ScanDriver:
     def stats_base(self, res: DriveResult, instance: int) -> dict:
         """The shared per-instance stat fields every caller reports."""
         return dict(
-            k=self.cfg.k,
-            name="adwise",
+            k=self.core.k,
+            name=self.core.name,
             wall_time_s=res.wall_time_s,
             score_rows=int(res.score_rows[instance]),
-            score_count=int(res.score_rows[instance]) * self.cfg.k,
+            score_count=int(res.score_rows[instance]) * self.core.k,
             final_w=int(res.final_w[instance]),
             lam_final=float(res.lam[instance]),
             assigned=int(res.assigned[instance]),

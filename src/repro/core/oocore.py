@@ -9,30 +9,36 @@ disk each pass and reads the prior pass's placements back from its spill
 (never holding a resident edge array). Output is **bit-identical** to the
 in-memory path for every strategy:
 
-* ADWISE runs through :class:`repro.core.driver.ScanDriver` over a
+* Every scan-core strategy — ADWISE, HDRF, Greedy, and 2PS(-L) phase 2 —
+  runs through ONE code path: :class:`repro.core.driver.ScanDriver` over a
   :class:`repro.core.driver.FileSource` — a **device-resident ring buffer**:
   logical stream row ``s`` lives in ring slot ``s % B`` on device, each
   refill ships only the new tail rows (`jax.lax.dynamic_update_slice` into
   the donated buffer), and the scan step is the very same trace the
   in-memory path runs (``s % m`` is the identity there). Per scan call of
-  ``S`` steps the cursor advances at most ``window_max + S * assign_batch``
-  rows (the window can hold at most ``window_max`` read-but-unassigned edges
-  and each step assigns at most ``assign_batch``), which bounds the refill —
-  host→device traffic is O(refill) per call, not O(B), and is reported as
-  ``h2d_rows`` / ``h2d_bytes`` in stats (billed by the latency model).
+  ``S`` steps the cursor advances at most
+  ``window_rows + S * rows_per_step`` rows (ADWISE:
+  ``window_max + S * assign_batch``; the single-edge cores ``0 + S``),
+  which bounds the refill — host→device traffic is O(refill) per call, not
+  O(B), and is reported as ``h2d_rows`` / ``h2d_bytes`` in stats (billed by
+  the latency model).
 * The z>1 spotlight path batches per-instance ring buffers over
   per-instance sub-readers (`EdgeFileReader.split` — the same ceil(m/z)
-  ``split_bounds`` byte ranges `EdgeStream` uses) through the same driver,
-  mirroring `spotlight_partition`'s batched backend; baseline strategies run
-  chunk-resumably per instance at the local spread-k and are remapped,
-  mirroring the loop backend.
-* HDRF / Greedy resume their vertex-cache state across chunks
-  (`repro.core.baselines.HdrfState` / ``GreedyState``); DBH takes a chunked
-  degree pass then a chunked placement pass; Hash / Grid are stateless.
-* 2PS takes a chunked degree pass, streams phase 1 through the
+  ``split_bounds`` byte ranges `EdgeStream` uses) through the same driver:
+  every instance runs at GLOBAL k restricted by its ``allowed`` spread
+  mask, exactly mirroring `spotlight_partition`'s batched backend (HDRF
+  instances derive their tie-noise streams from ``seed + i`` inside the
+  batched carry). Only the stateless hashes (hash/dbh) run a per-instance
+  chunked loop — the same vectorized assignment either way.
+* DBH takes a chunked degree pass then a chunked placement pass; Hash /
+  Grid are stateless. The chunk-resumable numpy states
+  (`repro.core.baselines.HdrfState` / ``GreedyState``) survive as the
+  base-pass path for non-adwise re-streaming.
+* 2PS / 2PS-L take a chunked degree pass, stream phase 1 through the
   chunk-resumable `lax.scan` clustering
-  (:class:`repro.core.restream.VertexClusteringState`), and runs phase 2
-  through the warm-started rolling-buffer scan.
+  (:class:`repro.core.restream.VertexClusteringState`), and run phase 2
+  through the warm-started ring scan (the ADWISE scan for 2ps, the
+  :class:`repro.core.restream.TpslCore` step-core for 2ps-l).
 
 Stats report the *measured* IO: ``io_wall_s`` (seconds inside ``read``),
 ``rows_read`` and ``stream_reads`` (measured full passes over the stream),
@@ -52,7 +58,7 @@ import numpy as np
 from repro.core import baselines
 from repro.core.adwise import WarmState
 from repro.core.driver import FileSource, ScanDriver
-from repro.core.restream import VertexClusteringState, _pack_clusters
+from repro.core.restream import TpslCore, VertexClusteringState, _pack_clusters
 from repro.core.spotlight import _SPOTLIGHT_INCOMPATIBLE, spread_mask
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.graph import metrics
@@ -61,7 +67,6 @@ from repro.graph.stream import EdgeStream
 __all__ = ["partition_file"]
 
 _ADWISE_FIELDS = {f.name for f in dataclasses.fields(AdwiseConfig)} - {"k", "seed"}
-_SEQUENTIAL_BASELINES = ("hdrf", "dbh", "greedy", "hash", "grid")
 
 
 # ----------------------------------------------------------------------------
@@ -146,14 +151,14 @@ class _PassMetrics:
 
 
 # ----------------------------------------------------------------------------
-# The ring-buffer ADWISE driver (z >= 1 batched, warm-chunk path)
+# The ring-buffer scan driver (z >= 1 batched, warm-chunk path, any core)
 # ----------------------------------------------------------------------------
 
 
-def _drive_adwise(
+def _drive_core(
     readers: Sequence,
     num_vertices: int,
-    cfg: AdwiseConfig,
+    core,  # a StepCore, or an AdwiseConfig (wrapped by the driver)
     *,
     write_assign: Callable[[int, np.ndarray, np.ndarray], None],
     chunk_edges: int,
@@ -162,7 +167,7 @@ def _drive_adwise(
     prev_read: Optional[List[Callable[[int, int], np.ndarray]]] = None,
     backend: str = "auto",
 ) -> List[dict]:
-    """Feed z instance streams through the ADWISE scan in a bounded
+    """Feed z instance streams through any step-core's scan in a bounded
     device-resident ring buffer — a thin caller of
     :class:`repro.core.driver.ScanDriver` over a
     :class:`~repro.core.driver.FileSource`.
@@ -176,12 +181,16 @@ def _drive_adwise(
     m_per = np.array([r.num_edges for r in readers], dtype=np.int64)
     m_max = int(m_per.max()) if z else 0
     if m_max == 0:
-        return [dict(k=cfg.k, score_rows=0, assigned=0, unassigned=0)
+        return [dict(k=core.k, score_rows=0, assigned=0, unassigned=0)
                 for _ in range(z)]
 
-    source = FileSource(readers, chunk_edges=chunk_edges, cfg=cfg,
-                        prev_read=prev_read)
-    drv = ScanDriver(source, cfg, num_vertices, allowed=allowed, warm=warm,
+    is_cfg = isinstance(core, AdwiseConfig)
+    source = FileSource(
+        readers, chunk_edges=chunk_edges,
+        cfg=core if is_cfg else None, core=None if is_cfg else core,
+        prev_read=prev_read,
+    )
+    drv = ScanDriver(source, core, num_vertices, allowed=allowed, warm=warm,
                      backend=backend)
     res = drv.run(on_assign=write_assign)
     stats = []
@@ -267,59 +276,87 @@ def _run_baseline_chunks(
 
 
 def _run_two_phase_chunks(
-    reader,
+    readers: Sequence,
     num_vertices: int,
     k: int,
     seed: int,
     chunk_edges: int,
-    write_assign: Callable[[np.ndarray, np.ndarray], None],
+    write_assign: Callable[[int, np.ndarray, np.ndarray], None],
     *,
+    variant: str = "2ps",
+    allowed: Optional[np.ndarray] = None,  # (z, k) bool
+    backend: str = "auto",
     cluster_slack: float = 1.25,
-    **adwise_cfg,
-) -> dict:
-    """2PS over a reader: chunked degree pass → chunk-resumable `lax.scan`
-    clustering → LPT packing → warm-started rolling-buffer phase 2."""
-    adwise_cfg.setdefault("window_max", 32)
-    adwise_cfg.setdefault("window_init", max(1, min(8, adwise_cfg["window_max"])))
-    cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
-    m = reader.num_edges
+    **cfg,
+) -> List[dict]:
+    """2PS / 2PS-L over z per-instance readers: chunked degree pass →
+    chunk-resumable `lax.scan` clustering → LPT packing onto each
+    instance's allowed partitions → warm-started ring-buffer phase 2 (the
+    ADWISE scan for 2ps, the :class:`TpslCore` step-core for 2ps-l). The
+    per-instance phase 1 is bit-identical to
+    :func:`repro.core.restream._phase1_warm` on the resident sub-stream."""
+    z = len(readers)
     t0 = time.perf_counter()
-    deg = _chunked_degrees(reader, num_vertices, chunk_edges)
-    state = VertexClusteringState(
-        num_vertices, k, m, deg, cluster_slack=cluster_slack,
-        chunk_edges=chunk_edges,
-    )
-    for chunk in reader.chunks(chunk_edges):
-        state.update(chunk)
-    cl, vols = state.finalize()
-    part_of_cluster = _pack_clusters(vols, k) if len(vols) else np.zeros(0, np.int32)
+    warms, n_clusters = [], []
+    for i in range(z):
+        a_i = None if allowed is None else np.asarray(allowed[i], bool)
+        n_allowed = k if a_i is None else max(int(a_i.sum()), 1)
+        deg = _chunked_degrees(readers[i], num_vertices, chunk_edges)
+        state = VertexClusteringState(
+            num_vertices, n_allowed, readers[i].num_edges, deg,
+            cluster_slack=cluster_slack, chunk_edges=chunk_edges,
+        )
+        for chunk in readers[i].chunks(chunk_edges):
+            state.update(chunk)
+        cl, vols = state.finalize()
+        part = (
+            _pack_clusters(vols, n_allowed) if len(vols)
+            else np.zeros(0, np.int32)
+        )
+        if a_i is not None:
+            part = np.flatnonzero(a_i).astype(np.int32)[part]
+        replicas = np.zeros((num_vertices, k), dtype=bool)
+        clustered = np.flatnonzero(cl >= 0)
+        if len(clustered):
+            replicas[clustered, part[cl[clustered]]] = True
+        warms.append(WarmState(
+            replicas=replicas, deg=deg, sizes=np.zeros(k, dtype=np.int64),
+            prev_assign=None,
+        ))
+        n_clusters.append(int(len(vols)))
     t_phase1 = time.perf_counter() - t0
 
-    replicas = np.zeros((num_vertices, k), dtype=bool)
-    clustered = np.flatnonzero(cl >= 0)
-    if len(clustered):
-        replicas[clustered, part_of_cluster[cl[clustered]]] = True
-    warm = WarmState(
-        replicas=replicas, deg=deg, sizes=np.zeros(k, dtype=np.int64),
-        prev_assign=None,
+    if variant == "2ps":
+        cfg.setdefault("window_max", 32)
+        cfg.setdefault("window_init", max(1, min(8, cfg["window_max"])))
+        core = AdwiseConfig(k=k, seed=seed, **cfg)
+    else:
+        core = TpslCore(
+            num_vertices=int(num_vertices), k=int(k),
+            lam=float(cfg.pop("lam", 1.1)), eps=float(cfg.pop("eps", 1.0)),
+            cap_slack=float(cfg.pop("cap_slack", 1.15)),
+        )
+        assert not cfg, cfg  # partition_file validated the keys
+    per_stats = _drive_core(
+        readers, num_vertices, core, write_assign=write_assign,
+        chunk_edges=chunk_edges, allowed=allowed, warm=warms, backend=backend,
     )
-    sub_stats = _drive_adwise(
-        [reader], num_vertices, cfg,
-        write_assign=lambda _i, idx, p: write_assign(idx, p),
-        chunk_edges=chunk_edges, warm=[warm],
-    )[0]
-    return dict(
-        sub_stats,
-        name="2ps",
-        n_clusters=int(len(vols)),
-        cluster_slack=cluster_slack,
-        phase1_wall_s=t_phase1,
-        # Degree pass + clustering pass + scoring pass: three measured reads
-        # of the file (the in-memory path folds degree counting into its
-        # resident array and bills 2).
-        stream_reads=3,
-        wall_time_s=time.perf_counter() - t0,
-    )
+    wall = time.perf_counter() - t0
+    return [
+        dict(
+            st,
+            name=variant,
+            n_clusters=n_clusters[i],
+            cluster_slack=cluster_slack,
+            phase1_wall_s=t_phase1,
+            # Degree pass + clustering pass + scoring pass: three measured
+            # reads of the file (the in-memory path folds degree counting
+            # into its resident array and bills 2).
+            stream_reads=3,
+            wall_time_s=wall,
+        )
+        for i, st in enumerate(per_stats)
+    ]
 
 
 # ----------------------------------------------------------------------------
@@ -364,7 +401,7 @@ def _run_restream_chunks(
     t0 = time.perf_counter()
     spill = new_spill(0)
     if base == "adwise":
-        pass_stats = _drive_adwise(
+        pass_stats = _drive_core(
             readers, num_vertices, cfg,
             write_assign=(
                 lambda sp: lambda i, idx, p: sp.write(offsets[i] + idx, p)
@@ -432,7 +469,7 @@ def _run_restream_chunks(
             for i in range(z)
         ]
         spill = new_spill(j)
-        pass_stats = _drive_adwise(
+        pass_stats = _drive_core(
             readers, num_vertices, cfg,
             write_assign=(
                 lambda sp: lambda i, idx, p: sp.write(offsets[i] + idx, p)
@@ -517,7 +554,7 @@ def partition_file(
     Args:
       reader: an :class:`repro.graph.io.format.EdgeFileReader` (or sub-reader).
       strategy: registry strategy name — 'adwise', 'adwise-restream', '2ps',
-        'hdrf', 'dbh', 'greedy', 'hash', 'grid'.
+        '2ps-l', 'hdrf', 'dbh', 'greedy', 'hash', 'grid'.
       k: global partition count.
       z: spotlight parallel-loading instances; z > 1 splits the file into z
         contiguous byte ranges (``EdgeFileReader.split`` — the boundaries
@@ -539,7 +576,8 @@ def partition_file(
       backend: forwarded to the batched scan ('auto'/'vmap'/'shard_map').
       cfg: strategy knobs, exactly as `repro.core.registry.run_partitioner`
         takes them (AdwiseConfig fields; `passes=`/`base=`/`keep_best=`/
-        `eps=` for adwise-restream; `cluster_slack=` for 2ps; `lam=` for
+        `eps=` for adwise-restream; `cluster_slack=` for 2ps;
+        `cluster_slack=`/`lam=`/`eps=`/`cap_slack=` for 2ps-l; `lam=` for
         hdrf, ...).
 
     Returns a PartitionResult whose ``assign`` is a read-only memmap over the
@@ -577,6 +615,27 @@ def partition_file(
     final = _Spill(os.path.join(spill_dir, "assign.i32"), m)
     t0 = time.perf_counter()
 
+    readers = list(reader.split(z)) if z > 1 else [reader]
+    offsets = (
+        np.asarray(EdgeStream.split_bounds(m, z)[:z])
+        if z > 1
+        else np.zeros((1,), np.int64)
+    )
+    allowed = (
+        np.stack([spread_mask(k, z, i, spread) for i in range(z)])
+        if z > 1
+        else None
+    )
+
+    def write_core(i, idx, p):
+        final.write(offsets[i] + idx, p)
+
+    def spotlightify(stats, per_stats):
+        return dict(
+            stats, name=f"spotlight-{strategy}", z=z, spread=spread,
+            score_count=sum(s.get("score_count", 0) for s in per_stats),
+        )
+
     if strategy in ("adwise", "adwise-restream"):
         unknown = set(cfg) - _ADWISE_FIELDS - (
             {"passes", "base", "keep_best", "eps", "n_chunks"}
@@ -585,30 +644,15 @@ def partition_file(
         if unknown:
             raise TypeError(f"{strategy}: unknown config keys {sorted(unknown)}")
         cfg.pop("n_chunks", None)
-        readers = list(reader.split(z)) if z > 1 else [reader]
-        offsets = (
-            np.asarray(EdgeStream.split_bounds(m, z)[:z])
-            if z > 1
-            else np.zeros((1,), np.int64)
-        )
-        allowed = (
-            np.stack([spread_mask(k, z, i, spread) for i in range(z)])
-            if z > 1
-            else None
-        )
         if strategy == "adwise":
             acfg = AdwiseConfig(k=k, seed=seed, **cfg)
-            per_stats = _drive_adwise(
-                readers, n, acfg,
-                write_assign=lambda i, idx, p: final.write(offsets[i] + idx, p),
+            per_stats = _drive_core(
+                readers, n, acfg, write_assign=write_core,
                 chunk_edges=chunk_edges, allowed=allowed, backend=backend,
             )
             stats = dict(per_stats[0], stream_reads=1)
             if z > 1:
-                stats.update(
-                    name="spotlight-adwise", z=z, spread=spread,
-                    score_count=sum(s.get("score_count", 0) for s in per_stats),
-                )
+                stats = spotlightify(stats, per_stats)
         else:
             stats = _run_restream_chunks(
                 readers, n, k, seed, chunk_edges, spill_dir, m, offsets, final,
@@ -616,33 +660,56 @@ def partition_file(
             )
             if z > 1:
                 stats.update(name="spotlight-adwise-restream", z=z, spread=spread)
-    elif strategy == "2ps":
-        unknown = set(cfg) - _ADWISE_FIELDS - {"cluster_slack", "n_chunks"}
+    elif strategy in ("2ps", "2ps-l"):
+        allowed_keys = (
+            _ADWISE_FIELDS | {"cluster_slack", "n_chunks"}
+            if strategy == "2ps"
+            else {"cluster_slack", "lam", "eps", "cap_slack", "n_chunks"}
+        )
+        unknown = set(cfg) - allowed_keys
         if unknown:
-            raise TypeError(f"2ps: unknown config keys {sorted(unknown)}")
+            raise TypeError(f"{strategy}: unknown config keys {sorted(unknown)}")
         cfg.pop("n_chunks", None)
-        if z == 1:
-            stats = _run_two_phase_chunks(
-                reader, n, k, seed, chunk_edges,
-                lambda idx, p: final.write(idx, p), **cfg,
+        per_stats = _run_two_phase_chunks(
+            readers, n, k, seed, chunk_edges, write_core,
+            variant=strategy, allowed=allowed, backend=backend, **cfg,
+        )
+        stats = per_stats[0]
+        if z > 1:
+            stats = dict(
+                spotlightify(stats, per_stats),
+                n_clusters=[s["n_clusters"] for s in per_stats],
+            )
+    elif strategy in ("hdrf", "greedy"):
+        if strategy == "hdrf":
+            unknown = set(cfg) - {"lam", "eps"}
+            if unknown:
+                raise TypeError(f"hdrf: unknown config keys {sorted(unknown)}")
+            core = baselines.HdrfCore(
+                num_vertices=n, k=k, lam=float(cfg.get("lam", 1.1)),
+                eps=float(cfg.get("eps", 1.0)), seed=seed,
             )
         else:
-            stats = _masked_instances_file(
-                "2ps", reader, n, k, z, spread, seed, chunk_edges, final, cfg,
-                lambda sub, kk, sd, write: _run_two_phase_chunks(
-                    sub, n, kk, sd, chunk_edges, write, **cfg
-                ),
-            )
-    elif strategy in _SEQUENTIAL_BASELINES:
+            if cfg:
+                raise TypeError(f"greedy: unknown config keys {sorted(cfg)}")
+            core = baselines.GreedyCore(num_vertices=n, k=k)
+        per_stats = _drive_core(
+            readers, n, core, write_assign=write_core,
+            chunk_edges=chunk_edges, allowed=allowed, backend=backend,
+        )
+        stats = dict(per_stats[0], stream_reads=1)
+        if z > 1:
+            stats = spotlightify(stats, per_stats)
+    elif strategy in ("hash", "dbh", "grid"):
         if z == 1:
             stats = _run_baseline_chunks(
                 strategy, reader, n, k, seed, chunk_edges,
                 lambda off, a: final.write_range(off, a), **cfg,
             )
         else:
-            stats = _masked_instances_file(
-                strategy, reader, n, k, z, spread, seed, chunk_edges, final, cfg,
-                None,
+            stats = _run_stateless_spotlight(
+                strategy, readers, offsets, n, k, z, spread, seed,
+                chunk_edges, final, cfg,
             )
     else:
         raise KeyError(
@@ -685,9 +752,10 @@ def partition_file(
     return PartitionResult(final.flush_readonly(), stats)
 
 
-def _masked_instances_file(
+def _run_stateless_spotlight(
     strategy: str,
-    reader,
+    readers: Sequence,
+    offsets: np.ndarray,
     num_vertices: int,
     k: int,
     z: int,
@@ -696,37 +764,26 @@ def _masked_instances_file(
     chunk_edges: int,
     final: _Spill,
     cfg: dict,
-    two_phase_runner,
 ) -> dict:
-    """z>1 spotlight for non-batched strategies: each instance runs the
-    chunk-resumable core at the local spread-k over its byte range and local
-    ids are remapped to the global ids its mask selects (mirrors
-    `spotlight_partition`'s loop backend / `_masked_strategy`)."""
-    subs = reader.split(z)
-    bounds = EdgeStream.split_bounds(reader.num_edges, z)
+    """z>1 spotlight for the stateless hashes (hash/dbh): each instance runs
+    the chunked assignment at its local spread-k over its byte range with
+    ``seed + i``, local partition *ranks* remapped to the global ids its mask
+    selects — the same rank-remap `spotlight_partition`'s batched backend
+    applies to masked hashing in memory, so file == memory bit-for-bit."""
     t0 = time.perf_counter()
     walls, score_counts, reads = [], 0, 0
-    for i, sub in enumerate(subs):
+    for i in range(z):
         allowed = spread_mask(k, z, i, spread)
         local_to_global = np.flatnonzero(allowed).astype(np.int32)
-        k_local = int(allowed.sum())
-        g0 = int(bounds[i])
-
-        if two_phase_runner is not None:
-            st = two_phase_runner(
-                sub, k_local, seed + i,
-                lambda idx, p, g0=g0, m_=local_to_global: final.write(
-                    g0 + idx, m_[p]
-                ),
-            )
-        else:
-            st = _run_baseline_chunks(
-                strategy, sub, num_vertices, k_local, seed + i, chunk_edges,
-                lambda off, a, g0=g0, m_=local_to_global: final.write_range(
-                    g0 + off, m_[a]
-                ),
-                **cfg,
-            )
+        g0 = int(offsets[i])
+        st = _run_baseline_chunks(
+            strategy, readers[i], num_vertices, int(allowed.sum()),
+            seed + i, chunk_edges,
+            lambda off, a, g0=g0, m_=local_to_global: final.write_range(
+                g0 + off, m_[a]
+            ),
+            **cfg,
+        )
         walls.append(st.get("wall_time_s", 0.0))
         score_counts += st.get("score_count", 0)
         reads = max(reads, st.get("stream_reads", 1))

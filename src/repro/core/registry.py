@@ -31,6 +31,11 @@ Multi-pass strategies (`repro/core/restream.py`):
   cluster-aware scoring). Knobs: AdwiseConfig fields for phase 2
   (``window_max`` defaults to 32 here), plus ``cluster_slack=`` (phase-1
   cluster volume cap as a multiple of 2m/k, default 1.25).
+* ``2ps-l`` — 2PS-L, the linear-run-time variant: same phase 1, but phase 2
+  scores each edge once against its endpoints' cluster partitions (own
+  step-core, no window). Knobs: ``cluster_slack=``, ``lam=``/``eps=``
+  (balance weighting), ``cap_slack=`` (hard capacity), ``scan=False`` for
+  the numpy parity oracle.
 
 Usage:
     from repro.core.registry import run_partitioner, available_strategies
@@ -108,20 +113,32 @@ _ADWISE_FIELDS = {f.name for f in dataclasses.fields(AdwiseConfig)}
 
 
 @register("adwise")
-def _adwise(edges, num_vertices, k, seed=0, *, oracle=False, **cfg) -> PartitionResult:
+def _adwise(
+    edges, num_vertices, k, seed=0, *, oracle=False, allowed=None, **cfg
+) -> PartitionResult:
     """ADWISE (paper §III). cfg keys = AdwiseConfig fields; oracle=True runs
-    the sequential Algorithm-1 reference instead of the vectorized scan."""
+    the sequential Algorithm-1 reference instead of the vectorized scan;
+    allowed= restricts scoring to a spotlight partition subset."""
     unknown = set(cfg) - _ADWISE_FIELDS
     if unknown:
         raise TypeError(f"adwise: unknown config keys {sorted(unknown)}")
     acfg = AdwiseConfig(k=k, seed=seed, **cfg)
     if oracle:
+        if allowed is not None:
+            raise ValueError("adwise oracle does not support allowed= masks")
         return ref_adwise_partition(edges, num_vertices, acfg)
-    return partition_stream(edges, num_vertices, acfg)
+    return partition_stream(edges, num_vertices, acfg, allowed=allowed)
 
 
 @register("hdrf")
-def _hdrf(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult:
+def _hdrf(edges, num_vertices, k, seed=0, *, scan=True, **cfg) -> PartitionResult:
+    """HDRF (Petroni et al.). Runs as the :class:`~repro.core.baselines.
+    HdrfCore` device-resident `lax.scan` by default; ``scan=False`` runs the
+    per-edge numpy oracle (bit-identical — kept as the parity reference)."""
+    if scan:
+        return baselines.hdrf_partition_scan(
+            edges, num_vertices, k, seed=seed, **cfg
+        )
     return baselines.hdrf_partition(edges, num_vertices, k, seed=seed, **cfg)
 
 
@@ -131,7 +148,14 @@ def _dbh(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult:
 
 
 @register("greedy")
-def _greedy(edges, num_vertices, k, seed=0, **cfg) -> PartitionResult:
+def _greedy(edges, num_vertices, k, seed=0, *, scan=True, **cfg) -> PartitionResult:
+    """PowerGraph Greedy. Runs as the :class:`~repro.core.baselines.
+    GreedyCore` device-resident `lax.scan` by default; ``scan=False`` runs
+    the per-edge numpy oracle (bit-identical parity reference)."""
+    if scan:
+        return baselines.greedy_partition_scan(
+            edges, num_vertices, k, seed=seed, **cfg
+        )
     return baselines.greedy_partition(edges, num_vertices, k, seed=seed, **cfg)
 
 

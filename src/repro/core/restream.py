@@ -26,7 +26,18 @@ docstring: **pass count**. Two strategies ride on one warm-start mechanism
   cluster-affinity score — no new scoring code, phase 2 literally reuses
   the scoring terms the single-pass partitioner compiles.
 
-Both are one-file registry entries; launchers and benchmarks pick them up
+* ``2ps-l`` — 2PS-L (Mayer et al., arXiv:2203.12721), the linear-run-time
+  variant. Same phase 1 (the clustering scan above IS 2PS-L's phase 1),
+  but phase 2 drops the windowed rescoring entirely: each edge is scored
+  once against its endpoints' cluster→partition placements plus the
+  quantized HDRF balance term, under a hard capacity cap (eligible =
+  allowed ∧ size < cap, so the least-loaded fallback of the paper's
+  Algorithm 2 emerges from the same argmax instead of a separate branch).
+  Phase 2 is its own step-core (:class:`TpslCore`) riding the shared
+  :class:`~repro.core.driver.ScanDriver`, with :class:`TpslState` as the
+  per-edge numpy parity oracle — deterministic, no tie noise.
+
+All are one-file registry entries; launchers and benchmarks pick them up
 by name.
 
 Every pass here is a thin call into :func:`repro.core.adwise.partition_stream`
@@ -43,7 +54,7 @@ import dataclasses
 import math
 import time
 from functools import partial
-from typing import List, Optional
+from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +62,14 @@ import numpy as np
 
 from repro.core import registry
 from repro.core.adwise import WarmState, partition_stream, partition_stream_batched
+from repro.core.baselines import (
+    QB,
+    _DEG_CLAMP,
+    _eps_q,
+    _lam_q,
+    _scan_partition,
+    _single_edge_out,
+)
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.graph import metrics
 
@@ -59,9 +78,13 @@ __all__ = [
     "restream_partition",
     "restream_partition_batched",
     "two_phase_partition",
+    "two_phase_linear_partition",
+    "two_phase_partition_batched",
     "streaming_vertex_clustering",
     "streaming_vertex_clustering_np",
     "VertexClusteringState",
+    "TpslCore",
+    "TpslState",
 ]
 
 
@@ -106,6 +129,7 @@ def restream_partition(
     eps: Optional[float] = None,
     seed: int = 0,
     n_chunks: int = 8,
+    allowed: Optional[np.ndarray] = None,
     **adwise_cfg,
 ) -> PartitionResult:
     """n-pass re-streaming: warm-started ADWISE over a base pass.
@@ -113,6 +137,9 @@ def restream_partition(
     Args:
       passes: total passes over the stream (1 == just the base strategy).
       base: registry strategy for pass 1. Non-adwise bases take no cfg here.
+      allowed: optional (k,) bool partition mask — every pass (base pass
+        included) scores only the allowed partitions (the spotlight loop
+        backend routes per-instance spread masks through here).
       keep_best: return the pass with the lowest replication degree (quality
         is then non-increasing in ``passes``); False returns the last pass.
       eps: early-stop threshold on replication degree — stop re-streaming
@@ -127,10 +154,15 @@ def restream_partition(
     if passes < 1:
         raise ValueError(f"passes must be >= 1, got {passes}")
     cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
+    base_kw = {} if allowed is None else {"allowed": allowed}
     if base == "adwise":
-        res = partition_stream(edges, num_vertices, cfg, n_chunks=n_chunks)
+        res = partition_stream(
+            edges, num_vertices, cfg, n_chunks=n_chunks, allowed=allowed
+        )
     else:
-        res = registry.run_partitioner(base, edges, num_vertices, k, seed=seed)
+        res = registry.run_partitioner(
+            base, edges, num_vertices, k, seed=seed, **base_kw
+        )
 
     def _score_rows(stats: dict) -> int:
         # Baselines report score_count = m·k but no score_rows; both count
@@ -151,7 +183,8 @@ def restream_partition(
         warm = warm_from_assignment(edges, res.assign, num_vertices, k)
         warm_wall += time.perf_counter() - t_w
         res = partition_stream(
-            edges, num_vertices, cfg, n_chunks=n_chunks, warm=warm
+            edges, num_vertices, cfg, n_chunks=n_chunks, warm=warm,
+            allowed=allowed,
         )
         pass_rd.append(_rd(edges, res.assign, num_vertices, k))
         pass_imbalance.append(metrics.partition_balance(res.assign, k))
@@ -551,6 +584,49 @@ def _pack_clusters(vols: np.ndarray, k: int) -> np.ndarray:
     return part
 
 
+def _phase1_warm(
+    edges: np.ndarray,
+    num_vertices: int,
+    k: int,
+    allowed: Optional[np.ndarray],
+    cluster_slack: float,
+) -> tuple[WarmState, int]:
+    """Phase 1 shared by 2PS and 2PS-L: volume-capped streaming clustering,
+    LPT packing, and the virtual-replica :class:`WarmState` for phase 2.
+
+    ``allowed`` restricts the instance to its spotlight partition set: the
+    clustering volume cap divides by n_allowed (each instance balances its
+    own sub-stream over its own partitions) and clusters are packed onto
+    the allowed partition ids only. Returns ``(warm, n_clusters)``.
+    """
+    allowed_np = None if allowed is None else np.asarray(allowed, bool)
+    n_allowed = k if allowed_np is None else max(int(allowed_np.sum()), 1)
+    deg = _degrees(edges, num_vertices)
+    state = VertexClusteringState(
+        num_vertices, n_allowed, len(edges), deg, cluster_slack=cluster_slack
+    )
+    state.update(np.asarray(edges, np.int32))
+    cl, vols = state.finalize()
+    part_of_cluster = (
+        _pack_clusters(vols, n_allowed) if len(vols) else np.zeros(0, np.int32)
+    )
+    if allowed_np is not None:
+        part_of_cluster = np.flatnonzero(allowed_np).astype(np.int32)[
+            part_of_cluster
+        ]
+    replicas = np.zeros((num_vertices, k), dtype=bool)
+    clustered = np.flatnonzero(cl >= 0)
+    if len(clustered):
+        replicas[clustered, part_of_cluster[cl[clustered]]] = True
+    warm = WarmState(
+        replicas=replicas,
+        deg=deg,
+        sizes=np.zeros(k, dtype=np.int64),
+        prev_assign=None,
+    )
+    return warm, int(len(vols))
+
+
 def two_phase_partition(
     edges: np.ndarray,
     num_vertices: int,
@@ -559,6 +635,7 @@ def two_phase_partition(
     cluster_slack: float = 1.25,
     seed: int = 0,
     n_chunks: int = 8,
+    allowed: Optional[np.ndarray] = None,
     **adwise_cfg,
 ) -> PartitionResult:
     """2PS: streaming vertex clustering, then cluster-aware edge scoring.
@@ -566,38 +643,26 @@ def two_phase_partition(
     Phase 2 runs the ADWISE scan warm-started with virtual replicas — each
     clustered vertex starts replicated on its cluster's partition — so the
     shared Eq. 5 replication term *is* the cluster-affinity score, and λ·B
-    plus the capacity cap keep the result balanced.
+    plus the capacity cap keep the result balanced. ``allowed`` restricts
+    both phases to a spotlight partition subset.
     """
     adwise_cfg.setdefault("window_max", 32)
     adwise_cfg.setdefault(
         "window_init", max(1, min(8, adwise_cfg["window_max"]))
     )
     cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
-    m = len(edges)
     t0 = time.perf_counter()
-    cl, vols = streaming_vertex_clustering(
-        edges, num_vertices, k, cluster_slack=cluster_slack
-    )
-    part_of_cluster = (
-        _pack_clusters(vols, k) if len(vols) else np.zeros(0, np.int32)
+    warm, n_clusters = _phase1_warm(
+        edges, num_vertices, k, allowed, cluster_slack
     )
     t_phase1 = time.perf_counter() - t0
-
-    replicas = np.zeros((num_vertices, k), dtype=bool)
-    clustered = np.flatnonzero(cl >= 0)
-    if len(clustered):
-        replicas[clustered, part_of_cluster[cl[clustered]]] = True
-    warm = WarmState(
-        replicas=replicas,
-        deg=_degrees(edges, num_vertices),
-        sizes=np.zeros(k, dtype=np.int64),
-        prev_assign=None,
+    res = partition_stream(
+        edges, num_vertices, cfg, n_chunks=n_chunks, warm=warm, allowed=allowed
     )
-    res = partition_stream(edges, num_vertices, cfg, n_chunks=n_chunks, warm=warm)
     stats = dict(
         res.stats,
         name="2ps",
-        n_clusters=int(len(vols)),
+        n_clusters=n_clusters,
         cluster_slack=cluster_slack,
         phase1_wall_s=t_phase1,
         # Clustering pass + scoring pass — two full stream reads, billed by
@@ -607,6 +672,355 @@ def two_phase_partition(
         unassigned=metrics.unassigned_count(res.assign),
     )
     return PartitionResult(res.assign, stats)
+
+
+# ----------------------------------------------------------------------------
+# 2PS-L: linear-time phase 2 as its own step-core
+# ----------------------------------------------------------------------------
+
+
+class TpslCarry(NamedTuple):
+    vp: jax.Array  # (V+1,) int32 — partition of each vertex's cluster, -1 none
+    deg: jax.Array  # (V+1,) int32 — full-stream degrees (static in phase 2)
+    sizes: jax.Array  # (K,) int32
+    cursor: jax.Array  # () int32
+    assigned: jax.Array  # () int32
+
+
+class TpslState:
+    """2PS-L phase 2 as a per-edge numpy loop (parity oracle for
+    :class:`TpslCore`).
+
+    Linear-time cluster-score placement: each edge is scored ONCE per
+    partition — the HDRF degree-weighted replication term rewards the two
+    endpoints' cluster partitions (``vp``), the quantized balance term and
+    a hard capacity cap keep loads even. Partitions at the cap are masked
+    *ineligible*, so when neither endpoint's cluster partition is open the
+    argmax degenerates to least-loaded — the paper's fallback branch, free.
+    Deterministic: no tie noise, first-occurrence argmax.
+    """
+
+    def __init__(
+        self,
+        num_vertices: int,
+        k: int,
+        vp: np.ndarray,
+        deg: np.ndarray,
+        *,
+        lam: float = 1.1,
+        eps: float = 1.0,
+        cap: Optional[int] = None,
+        allowed: Optional[np.ndarray] = None,
+    ):
+        self.k = k
+        self.lam_q = _lam_q(lam)
+        self.eps_q = _eps_q(eps)
+        self.vp = np.asarray(vp, np.int64)
+        self.deg = np.asarray(deg, np.int64)
+        self.sizes = np.zeros(k, dtype=np.int64)
+        self.cap = int(cap) if cap is not None else int(np.iinfo(np.int32).max)
+        self.allowed = (
+            np.ones(k, bool) if allowed is None else np.asarray(allowed, bool)
+        )
+        assert self.allowed.shape == (k,) and self.allowed.any()
+        self.edges_seen = 0
+
+    def assign_chunk(self, edges: np.ndarray) -> np.ndarray:
+        k, lam_q, eps_q = self.k, self.lam_q, self.eps_q
+        vp, deg, sizes, allowed = self.vp, self.deg, self.sizes, self.allowed
+        aidx = np.flatnonzero(allowed)
+        arange = np.arange(k)
+        c = len(edges)
+        assign = np.empty(c, dtype=np.int32)
+        for i in range(c):
+            u, v = int(edges[i, 0]), int(edges[i, 1])
+            du = min(int(deg[u]), _DEG_CLAMP)
+            dv = min(int(deg[v]), _DEG_CLAMP)
+            a = max(du + dv, 1)
+            tq_u = ((2 * a - du) * QB) // a
+            tq_v = ((2 * a - dv) * QB) // a
+            sal = sizes[aidx]
+            mx, mn = int(sal.max()), int(sal.min())
+            gap = np.clip(mx - sizes, 0, _DEG_CLAMP)
+            bal_q = (gap * QB) // (eps_q + min(mx - mn, _DEG_CLAMP))
+            rep_q = (arange == vp[u]) * tq_u + (arange == vp[v]) * tq_v
+            score_q = QB * rep_q.astype(np.int64) + lam_q * bal_q
+            eligible = allowed & (sizes < self.cap)
+            combined = np.where(eligible, score_q, -1)
+            p = int(np.argmax(combined))
+            assign[i] = p
+            sizes[p] += 1
+        self.edges_seen += c
+        return assign
+
+
+@dataclasses.dataclass(frozen=True)
+class TpslCore:
+    """2PS-L phase 2 as a chunk-resumable step-core: one edge per scan step.
+
+    Bit-identical to :class:`TpslState`. Cold start is a contract error —
+    phase 2 only makes sense resumed from the phase-1 WarmState (virtual
+    replicas encode the cluster→partition table; ``warm_carry`` collapses
+    them to the per-vertex ``vp``). The capacity cap
+    ``ceil(cap_slack·m/n_allowed)+1`` guarantees an eligible partition
+    always exists (pigeonhole), so the scan can never strand an edge.
+    """
+
+    num_vertices: int
+    k: int
+    lam: float = 1.1
+    eps: float = 1.0
+    cap_slack: float = 1.15
+
+    name = "2ps-l"
+    window_rows = 0
+    rows_per_step = 1
+    r_sel = 0
+    has_budget = False
+
+    def cap_value(self, m: int, n_allowed: int) -> int:
+        return int(math.ceil(self.cap_slack * m / max(n_allowed, 1))) + 1
+
+    def init_carry(self, budget: float) -> TpslCarry:
+        raise ValueError(
+            "2ps-l phase 2 always resumes from a phase-1 WarmState — "
+            "run the clustering pass and pass warm="
+        )
+
+    def warm_carry(self, budget: float, warm: WarmState) -> TpslCarry:
+        v = self.num_vertices
+        rep = np.asarray(warm.replicas, bool)
+        vp = np.full((v + 1,), -1, np.int32)
+        vp[:v] = np.where(rep.any(axis=1), rep.argmax(axis=1), -1)
+        deg = np.zeros((v + 1,), np.int32)
+        deg[:v] = np.minimum(np.asarray(warm.deg), _DEG_CLAMP)
+        return TpslCarry(
+            vp=jnp.asarray(vp),
+            deg=jnp.asarray(deg),
+            sizes=jnp.asarray(warm.sizes, jnp.int32),
+            cursor=jnp.zeros((), jnp.int32),
+            assigned=jnp.zeros((), jnp.int32),
+        )
+
+    def seed_instances(self, carry, z: int):
+        return carry
+
+    def set_cost(self, carry, cost_per_score: float, z: int):
+        raise ValueError("2ps-l core does not model per-score cost")
+
+    def recalibrate(self, carry, t0: float, z: int):
+        return carry
+
+    def counters(self, carry) -> dict:
+        assigned = np.asarray(carry.assigned)
+        z = assigned.shape[0]
+        return dict(
+            score_rows=assigned.astype(np.int64),
+            final_w=np.ones((z,), np.int64),
+            lam=np.full((z,), self.lam, np.float32),
+            cost_per_score=np.zeros((z,), np.float32),
+        )
+
+    def make_step(self, stream, m_real, allowed, cap, prev_assign):
+        k = self.k
+        v_dummy = self.num_vertices
+        m_pad = stream.shape[0]
+        lam_q = jnp.int32(_lam_q(self.lam))
+        eps_q = jnp.int32(_eps_q(self.eps))
+        arange = jnp.arange(k, dtype=jnp.int32)
+
+        def step(carry: TpslCarry, _):
+            live = carry.cursor < m_real
+            live_i = live.astype(jnp.int32)
+            row = stream[carry.cursor % m_pad]
+            u = jnp.where(live, row[0], v_dummy)
+            v = jnp.where(live, row[1], v_dummy)
+            du = jnp.minimum(carry.deg[u], _DEG_CLAMP)
+            dv = jnp.minimum(carry.deg[v], _DEG_CLAMP)
+            a = jnp.maximum(du + dv, 1)
+            tq_u = ((2 * a - du) * QB) // a
+            tq_v = ((2 * a - dv) * QB) // a
+            sizes = carry.sizes
+            sal = jnp.where(allowed, sizes, jnp.int32(np.iinfo(np.int32).max))
+            mx = jnp.max(
+                jnp.where(allowed, sizes, jnp.int32(np.iinfo(np.int32).min))
+            )
+            mn = jnp.min(sal)
+            gap = jnp.clip(mx - sizes, 0, _DEG_CLAMP)
+            bal_q = (gap * QB) // (eps_q + jnp.minimum(mx - mn, _DEG_CLAMP))
+            rep_q = (
+                (arange == carry.vp[u]) * tq_u + (arange == carry.vp[v]) * tq_v
+            ).astype(jnp.int32)
+            score_q = QB * rep_q + lam_q * bal_q
+            eligible = allowed & (sizes < cap)
+            combined = jnp.where(eligible, score_q, -1)
+            p = jnp.argmax(combined).astype(jnp.int32)
+            new_carry = TpslCarry(
+                vp=carry.vp,
+                deg=carry.deg,
+                sizes=sizes.at[p].add(live_i),
+                cursor=carry.cursor + live_i,
+                assigned=carry.assigned + live_i,
+            )
+            return new_carry, _single_edge_out(live, carry.cursor, p)
+
+        return step
+
+
+def two_phase_linear_partition(
+    edges: np.ndarray,
+    num_vertices: int,
+    k: int,
+    *,
+    cluster_slack: float = 1.25,
+    lam: float = 1.1,
+    eps: float = 1.0,
+    cap_slack: float = 1.15,
+    seed: int = 0,
+    allowed: Optional[np.ndarray] = None,
+    scan: bool = True,
+    backend: str = "vmap",
+    n_chunks: int = 8,
+) -> PartitionResult:
+    """2PS-L: streaming clustering, then the linear-time scoring pass.
+
+    ``scan=True`` (default) runs phase 2 as the :class:`TpslCore` lax.scan
+    through the shared ScanDriver; ``scan=False`` runs the
+    :class:`TpslState` numpy oracle — bit-identical by construction (the
+    benchmarks report both walls). ``seed`` is accepted for registry
+    uniformity; 2PS-L is deterministic (no tie noise).
+    """
+    m = len(edges)
+    if m == 0:
+        return PartitionResult(
+            np.zeros((0,), np.int32),
+            dict(k=k, name="2ps-l", n_clusters=0, stream_reads=2,
+                 wall_time_s=0.0, unassigned=0),
+        )
+    t0 = time.perf_counter()
+    warm, n_clusters = _phase1_warm(
+        edges, num_vertices, k, allowed, cluster_slack
+    )
+    t_phase1 = time.perf_counter() - t0
+    core = TpslCore(
+        num_vertices=int(num_vertices), k=int(k), lam=float(lam),
+        eps=float(eps), cap_slack=float(cap_slack),
+    )
+    if scan:
+        res = _scan_partition(
+            core, edges, allowed=allowed, warm=warm, backend=backend,
+            n_chunks=n_chunks,
+        )
+        assign, stats = res.assign, dict(res.stats)
+    else:
+        n_allowed = (
+            k if allowed is None else max(int(np.asarray(allowed, bool).sum()), 1)
+        )
+        rep = warm.replicas
+        vp = np.where(rep.any(axis=1), rep.argmax(axis=1), -1)
+        state = TpslState(
+            num_vertices, k, vp, warm.deg, lam=lam, eps=eps,
+            cap=core.cap_value(m, n_allowed), allowed=allowed,
+        )
+        assign = state.assign_chunk(np.asarray(edges))
+        stats = dict(score_rows=m, score_count=m * k)
+    stats.update(
+        k=k,
+        name="2ps-l",
+        n_clusters=n_clusters,
+        cluster_slack=cluster_slack,
+        phase1_wall_s=t_phase1,
+        # Clustering pass + scoring pass, same IO billing as 2ps.
+        stream_reads=2,
+        wall_time_s=time.perf_counter() - t0,
+        unassigned=int((np.asarray(assign) < 0).sum()),
+    )
+    return PartitionResult(np.asarray(assign, np.int32), stats)
+
+
+def two_phase_partition_batched(
+    streams: np.ndarray,
+    valid: np.ndarray,
+    num_vertices: int,
+    k: int,
+    *,
+    variant: str = "2ps",
+    allowed: Optional[np.ndarray] = None,
+    cluster_slack: float = 1.25,
+    seed: int = 0,
+    n_chunks: int = 8,
+    backend: str = "auto",
+    lam: float = 1.1,
+    eps: float = 1.0,
+    cap_slack: float = 1.15,
+    **adwise_cfg,
+) -> List[PartitionResult]:
+    """2PS / 2PS-L over ``z`` batched spotlight instances.
+
+    Phase 1 runs per instance on the host (each instance clusters its own
+    sub-stream against its own ``allowed`` partition budget); phase 2 runs
+    ALL z instances as one batched scan — the ADWISE scan for
+    ``variant='2ps'`` (``adwise_cfg`` keys apply, window_max defaults to
+    32) or the :class:`TpslCore` step-core for ``variant='2ps-l'`` (which
+    takes ``lam``/``eps``/``cap_slack`` instead). Bit-identical per
+    instance to the sequential :func:`two_phase_partition` /
+    :func:`two_phase_linear_partition` calls.
+    """
+    if variant not in ("2ps", "2ps-l"):
+        raise ValueError(f"unknown two-phase variant {variant!r}")
+    z = int(streams.shape[0])
+    valid = np.asarray(valid, bool)
+    m_per = valid.sum(axis=1).astype(np.int64)
+    t0 = time.perf_counter()
+    warms, n_clusters = [], []
+    for i in range(z):
+        a_i = None if allowed is None else np.asarray(allowed[i], bool)
+        w, nc = _phase1_warm(
+            streams[i, : m_per[i]], num_vertices, k, a_i, cluster_slack
+        )
+        warms.append(w)
+        n_clusters.append(nc)
+    t_phase1 = time.perf_counter() - t0
+    if variant == "2ps":
+        adwise_cfg.setdefault("window_max", 32)
+        adwise_cfg.setdefault(
+            "window_init", max(1, min(8, adwise_cfg["window_max"]))
+        )
+        cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
+        results = partition_stream_batched(
+            streams, valid, num_vertices, cfg, allowed=allowed, warm=warms,
+            backend=backend, n_chunks=n_chunks,
+        )
+    else:
+        if adwise_cfg:
+            raise TypeError(
+                f"2ps-l: unknown config keys {sorted(adwise_cfg)}"
+            )
+        core = TpslCore(
+            num_vertices=int(num_vertices), k=int(k), lam=float(lam),
+            eps=float(eps), cap_slack=float(cap_slack),
+        )
+        results = partition_stream_batched(
+            streams, valid, num_vertices, None, core=core, allowed=allowed,
+            warm=warms, backend=backend, n_chunks=n_chunks,
+        )
+    wall = time.perf_counter() - t0
+    out = []
+    for i, res in enumerate(results):
+        stats = dict(
+            res.stats,
+            name=variant,
+            n_clusters=n_clusters[i],
+            cluster_slack=cluster_slack,
+            phase1_wall_s=t_phase1,
+            stream_reads=2,
+            # Phase 2 ran as one batched program; the shared wall covers
+            # every instance (parallel loading model).
+            wall_time_s=wall,
+            unassigned=metrics.unassigned_count(res.assign),
+        )
+        out.append(PartitionResult(res.assign, stats))
+    return out
 
 
 # ----------------------------------------------------------------------------
@@ -625,27 +1039,46 @@ def _check_cfg(name: str, cfg: dict, extra: frozenset) -> None:
 @registry.register("adwise-restream")
 def _adwise_restream(
     edges, num_vertices, k, seed=0, *, passes=2, base="adwise",
-    keep_best=True, eps=None, **cfg,
+    keep_best=True, eps=None, allowed=None, **cfg,
 ) -> PartitionResult:
     """n-pass restreamed ADWISE. cfg keys = AdwiseConfig fields plus
     ``passes=`` / ``base=`` / ``keep_best=`` / ``eps=`` (early-stop on RD
-    improvement; stats report ``passes_run``) / ``n_chunks=``
-    (see restream_partition)."""
+    improvement; stats report ``passes_run``) / ``allowed=`` (spotlight
+    partition mask) / ``n_chunks=`` (see restream_partition)."""
     _check_cfg("adwise-restream", cfg, frozenset({"n_chunks"}))
     return restream_partition(
         edges, num_vertices, k, passes=passes, base=base,
-        keep_best=keep_best, eps=eps, seed=seed, **cfg,
+        keep_best=keep_best, eps=eps, seed=seed, allowed=allowed, **cfg,
     )
 
 
 @registry.register("2ps")
 def _two_ps(
-    edges, num_vertices, k, seed=0, *, cluster_slack=1.25, **cfg
+    edges, num_vertices, k, seed=0, *, cluster_slack=1.25, allowed=None, **cfg
 ) -> PartitionResult:
     """2PS two-phase partitioner. cfg keys = AdwiseConfig fields (phase 2;
-    window_max defaults to 32) plus ``cluster_slack=`` (phase-1 volume cap)
-    and ``n_chunks=``."""
+    window_max defaults to 32) plus ``cluster_slack=`` (phase-1 volume cap),
+    ``allowed=`` (spotlight partition mask), and ``n_chunks=``."""
     _check_cfg("2ps", cfg, frozenset({"n_chunks"}))
     return two_phase_partition(
-        edges, num_vertices, k, cluster_slack=cluster_slack, seed=seed, **cfg
+        edges, num_vertices, k, cluster_slack=cluster_slack, seed=seed,
+        allowed=allowed, **cfg,
+    )
+
+
+@registry.register("2ps-l")
+def _two_ps_l(
+    edges, num_vertices, k, seed=0, *, cluster_slack=1.25, lam=1.1, eps=1.0,
+    cap_slack=1.15, allowed=None, scan=True, backend="vmap", n_chunks=8,
+) -> PartitionResult:
+    """2PS-L linear-run-time two-phase partitioner (arXiv:2203.12721).
+    Shares phase 1 with 2ps; phase 2 is the single-score cluster-affinity
+    pass (no window, no tie noise). cfg keys: ``cluster_slack=`` (phase-1
+    volume cap), ``lam=``/``eps=`` (balance weighting), ``cap_slack=``
+    (hard capacity), ``allowed=`` (spotlight partition mask), ``scan=``
+    (False runs the numpy parity oracle), ``backend=``, ``n_chunks=``."""
+    return two_phase_linear_partition(
+        edges, num_vertices, k, cluster_slack=cluster_slack, lam=lam,
+        eps=eps, cap_slack=cap_slack, seed=seed, allowed=allowed,
+        scan=scan, backend=backend, n_chunks=n_chunks,
     )

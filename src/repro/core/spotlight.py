@@ -29,14 +29,25 @@ paths), whose host→device accounting surfaces here as ``h2d_rows`` /
 
 Backends:
 
-* ``"batched"`` (default for 'adwise' / 'adwise-restream'): one vmapped /
-  shard_mapped program; ``wall_time_s`` is the measured wall of that program,
-  which IS the parallel-model wall. ``"vmap"`` / ``"shard_map"`` force the
-  inner execution mode.
-* ``"loop"``: the sequential per-instance escape hatch — one scan per
-  instance in a Python loop. Required for the masked baseline strategies
-  (hdrf/dbh/greedy/hash run on the local partition subset and are remapped);
+* ``"batched"`` (the ``"auto"`` default for every registry strategy): one
+  program for all z instances. The adwise-scan family (adwise,
+  adwise-restream, 2ps, 2ps-l) and the step-core baselines (hdrf, greedy)
+  vmap/shard_map their scan over the instance axis; the stateless hashes
+  (hash, dbh) run their vectorized assignment per instance. ``wall_time_s``
+  is the measured wall of the batched program, which IS the parallel-model
+  wall. ``"vmap"`` / ``"shard_map"`` force the inner execution mode.
+* ``"loop"``: the sequential per-instance escape hatch — one
+  ``registry.run_partitioner`` call per instance at GLOBAL k with the
+  instance's ``allowed`` spread mask; required only for custom
+  ``partitioner=`` callables and non-adwise restream base passes.
   ``wall_time_s`` then reports the parallel model ``max(instance walls)``.
+  Bit-identical to the batched backend for every registry strategy.
+
+Per-instance seeds: the stateless hashes and HDRF's counter-based tie noise
+derive instance ``i``'s stream from ``seed + i`` (loop and batched agree:
+``HdrfCore.seed_instances`` plants the same ``seed + i`` per vmap lane).
+The adwise-scan strategies share one trace-static ``seed`` across
+instances.
 """
 from __future__ import annotations
 
@@ -46,9 +57,12 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core import registry
+from repro.core import baselines, registry
 from repro.core.adwise import partition_stream, partition_stream_batched
-from repro.core.restream import restream_partition_batched
+from repro.core.restream import (
+    restream_partition_batched,
+    two_phase_partition_batched,
+)
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.graph.stream import EdgeStream
 
@@ -65,48 +79,40 @@ def spread_mask(k: int, z: int, instance: int, spread: int) -> np.ndarray:
     return mask
 
 
-# Strategies whose placement structure breaks under the small local k the
-# spread mask induces: grid's floor(sqrt(k)) collapses to 1 for k < 4, making
-# every instance dump its whole chunk on one partition.
+# Strategies whose placement structure breaks under spread masking: grid's
+# vertex-pair cells impose their own replica constraint and cannot honor an
+# allowed subset.
 _SPOTLIGHT_INCOMPATIBLE = {"grid"}
 
-# Strategies the batched (vmapped/shard_mapped) backend supports natively.
-_BATCHED_STRATEGIES = {"adwise", "adwise-restream"}
+# Strategies whose per-instance state is an independent seed (the stateless
+# hashes and HDRF's counter-based tie noise): instance i runs with seed + i
+# on both backends. The adwise-scan strategies share one trace-static seed.
+_PER_INSTANCE_SEED = {"hash", "dbh", "hdrf", "greedy"}
 
 # spotlight backend -> inner partition_stream_batched backend.
 _BATCHED_INNER = {"batched": "auto", "vmap": "vmap", "shard_map": "shard_map"}
 
 
-def _masked_strategy(strategy, edges, num_vertices, allowed, seed, strategy_cfg=None):
-    """Run a registry strategy on the allowed partition subset only.
-
-    The strategy partitions into ``|allowed|`` local parts; local ids are then
-    mapped back to the global ids the mask selects. Works for any registered
-    strategy whose placement depends only on k (all the baselines)."""
+def _reject_incompatible(strategy: str) -> None:
     if strategy in _SPOTLIGHT_INCOMPATIBLE:
         raise ValueError(
             f"strategy {strategy!r} does not compose with spotlight spread "
-            "masking (its placement structure degenerates at small local k); "
-            "use hash/dbh/hdrf/greedy or adwise"
+            "masking (its placement structure ignores the allowed subset); "
+            "use hash/dbh/hdrf/greedy or the adwise family"
         )
-    res = registry.run_partitioner(
-        strategy, edges, num_vertices, int(allowed.sum()), seed=seed,
-        **(strategy_cfg or {}),
-    )
-    local_to_global = np.flatnonzero(allowed).astype(np.int32)
-    return PartitionResult(local_to_global[res.assign], res.stats)
 
 
 def _spotlight_batched(
     edges, num_vertices, k, z, spread, strategy, cfg, seed, strategy_cfg,
     inner_backend,
 ):
-    """One batched program for all z instances (adwise / adwise-restream)."""
+    """One batched program for all z instances (any registry strategy)."""
     stream = EdgeStream(edges, num_vertices)
     streams, valid = stream.split_padded(z)
     per = streams.shape[1]
     m = stream.num_edges
     allowed = np.stack([spread_mask(k, z, i, spread) for i in range(z)])
+    scfg = dict(strategy_cfg or {})
     t0 = time.perf_counter()
     if strategy == "adwise":
         c = cfg or AdwiseConfig(k=k)
@@ -116,26 +122,68 @@ def _spotlight_batched(
             streams, valid, num_vertices, c,
             allowed=allowed, backend=inner_backend,
         )
-    else:  # adwise-restream: per-instance WarmState batches between passes
+    elif strategy == "adwise-restream":
+        # Per-instance WarmState batches between passes.
         results = restream_partition_batched(
             streams, valid, num_vertices, k,
-            allowed=allowed, seed=seed, backend=inner_backend,
-            **(strategy_cfg or {}),
+            allowed=allowed, seed=seed, backend=inner_backend, **scfg,
         )
+    elif strategy in ("2ps", "2ps-l"):
+        results = two_phase_partition_batched(
+            streams, valid, num_vertices, k, variant=strategy,
+            allowed=allowed, seed=seed, backend=inner_backend, **scfg,
+        )
+    elif strategy in ("hdrf", "greedy"):
+        if strategy == "hdrf":
+            unknown = set(scfg) - {"lam", "eps"}
+            if unknown:
+                raise TypeError(f"hdrf: unknown config keys {sorted(unknown)}")
+            core = baselines.HdrfCore(
+                num_vertices=int(num_vertices), k=int(k),
+                lam=float(scfg.get("lam", 1.1)), eps=float(scfg.get("eps", 1.0)),
+                seed=int(seed),
+            )
+        else:
+            if scfg:
+                raise TypeError(f"greedy: unknown config keys {sorted(scfg)}")
+            core = baselines.GreedyCore(num_vertices=int(num_vertices), k=int(k))
+        results = partition_stream_batched(
+            streams, valid, num_vertices, None, core=core,
+            allowed=allowed, backend=inner_backend,
+        )
+    else:
+        # Stateless hashes (hash/dbh) — or an unknown name, which
+        # run_partitioner rejects. One vectorized assignment per instance;
+        # seed + i is each instance's independent hash stream.
+        m_per = valid.sum(axis=1)
+        results = [
+            registry.run_partitioner(
+                strategy, streams[i, : m_per[i]], num_vertices, k,
+                seed=seed + i, allowed=allowed[i], **scfg,
+            )
+            for i in range(z)
+        ]
     serial_wall = time.perf_counter() - t0
     assign = np.full((m,), -1, np.int32)
     for i, r in enumerate(results):
         assign[i * per : i * per + len(r.assign)] = r.assign
     s0 = results[0].stats if results else {}
+    if strategy in ("hash", "dbh"):
+        # Instances ran as independent vectorized assigns — the parallel
+        # model bills the slowest one.
+        wall = max((r.stats.get("wall_time_s", 0.0) for r in results),
+                   default=0.0)
+    else:
+        # One program ran every instance: its wall IS the parallel wall.
+        wall = s0.get("wall_time_s", serial_wall)
     stats = dict(
         k=k,
         z=z,
         spread=spread,
         name=f"spotlight-{strategy}",
-        backend=s0.get("backend", "vmap"),
+        backend=s0.get("backend", "batched"),
         n_shards=s0.get("n_shards", 0),
-        # One program ran every instance: its wall IS the parallel wall.
-        wall_time_s=s0.get("wall_time_s", serial_wall),
+        wall_time_s=wall,
         wall_time_serial_s=serial_wall,
         score_count=sum(r.stats.get("score_count", 0) for r in results),
         stream_reads=s0.get("stream_reads", 1),
@@ -164,27 +212,27 @@ def spotlight_partition(
     """Run ``z`` parallel partitioner instances with a limited spread.
 
     Args:
-      strategy: any name in ``registry.available_strategies()`` ('adwise' and
-        'adwise-restream' get the native batched allowed-mask path; baselines
-        run on the local subset under the loop backend and are remapped), or
-        pass ``partitioner``:
+      strategy: any name in ``registry.available_strategies()`` except
+        'grid' — every registry strategy runs at GLOBAL k restricted by its
+        instance's ``allowed`` spread mask, on either backend. Or pass
+        ``partitioner``:
         callable (edges, num_vertices, k, allowed, seed) -> PartitionResult
-        with *global* partition ids.
+        with *global* partition ids (loop backend only).
       cfg: AdwiseConfig for strategy='adwise' (k is overridden).
       strategy_cfg: keyword cfg forwarded to every non-'adwise' strategy
         instance (e.g. ``dict(passes=3, window_max=64)`` for
-        'adwise-restream'). Under the loop backend the instance-local k is
-        the spread size; under the batched backend instances run at global k
-        restricted by their spread mask.
+        'adwise-restream', ``dict(lam=1.5)`` for 'hdrf').
       spread: partitions per instance; k/z = disjoint spotlight blocks.
-      backend: 'auto' (batched for adwise/adwise-restream, loop otherwise),
-        'batched' / 'vmap' / 'shard_map' (one program for all instances —
-        see the module docstring), or 'loop' (sequential per-instance
-        fallback; wall_time_s reports the parallel model max(instance
-        walls), matching the paper's cluster where instances run on
-        separate machines).
+      backend: 'auto' (batched for every registry strategy, loop for custom
+        partitioners), 'batched' / 'vmap' / 'shard_map' (one program for
+        all instances — see the module docstring), or 'loop' (sequential
+        per-instance fallback, bit-identical; wall_time_s reports the
+        parallel model max(instance walls), matching the paper's cluster
+        where instances run on separate machines).
     """
-    batchable = partitioner is None and strategy in _BATCHED_STRATEGIES
+    if partitioner is None:
+        _reject_incompatible(strategy)
+    batchable = partitioner is None
     if strategy == "adwise-restream" and (strategy_cfg or {}).get(
         "base", "adwise"
     ) != "adwise":
@@ -196,9 +244,8 @@ def spotlight_partition(
     if backend in _BATCHED_INNER:
         if not batchable:
             raise ValueError(
-                f"backend {backend!r} requires strategy in "
-                f"{sorted(_BATCHED_STRATEGIES)} with an adwise base pass "
-                f"(got {strategy!r}"
+                f"backend {backend!r} needs a registry strategy with an "
+                f"adwise base pass (got {strategy!r}"
                 f"{' with custom partitioner' if partitioner else ''}); "
                 "use backend='loop'"
             )
@@ -231,8 +278,11 @@ def spotlight_partition(
             # instances run in parallel on the cluster, so each gets L.
             res = partition_stream(sub.edges, num_vertices, c, allowed=allowed)
         else:
-            res = _masked_strategy(strategy, sub.edges, num_vertices, allowed,
-                                   seed + i, strategy_cfg)
+            res = registry.run_partitioner(
+                strategy, sub.edges, num_vertices, k,
+                seed=seed + i if strategy in _PER_INSTANCE_SEED else seed,
+                allowed=allowed, **(strategy_cfg or {}),
+            )
         assign[offsets[i] : offsets[i + 1]] = res.assign
         walls.append(res.stats.get("wall_time_s", 0.0))
         score_counts += res.stats.get("score_count", 0)

@@ -1,13 +1,54 @@
-"""Shared dataclasses for partitioner configuration and results."""
+"""Shared dataclasses for partitioner configuration and results.
+
+This module also owns the two *strategy-agnostic* state types of the
+streaming-scan layer (`repro.core.driver`):
+
+* :class:`WarmState` — the cross-pass warm-start bundle every step-core can
+  resume from (replica table, degree table, partition loads, optional prior
+  placements). Re-streaming, 2PS(-L) phase handoff, and spotlight × restream
+  all speak WarmState; strategy-specific cores translate it into their own
+  carry in ``warm_carry``.
+* the **carry contract** (documented here, enforced by the driver): a
+  step-core's carry is any pytree of arrays whose leaves all gain a leading
+  ``(z,)`` instance axis under the driver, and which exposes two int32
+  scalar leaves by attribute name —
+
+    ``carry.cursor``    next stream row this instance will read (the ring
+                        refill bound: the driver uploads rows ahead of it),
+    ``carry.assigned``  edges placed so far (the driver's termination and
+                        drain conditions).
+
+  Everything else in the carry is the strategy's own business (vertex
+  caches, window buffers, λ, counter-based tie seeds, ...).
+"""
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional
+from typing import Any, Dict, NamedTuple, Optional
 
 import numpy as np
 
-__all__ = ["AdwiseConfig", "PartitionResult"]
+__all__ = ["AdwiseConfig", "PartitionResult", "WarmState"]
+
+
+class WarmState(NamedTuple):
+    """State carried between passes / phases of any step-core strategy.
+
+    ``replicas``/``deg``/``sizes`` warm-start the vertex cache of the next
+    pass; ``prev_assign`` (when given) enables buffered-re-streaming
+    revocation: an edge's previous assignment is subtracted from the
+    partition sizes at the moment the edge re-enters the window, so the
+    balance terms always see the *net* partition loads while the pass
+    re-places the stream. 2PS(-L) reuse ``replicas`` as the cluster→partition
+    table: phase 1 leaves each clustered vertex with exactly one virtual
+    replica on its cluster's partition.
+    """
+
+    replicas: np.ndarray  # (V, K) bool
+    deg: np.ndarray  # (V,) int — full (or partial) streamed degrees
+    sizes: np.ndarray  # (K,) int — partition loads at warm-start time
+    prev_assign: Optional[np.ndarray] = None  # (m,) int32, -1 = none
 
 
 @dataclasses.dataclass(frozen=True)

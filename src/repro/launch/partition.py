@@ -12,16 +12,20 @@
         --ingest --relabel --strategy hdrf --k 32
 
 Runs: stream partitioning (any strategy in the `repro.core.registry` —
-adwise / adwise-restream / 2ps / hdrf / dbh / greedy / hash / grid —
+adwise / adwise-restream / 2ps / 2ps-l / hdrf / dbh / greedy / hash / grid —
 optionally under spotlight parallel loading) → vertex-cut engine build →
 workload → total latency report (measured partitioning wall-clock + modeled
 cluster processing latency, cf. DESIGN.md §3). New partitioners registered
 in `repro/core/registry.py` show up in `--strategy` automatically;
 `--passes` / `--eps` set the re-streaming pass count / early-stop for
-adwise-restream. With `--z N` (alias `--parallel`) the z spotlight instances
-run as ONE batched (vmapped / multi-device shard_mapped) program for
-adwise-family strategies — `--backend loop` forces the sequential
-per-instance path (the only mode for the masked baselines).
+adwise-restream. `2ps-l` is the linear-run-time 2PS variant (2PS phase-1
+clustering, then a single windowless cluster-score pass as its own
+step-core); it takes no AdwiseConfig knobs — its `cluster_slack=` / `lam=` /
+`cap_slack=` defaults are the registry's. With `--z N` (alias `--parallel`)
+the z spotlight instances run as ONE batched (vmapped / multi-device
+shard_mapped) program for EVERY registry strategy — each strategy is a
+device-resident step-core behind one scan driver — and `--backend loop`
+forces the sequential per-instance path (bit-identical escape hatch).
 
 `--graph` also takes a *path* instead of a preset name: a binary edge-stream
 file (`repro.graph.io` format) is partitioned out-of-core through
@@ -101,7 +105,8 @@ def run_partition_file(path, args):
         )
     if args.backend in ("batched", "loop"):
         print(f"note: --backend {args.backend} has no file-driven equivalent; "
-              "using 'auto' (baselines always run the chunked masked loop)")
+              "using 'auto' (every scan-core strategy rides the batched ring "
+              "buffer; only the stateless hashes run a per-instance loop)")
     ingest_tmp = None
     if args.ingest:
         # The cache name keys on --relabel: the two settings produce
@@ -213,8 +218,8 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "batched", "vmap", "shard_map", "loop"],
                     help="spotlight execution: one batched program for all z "
-                         "instances (auto for adwise/adwise-restream) or the "
-                         "sequential per-instance loop")
+                         "instances (auto — every registry strategy batches) "
+                         "or the sequential per-instance loop")
     ap.add_argument("--budget", type=float, default=None, help="latency preference L (s)")
     ap.add_argument("--window-max", type=int, default=256)
     ap.add_argument("--passes", type=int, default=2,

@@ -18,7 +18,8 @@ from repro.kernels import ops
 
 from conftest import random_edges
 
-ALL_STRATEGIES = ["2ps", "adwise", "adwise-restream", "dbh", "greedy", "grid", "hash", "hdrf"]
+ALL_STRATEGIES = ["2ps", "2ps-l", "adwise", "adwise-restream", "dbh",
+                  "greedy", "grid", "hash", "hdrf"]
 
 
 # ----------------------------------------------------------------------------

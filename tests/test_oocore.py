@@ -58,6 +58,8 @@ _Z1_CASES = [
     ("greedy", {}),
     ("adwise", dict(window_max=WMAX)),
     ("2ps", dict(window_max=WMAX)),
+    ("2ps-l", {}),
+    ("2ps-l", dict(lam=1.5, cap_slack=1.3)),
     ("adwise-restream", dict(window_max=WMAX, passes=2)),
 ]
 
@@ -112,6 +114,25 @@ def test_partition_file_chunk_size_invariance(rmat_file, tmp_path):
     assert (outs[0] == outs[1]).all()
 
 
+def test_hdrf_tie_noise_invariant_under_chunk_geometry(rmat_file, tmp_path):
+    """HDRF's tie noise is a counter-based draw keyed on the GLOBAL stream
+    row id (edge index), not on chunk-local position or any carried RNG
+    state — so permuting the chunk geometry (which reshuffles how rows land
+    in scan calls and ring refills) must reproduce identical assignments,
+    all equal to the in-memory scan and the numpy oracle."""
+    path, edges, n = rmat_file
+    ref = run_partitioner("hdrf", edges, n, K, seed=3)
+    outs = []
+    for chunk in (64, 211, 400, 997, len(edges) + 7):
+        with EdgeFileReader(path) as r:
+            res = partition_file(r, "hdrf", K, seed=3, chunk_edges=chunk,
+                                 spill_dir=str(tmp_path / f"h{chunk}"))
+        outs.append(np.asarray(res.assign).copy())
+        assert (outs[-1] == ref.assign).all(), chunk
+    for a in outs[1:]:
+        assert (a == outs[0]).all()
+
+
 # ----------------------------------------------------------------------------
 # z > 1 spotlight parity (the acceptance configuration)
 # ----------------------------------------------------------------------------
@@ -122,6 +143,7 @@ _SPOT_CASES = [
     ("hdrf", {}, None),
     ("greedy", {}, None),
     ("2ps", dict(window_max=WMAX), dict(window_max=WMAX)),
+    ("2ps-l", {}, None),
     ("adwise", dict(window_max=WMAX), None),
     ("adwise-restream", dict(window_max=WMAX, passes=2),
      dict(window_max=WMAX, passes=2)),

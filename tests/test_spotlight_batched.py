@@ -225,10 +225,18 @@ def test_restream_batched_eps_early_stop(tiny_graph):
 # Backend validation
 # ----------------------------------------------------------------------------
 
-def test_batched_backend_rejects_masked_baselines(tiny_graph):
+def test_batched_backend_rejects_custom_partitioner(tiny_graph):
+    """Every *registry* strategy batches now; only a custom partitioner
+    callable still needs the loop escape hatch."""
     edges, n = tiny_graph
+
+    def custom(sub_edges, nv, k, seed=0, allowed=None):
+        from repro.core.registry import run_partitioner
+        return run_partitioner("hash", sub_edges, nv, k, seed=seed,
+                               allowed=allowed)
+
     with pytest.raises(ValueError, match="loop"):
-        spotlight_partition(edges, n, 8, z=2, spread=4, strategy="hdrf",
+        spotlight_partition(edges, n, 8, z=2, spread=4, partitioner=custom,
                             backend="batched")
 
 
@@ -238,11 +246,16 @@ def test_unknown_backend_rejected(tiny_graph):
         spotlight_partition(edges, n, 8, z=2, spread=4, backend="tpu")
 
 
-def test_baselines_auto_select_loop(tiny_graph):
+def test_baselines_auto_select_batched(tiny_graph):
+    """auto resolves to the batched backend for every registry strategy —
+    the baselines included — and matches the loop backend bit-for-bit."""
     edges, n = tiny_graph
     res = spotlight_partition(edges, n, 16, z=4, spread=4, strategy="dbh")
-    assert res.stats["backend"] == "loop"
+    assert res.stats["backend"] != "loop"
     assert (res.assign >= 0).all()
+    loop = spotlight_partition(edges, n, 16, z=4, spread=4, strategy="dbh",
+                               backend="loop")
+    assert (res.assign == loop.assign).all()
 
 
 # ----------------------------------------------------------------------------

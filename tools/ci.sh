@@ -24,9 +24,16 @@ fi
 
 # The smoke pass also writes a machine-readable BENCH_<n>.json into
 # bench_logs/ (kept / uploaded as a CI artifact), so the perf trajectory —
-# partition walls, h2d stream traffic, ingest MB/s, supersteps/s — is
-# tracked run over run instead of scrolling away in logs.
+# partition walls, h2d stream traffic, ingest MB/s, scan-core speedups,
+# supersteps/s — is tracked run over run instead of scrolling away in logs.
+BENCH_COUNT_BEFORE=$(ls bench_logs/BENCH_*.json 2>/dev/null | wc -l)
 python -m benchmarks.run --smoke --json-dir bench_logs
+BENCH_COUNT_AFTER=$(ls bench_logs/BENCH_*.json 2>/dev/null | wc -l)
+if [[ "$BENCH_COUNT_AFTER" -le "$BENCH_COUNT_BEFORE" ]]; then
+  echo "FATAL: benchmarks.run --json-dir bench_logs produced no new" \
+       "BENCH_<n>.json (before=$BENCH_COUNT_BEFORE after=$BENCH_COUNT_AFTER)" >&2
+  exit 1
+fi
 
 # Multi-device path: batched spotlight (shard_map over instances) + padded
 # engine mesh on 2 fake CPU devices, every run.
@@ -38,6 +45,36 @@ XLA_FLAGS="--xla_force_host_platform_device_count=2" \
 # the in-memory path, h2d_rows == m (each stream row ships to the device
 # once), and per-scan-call h2d below a full ring re-upload.
 python -m benchmarks.bench_io --smoke
+
+# Step-core spotlight smoke on 2 fake CPU devices: hdrf z=4 through the
+# file-driven ring buffer (one batched program over the instances), asserted
+# bit-identical to the in-memory spotlight — mirrors the bench_scaling
+# spotlight smoke for the baseline step-cores.
+XLA_FLAGS="--xla_force_host_platform_device_count=2" python - <<'PY'
+import os, tempfile
+import numpy as np
+import jax
+assert jax.device_count() >= 2, jax.devices()
+from repro.core import partition_file
+from repro.core.spotlight import spotlight_partition
+from repro.graph import rmat
+from repro.graph.io import EdgeFileReader, write_edge_file
+
+edges, n = rmat(10, 4000, seed=0)
+with tempfile.TemporaryDirectory() as td:
+    path = os.path.join(td, "g.adw")
+    write_edge_file(path, edges, n)
+    with EdgeFileReader(path) as r:
+        res = partition_file(r, "hdrf", 8, z=4, spread=2, seed=0,
+                             chunk_edges=1024, spill_dir=td)
+    ref = spotlight_partition(edges, n, 8, z=4, spread=2, seed=0,
+                              strategy="hdrf")
+    assert (np.asarray(res.assign) == ref.assign).all(), (
+        "2-device file-driven hdrf spotlight diverged from in-memory")
+    print("2-device hdrf z=4 partition_file smoke OK "
+          f"({res.stats['name']}, backend={res.stats.get('backend')}, "
+          f"devices={jax.device_count()})")
+PY
 
 echo "bench summaries kept:"
 ls -l bench_logs/ 2>/dev/null || true
