@@ -149,12 +149,20 @@ def main(argv=None):
 
     if args.json_dir:
         path = _next_bench_path(args.json_dir)
+        # Retrace budget over the whole bench pass: how many distinct
+        # programs the driver kernels compiled. A jump here without a
+        # geometry change is a recompilation regression (the pow2-Rq
+        # contract tests/test_compile_budget.py enforces per-run).
+        from repro.core.driver import scan_compile_counts
+
+        compiles = scan_compile_counts()
         doc = dict(
             mode="full" if args.full else ("smoke" if args.smoke else "default"),
             wall_s=round(time.time() - t0, 2),
             platform=platform.platform(),
             python=platform.python_version(),
-            summary=_summarize(results),
+            summary=dict(_summarize(results), jit_scan_compiles=compiles),
+            jit_scan_compiles=compiles,
             io=results.get("io"),
             scaling=results.get("scaling"),
             total_latency=results.get("total_latency"),

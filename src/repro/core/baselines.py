@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.driver import StepCore
 from repro.core.types import PartitionResult, WarmState
 
 __all__ = [
@@ -416,7 +417,7 @@ def _single_edge_out(live, cursor, p):
 
 
 @dataclasses.dataclass(frozen=True)
-class HdrfCore:
+class HdrfCore(StepCore):
     """HDRF as a chunk-resumable step-core: one edge per scan step.
 
     Bit-identical to :class:`HdrfState` — integer-quantized scoring, tie
@@ -436,9 +437,6 @@ class HdrfCore:
     rows_per_step = 1
     r_sel = 0
     has_budget = False
-
-    def cap_value(self, m: int, n_allowed: int) -> int:
-        return int(np.iinfo(np.int32).max)
 
     def init_carry(self, budget: float) -> HdrfCarry:
         v1 = self.num_vertices + 1
@@ -465,12 +463,6 @@ class HdrfCore:
             (int(self.seed) + np.arange(z)) & 0xFFFFFFFF, jnp.uint32
         )
         return carry._replace(seed=seeds)
-
-    def set_cost(self, carry, cost_per_score: float, z: int):
-        raise ValueError("hdrf core does not model per-score cost")
-
-    def recalibrate(self, carry, t0: float, z: int):
-        return carry
 
     def counters(self, carry) -> dict:
         assigned = np.asarray(carry.assigned)
@@ -530,7 +522,7 @@ class HdrfCore:
 
 
 @dataclasses.dataclass(frozen=True)
-class GreedyCore:
+class GreedyCore(StepCore):
     """PowerGraph Greedy as a step-core: one edge per scan step.
 
     All-integer (argmin over masked loads, first-occurrence ties) — exactly
@@ -545,9 +537,6 @@ class GreedyCore:
     rows_per_step = 1
     r_sel = 0
     has_budget = False
-
-    def cap_value(self, m: int, n_allowed: int) -> int:
-        return int(np.iinfo(np.int32).max)
 
     def init_carry(self, budget: float) -> GreedyCarry:
         v1 = self.num_vertices + 1
@@ -564,25 +553,6 @@ class GreedyCore:
         return base._replace(
             replicas=base.replicas.at[:v].set(jnp.asarray(warm.replicas, bool)),
             sizes=jnp.asarray(warm.sizes, jnp.int32),
-        )
-
-    def seed_instances(self, carry, z: int):
-        return carry
-
-    def set_cost(self, carry, cost_per_score: float, z: int):
-        raise ValueError("greedy core does not model per-score cost")
-
-    def recalibrate(self, carry, t0: float, z: int):
-        return carry
-
-    def counters(self, carry) -> dict:
-        assigned = np.asarray(carry.assigned)
-        z = assigned.shape[0]
-        return dict(
-            score_rows=assigned.astype(np.int64),
-            final_w=np.ones((z,), np.int64),
-            lam=np.zeros((z,), np.float32),
-            cost_per_score=np.zeros((z,), np.float32),
         )
 
     def make_step(self, stream, m_real, allowed, cap, prev_assign):

@@ -70,7 +70,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Callable, List, NamedTuple, Optional, Sequence
+from typing import Any, Callable, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +90,7 @@ __all__ = [
     "ScanDriver",
     "DriveResult",
     "resolve_backend",
+    "scan_compile_counts",
 ]
 
 
@@ -128,23 +129,40 @@ class StepCore:
     """
 
     name: str = "core"
-    # Look-ahead rows the step may read beyond the last assignment (ring
-    # sizing adds this to the per-call consumption bound).
-    window_rows: int = 0
-    # Max stream rows consumed (and assignments emitted) per scan step.
-    rows_per_step: int = 1
-    # Lazy-traversal rescore budget (diagnostics; ADWISE-specific).
-    r_sel: int = 0
-    has_budget: bool = False
+
+    # The sizing contract is read-only by design (concrete cores either
+    # derive it from config or shadow it with class attributes), so the base
+    # declares properties rather than writable attributes.
+    @property
+    def window_rows(self) -> int:
+        """Look-ahead rows the step may read beyond the last assignment
+        (ring sizing adds this to the per-call consumption bound)."""
+        return 0
+
+    @property
+    def rows_per_step(self) -> int:
+        """Max stream rows consumed (and assignments emitted) per step."""
+        return 1
+
+    @property
+    def r_sel(self) -> int:
+        """Lazy-traversal rescore budget (diagnostics; ADWISE-specific)."""
+        return 0
+
+    @property
+    def has_budget(self) -> bool:
+        return False
 
     # -- required hooks ----------------------------------------------------
-    def make_step(self, stream, m_real, allowed, cap, prev_assign):
+    def make_step(
+        self, stream: Any, m_real: Any, allowed: Any, cap: Any, prev_assign: Any
+    ) -> Callable[[Any, Any], Any]:
         raise NotImplementedError
 
-    def init_carry(self, budget: float):
+    def init_carry(self, budget: float) -> Any:
         raise NotImplementedError
 
-    def warm_carry(self, budget: float, warm: WarmState):
+    def warm_carry(self, budget: float, warm: WarmState) -> Any:
         raise NotImplementedError(f"{self.name} does not support warm starts")
 
     # -- optional hooks ----------------------------------------------------
@@ -152,18 +170,18 @@ class StepCore:
         """Hard per-partition capacity for an instance streaming m edges."""
         return int(np.iinfo(np.int32).max)
 
-    def seed_instances(self, carry, z: int):
+    def seed_instances(self, carry: Any, z: int) -> Any:
         """Derive per-instance carry state after batching (default: none)."""
         return carry
 
-    def set_cost(self, carry, cost_per_score: float, z: int):
+    def set_cost(self, carry: Any, cost_per_score: float, z: int) -> Any:
         raise ValueError(f"{self.name} core does not model per-score cost")
 
-    def recalibrate(self, carry, t0: float, z: int):
+    def recalibrate(self, carry: Any, t0: float, z: int) -> Any:
         """Between-chunks budget recalibration (no-op unless has_budget)."""
         return carry
 
-    def counters(self, carry) -> dict:
+    def counters(self, carry: Any) -> dict:
         """Final per-instance counters for :class:`DriveResult` (each (z,))."""
         assigned = np.asarray(carry.assigned)
         z = assigned.shape[0]
@@ -208,7 +226,9 @@ class AdwiseCore(StepCore):
     def cap_value(self, m: int, n_allowed: int) -> int:
         return self.cfg.cap_value(m, n_allowed)
 
-    def make_step(self, stream, m_real, allowed, cap, prev_assign):
+    def make_step(
+        self, stream: Any, m_real: Any, allowed: Any, cap: Any, prev_assign: Any
+    ) -> Callable[[Any, Any], Any]:
         return _make_step(
             self.cfg, self.num_vertices, self.r_sel, stream, m_real, allowed,
             cap, self.has_budget, prev_assign, self.update_deg,
@@ -223,28 +243,30 @@ class AdwiseCore(StepCore):
             replicas=warm.replicas, deg=warm.deg, sizes=warm.sizes,
         )
 
-    def set_cost(self, carry, cost_per_score: float, z: int):
+    def set_cost(self, carry: Any, cost_per_score: float, z: int) -> Any:
         return carry._replace(
             cost_per_score=jnp.full((z,), cost_per_score, jnp.float32)
         )
 
-    def recalibrate(self, carry, t0: float, z: int):
+    def recalibrate(self, carry: Any, t0: float, z: int) -> Any:
+        budget = self.cfg.latency_budget
+        assert budget is not None  # only called when has_budget
         # Recalibrate the modeled cost against measured wall between scan
         # calls: one program runs all instances, so the shared per-row cost
         # comes from the batched wall over the total row count.
+        # staticcheck: disable=SC003 budget recalibration MEASURES wall clock — the sync is the measurement (§III-B latency budget)
         jax.block_until_ready(carry.score_rows)
         wall = time.perf_counter() - t0
+        # staticcheck: disable=SC003 score_rows drives the measured cost; already synced by the block above
         rows = max(int(np.asarray(carry.score_rows).sum()), 1)
         return carry._replace(
             cost_per_score=jnp.full(
                 (z,), wall / (rows * self.cfg.k), jnp.float32
             ),
-            budget_left=jnp.full(
-                (z,), self.cfg.latency_budget - wall, jnp.float32
-            ),
+            budget_left=jnp.full((z,), budget - wall, jnp.float32),
         )
 
-    def counters(self, carry) -> dict:
+    def counters(self, carry: Any) -> dict:
         return dict(
             score_rows=np.asarray(carry.score_rows),
             final_w=np.asarray(carry.w_cap),
@@ -270,7 +292,9 @@ class RingBuf(NamedTuple):
     prev: jax.Array  # (B,) int32 prior-pass assignment, -1 = none
 
 
-def _shard_over_instances(fn, n_shards: int, n_args: int):
+def _shard_over_instances(
+    fn: Callable[..., Any], n_shards: int, n_args: int
+) -> Callable[..., Any]:
     mesh = compat.make_mesh(
         (n_shards,), ("instances",),
         devices=np.array(jax.devices()[:n_shards]),
@@ -290,7 +314,7 @@ def _shard_over_instances(fn, n_shards: int, n_args: int):
     static_argnames=("core", "n_steps", "n_shards"),
 )
 def _run_scan_resident(
-    carry,  # core carry; every leaf carries a leading (z,) instance axis
+    carry: Any,  # core carry; every leaf carries a leading (z,) instance axis
     streams: jax.Array,  # (z, per, 2) int32
     m_real: jax.Array,  # (z,) int32
     allowed: jax.Array,  # (z, K) bool
@@ -300,10 +324,12 @@ def _run_scan_resident(
     core: StepCore,
     n_steps: int,
     n_shards: int = 0,
-):
+) -> Any:
     """All z instance scans as ONE program over a fully resident stream."""
 
-    def one(carry, stream, m_real, allowed, cap, prev):
+    def one(
+        carry: Any, stream: Any, m_real: Any, allowed: Any, cap: Any, prev: Any
+    ) -> Any:
         step = core.make_step(stream, m_real, allowed, cap, prev)
         return jax.lax.scan(step, carry, None, length=n_steps)
 
@@ -327,12 +353,12 @@ def _run_scan_ring(
     core: StepCore,
     n_steps: int,
     n_shards: int = 0,
-):
+) -> Any:
     """Ring-mode scan: the stream buffer rides in the donated carry and is
     returned untouched, so XLA aliases it across calls (zero copies, zero
     re-upload)."""
 
-    def one(carry_buf, m_real, allowed, cap):
+    def one(carry_buf: Any, m_real: Any, allowed: Any, cap: Any) -> Any:
         carry, buf = carry_buf
         step = core.make_step(buf.uv, m_real, allowed, cap, buf.prev)
         carry, outs = jax.lax.scan(step, carry, None, length=n_steps)
@@ -366,6 +392,29 @@ def _ring_write(
     return RingBuf(uv, prev)
 
 
+def scan_compile_counts() -> dict:
+    """Live jit-cache sizes of the three driver kernels — the retrace
+    budget the pow2-``Rq`` quantization exists to bound.
+
+    ``_run_scan_resident`` / ``_run_scan_ring`` compile once per distinct
+    (core static config, n_steps, carry/stream shapes); ``_ring_write``
+    once per distinct refill-span shape, which quantization keeps to the
+    multiples of ``Rq`` up to ``max_span`` plus at most one ragged
+    final-tail span per instance. tests/test_compile_budget.py asserts the
+    bound over random geometries; benchmarks/run.py emits the counts into
+    ``BENCH_<n>.json`` so retrace regressions show up in the perf
+    trajectory. Returns zeros if the jax version hides ``_cache_size``.
+    """
+    return {
+        name: int(getattr(fn, "_cache_size", lambda: 0)())
+        for name, fn in (
+            ("run_scan_resident", _run_scan_resident),
+            ("run_scan_ring", _run_scan_ring),
+            ("ring_write", _ring_write),
+        )
+    }
+
+
 # ----------------------------------------------------------------------------
 # Chunk sources
 # ----------------------------------------------------------------------------
@@ -382,7 +431,7 @@ class ResidentSource:
 
     resident = True
 
-    def __init__(self, streams: np.ndarray, m_per: np.ndarray):
+    def __init__(self, streams: np.ndarray, m_per: np.ndarray) -> None:
         streams = np.ascontiguousarray(streams, np.int32)
         assert streams.ndim == 3 and streams.shape[2] == 2, streams.shape
         self.z, self.per = int(streams.shape[0]), int(streams.shape[1])
@@ -434,7 +483,7 @@ class FileSource:
         cfg: Optional[AdwiseConfig] = None,
         core: Optional[StepCore] = None,
         prev_read: Optional[List[Callable[[int, int], np.ndarray]]] = None,
-    ):
+    ) -> None:
         self.readers = list(readers)
         self.z = len(self.readers)
         self.m_per = np.array([r.num_edges for r in self.readers], np.int64)
@@ -504,7 +553,7 @@ class FileSource:
                     f"instance {i}: reader returned {len(rows)} of {c} rows "
                     f"at offset {hi}"
                 )
-                if with_prev:
+                if self.prev_read is not None:
                     prows = np.ascontiguousarray(
                         self.prev_read[i](hi, c), np.int32
                     )
@@ -571,15 +620,15 @@ class ScanDriver:
 
     def __init__(
         self,
-        source,
-        core,  # a StepCore, or an AdwiseConfig (compat: wraps AdwiseCore)
+        source: Any,  # a ResidentSource or FileSource (anything source-shaped)
+        core: Any,  # a StepCore, or an AdwiseConfig (compat: wraps AdwiseCore)
         num_vertices: Optional[int] = None,
         *,
         allowed: Optional[np.ndarray] = None,  # (z, k) bool
         warm: Optional[Sequence[WarmState]] = None,
         cost_per_score: Optional[float] = None,
         backend: str = "vmap",
-    ):
+    ) -> None:
         self.source = source
         if isinstance(core, AdwiseConfig):
             assert num_vertices is not None, "AdwiseConfig path needs |V|"
@@ -609,11 +658,15 @@ class ScanDriver:
             np.int32,
         )
 
-        self.has_budget = core.has_budget
-        budget = (self.cfg.latency_budget or 0.0) if self.has_budget else 0.0
+        self.has_budget = bool(core.has_budget)
+        budget = 0.0
+        if self.has_budget and self.cfg is not None:
+            budget = self.cfg.latency_budget or 0.0
         self.warm = warm is not None
-        per = getattr(source, "per", 0)
-        prev_np = np.full((z, per), -1, np.int32) if source.resident else None
+        per = int(getattr(source, "per", 0))
+        prev_np: Optional[np.ndarray] = (
+            np.full((z, per), -1, np.int32) if source.resident else None
+        )
         if warm is None:
             base = core.init_carry(budget)
             carry = jax.tree.map(lambda x: jnp.broadcast_to(x, (z,) + x.shape), base)
@@ -632,8 +685,9 @@ class ScanDriver:
             )
             carries = [core.warm_carry(budget, w) for w in warm]
             carry = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
-            if source.resident and all(has_prev):
+            if prev_np is not None and all(has_prev):
                 for i, w in enumerate(warm):
+                    assert w.prev_assign is not None  # all(has_prev) above
                     pa = np.asarray(w.prev_assign, np.int32)
                     assert pa.shape == (int(self.m_per[i]),), (
                         f"instance {i}: prev_assign must align with its stream"
@@ -641,7 +695,7 @@ class ScanDriver:
                     prev_np[i, : len(pa)] = pa
         carry = core.seed_instances(carry, z)
         self.fixed_cost = cost_per_score is not None
-        if self.fixed_cost:
+        if cost_per_score is not None:
             carry = core.set_cost(carry, cost_per_score, z)
         self.carry = carry
         self.backend, self.n_shards = resolve_backend(backend, z)
@@ -651,7 +705,7 @@ class ScanDriver:
         self._prev_np = prev_np
 
     # -- budget recalibration (shared by both modes) -----------------------
-    def _recalibrate(self, carry, t0: float):
+    def _recalibrate(self, carry: Any, t0: float) -> Any:
         if not (self.has_budget and not self.fixed_cost):
             return carry
         return self.core.recalibrate(carry, t0, self.z)
@@ -671,13 +725,15 @@ class ScanDriver:
         chunk_steps = -(-steps_total // n_chunks)
         n_chunks = -(-steps_total // chunk_steps)
 
+        prev_np = self._prev_np
+        assert prev_np is not None  # resident mode always builds prev table
         streams_j = jnp.asarray(src.streams)
-        prev_j = jnp.asarray(self._prev_np)
+        prev_j = jnp.asarray(prev_np)
         h2d_rows = src.upload_rows
-        h2d_bytes = src.upload_rows * 8 + self._prev_np.size * 4
+        h2d_bytes = src.upload_rows * 8 + prev_np.size * 4
         carry = self.carry
 
-        def run_chunk(carry):
+        def run_chunk(carry: Any) -> Any:
             return _run_scan_resident(
                 carry, streams_j, self._m_real_j, self._allowed_j,
                 self._caps_j, prev_j,
@@ -690,14 +746,19 @@ class ScanDriver:
         for _ in range(n_chunks):
             carry, out = run_chunk(carry)
             calls += 1
-            outs.append(jax.tree.map(np.asarray, out))
+            # Device handles only — materializing here would sync the host
+            # to every chunk and serialize dispatch (SC003); the transfer
+            # happens once, after the stepping loop.
+            outs.append(out)
             carry = self._recalibrate(carry, t0)
         drain_left = -(-m_max // chunk_steps) + 2
+        # staticcheck: disable=SC003 drain termination must observe `assigned`; one sync per extra call, none in the provisioned loop
         while (np.asarray(carry.assigned) < self.m_per).any() and drain_left > 0:
             carry, out = run_chunk(carry)
             calls += 1
-            outs.append(jax.tree.map(np.asarray, out))
+            outs.append(out)
             drain_left -= 1
+        outs = [jax.tree.map(np.asarray, o) for o in outs]
         wall = time.perf_counter() - t0
         self.carry = carry
         return self._result(
@@ -710,7 +771,9 @@ class ScanDriver:
         )
 
     # -- ring (file) mode --------------------------------------------------
-    def _run_ring(self, on_assign) -> DriveResult:
+    def _run_ring(
+        self, on_assign: Callable[[int, np.ndarray, np.ndarray], None]
+    ) -> DriveResult:
         src, core = self.source, self.core
         z = self.z
         m_max = int(self.m_per.max())
@@ -725,6 +788,7 @@ class ScanDriver:
         # build-up.
         max_iters = -(-(m_max + core.window_rows) // S) + 8
         while True:
+            # staticcheck: disable=SC003 ring-mode termination: ONE assigned-counter sync per scan call, amortized over S steps
             assigned = np.asarray(carry.assigned)
             if (assigned >= self.m_per).all():
                 break
@@ -733,12 +797,15 @@ class ScanDriver:
                 f"streaming scan failed to converge: {assigned} of "
                 f"{self.m_per} assigned after {iters} calls"
             )
+            # staticcheck: disable=SC003 refill needs the host cursor to size disk reads; same single sync point per call
             buf = src.refill(buf, np.asarray(carry.cursor))
             (carry, buf), out = _run_scan_ring(
                 (carry, buf), self._m_real_j, self._allowed_j, self._caps_j,
                 core=core, n_steps=S, n_shards=self.n_shards,
             )
+            # staticcheck: disable=SC003 file mode streams placements to on_assign to stay O(chunk) — per-call materialization is the design
             sidx = np.asarray(out.sidx).reshape(z, -1)
+            # staticcheck: disable=SC003 same spill materialization as sidx above
             pout = np.asarray(out.p).reshape(z, -1)
             for i in range(z):
                 live = sidx[i] >= 0
@@ -757,8 +824,20 @@ class ScanDriver:
             buffer_rows=src.B, steps_per_call=S,
         )
 
-    def _result(self, carry, wall, *, sidx, p, w_trace, scan_calls,
-                h2d_rows, h2d_bytes, buffer_rows, steps_per_call) -> DriveResult:
+    def _result(
+        self,
+        carry: Any,
+        wall: float,
+        *,
+        sidx: Optional[np.ndarray],
+        p: Optional[np.ndarray],
+        w_trace: Optional[np.ndarray],
+        scan_calls: int,
+        h2d_rows: int,
+        h2d_bytes: int,
+        buffer_rows: int,
+        steps_per_call: int,
+    ) -> DriveResult:
         cnt = self.core.counters(carry)
         return DriveResult(
             sidx=sidx,

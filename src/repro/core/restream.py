@@ -70,6 +70,7 @@ from repro.core.baselines import (
     _scan_partition,
     _single_edge_out,
 )
+from repro.core.driver import StepCore
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.graph import metrics
 
@@ -755,7 +756,7 @@ class TpslState:
 
 
 @dataclasses.dataclass(frozen=True)
-class TpslCore:
+class TpslCore(StepCore):
     """2PS-L phase 2 as a chunk-resumable step-core: one edge per scan step.
 
     Bit-identical to :class:`TpslState`. Cold start is a contract error —
@@ -801,15 +802,6 @@ class TpslCore:
             cursor=jnp.zeros((), jnp.int32),
             assigned=jnp.zeros((), jnp.int32),
         )
-
-    def seed_instances(self, carry, z: int):
-        return carry
-
-    def set_cost(self, carry, cost_per_score: float, z: int):
-        raise ValueError("2ps-l core does not model per-score cost")
-
-    def recalibrate(self, carry, t0: float, z: int):
-        return carry
 
     def counters(self, carry) -> dict:
         assigned = np.asarray(carry.assigned)

@@ -1,0 +1,210 @@
+"""Dynamic complement to tools/staticcheck: the jit compile-cache budget.
+
+The pow2-``Rq`` refill quantization (PR 5) exists to keep the driver's
+kernel-shape set *bounded*: scan kernels compile once per distinct
+(core static config, n_steps, carry/stream shapes) and ``_ring_write``
+once per quantized span shape — never once per chunk, never once per
+stream length. A stray unquantized shape or a traced value leaking into a
+static argument reintroduces unbounded recompilation (the latency
+pathology the static rules SC001–SC003 guard the source side of). This
+module enforces the bound dynamically: random ``(chunk_edges, window_max,
+assign_batch, z)`` geometries sweep through :class:`ScanDriver` over both
+sources, and the live jit cache sizes (``scan_compile_counts``) must stay
+within the analytic budget. benchmarks/run.py emits the same counters
+into ``BENCH_<n>.json`` so retrace regressions also show in the perf
+trajectory.
+"""
+import numpy as np
+import pytest
+
+from repro.core.baselines import GreedyCore, HdrfCore
+from repro.core.driver import (
+    AdwiseCore,
+    FileSource,
+    ResidentSource,
+    ScanDriver,
+    scan_compile_counts,
+)
+from repro.core.types import AdwiseConfig
+
+N_GEOMETRIES = 22  # acceptance floor is 20, on BOTH sources
+
+
+class ArrayReader:
+    """Minimal FileSource reader over an in-memory edge array (the ring
+    path only needs ``num_edges`` + ``read``; no disk round-trip here —
+    this test measures compiles, not I/O)."""
+
+    def __init__(self, edges: np.ndarray):
+        self.edges = np.ascontiguousarray(edges, np.int32)
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edges)
+
+    def read(self, start: int, count: int) -> np.ndarray:
+        return self.edges[start : start + count]
+
+
+def _make_core(kind: str, rng, V: int, k: int):
+    if kind == "adwise":
+        w = int(rng.choice([4, 8, 16]))
+        b = int(rng.integers(1, 5))
+        return AdwiseCore(
+            cfg=AdwiseConfig(k=k, window_max=w, assign_batch=b),
+            num_vertices=V,
+        )
+    if kind == "hdrf":
+        # seed is compare=False: it must NOT enter the jit cache key.
+        return HdrfCore(num_vertices=V, k=k, seed=int(rng.integers(0, 99)))
+    return GreedyCore(num_vertices=V, k=k)
+
+
+def _geometries(rng, n: int):
+    kinds = ["adwise"] * 8 + ["hdrf"] * 8 + ["greedy"] * 4
+    while len(kinds) < n:
+        kinds.append("hdrf")
+    out = []
+    for kind in kinds[:n]:
+        V = int(rng.integers(16, 48))
+        k = int(rng.choice([3, 4, 8]))
+        z = int(rng.integers(1, 4))
+        chunk = int(rng.integers(16, 400))
+        ms = [int(rng.integers(40, 260)) for _ in range(z)]
+        core = _make_core(kind, rng, V, k)
+        out.append(dict(core=core, V=V, z=z, chunk=chunk, ms=ms,
+                        n_chunks=int(rng.integers(1, 7))))
+    return out
+
+
+def _edges(rng, V: int, m: int) -> np.ndarray:
+    return rng.integers(0, V, size=(m, 2)).astype(np.int32)
+
+
+def _run_resident(geo, rng):
+    z, ms = geo["z"], geo["ms"]
+    per = max(ms)
+    streams = np.zeros((z, per, 2), np.int32)
+    for i, m in enumerate(ms):
+        streams[i, :m] = _edges(rng, geo["V"], m)
+    src = ResidentSource(streams, np.array(ms, np.int64))
+    drv = ScanDriver(src, geo["core"])
+    res = drv.run(n_chunks=geo["n_chunks"])
+    assert (res.assigned == np.array(ms)).all()
+    return per
+
+
+def _run_ring(geo, rng, ms=None):
+    ms = ms if ms is not None else geo["ms"]
+    readers = [ArrayReader(_edges(rng, geo["V"], m)) for m in ms]
+    src = FileSource(readers, chunk_edges=geo["chunk"], core=geo["core"])
+    drv = ScanDriver(src, geo["core"])
+    got = [0] * len(ms)
+
+    def on_assign(i, idx, p):
+        got[i] += len(idx)
+
+    drv.run(on_assign=on_assign)
+    assert got == list(ms)
+    return src
+
+
+def _resident_key(geo, per):
+    """The driver's static signature for `_run_scan_resident`, replicated:
+    one compile per distinct (core, chunk_steps, z, per)."""
+    core = geo["core"]
+    b = core.rows_per_step
+    m_max = max(geo["ms"])
+    steps_total = -(-m_max // b) + -(-core.window_rows // b) + 2
+    nc = max(1, min(geo["n_chunks"], steps_total))
+    chunk_steps = -(-steps_total // nc)
+    return (core, chunk_steps, geo["z"], per)
+
+
+def test_compile_budget_random_geometries():
+    """≥20 random geometries over BOTH sources: scan-kernel compiles stay
+    ≤ the number of distinct static signatures (each geometry adds at most
+    one program per source), and ring-write compiles stay within the
+    quantized-span budget ``max_span/Rq + z`` per run."""
+    rng = np.random.default_rng(20260809)
+    geos = _geometries(rng, N_GEOMETRIES)
+
+    resident_keys, ring_keys = set(), set()
+    base = scan_compile_counts()
+    for geo in geos:
+        pre = scan_compile_counts()
+        per = _run_resident(geo, rng)
+        src = _run_ring(geo, rng)
+        post = scan_compile_counts()
+
+        resident_keys.add(_resident_key(geo, per))
+        ring_keys.add((geo["core"], src.scan_steps, geo["z"], src.B))
+
+        # Per-geometry: at most ONE new program per scan kernel — n_steps
+        # and every shape are fixed by the geometry, so chunked stepping
+        # and the drain reuse the same trace.
+        assert post["run_scan_resident"] - pre["run_scan_resident"] <= 1, geo
+        assert post["run_scan_ring"] - pre["run_scan_ring"] <= 1, geo
+        # Ring refills: only Rq-multiples up to max_span, plus at most one
+        # ragged final-tail span per instance (the unquantized remainder
+        # at target == m_i).
+        span_budget = src.max_span // src.Rq + geo["z"] + 1
+        assert post["ring_write"] - pre["ring_write"] <= span_budget, (
+            geo, src.Rq, src.max_span, pre, post,
+        )
+
+    end = scan_compile_counts()
+    assert end["run_scan_resident"] - base["run_scan_resident"] <= len(
+        resident_keys
+    )
+    assert end["run_scan_ring"] - base["run_scan_ring"] <= len(ring_keys)
+
+
+def test_ring_same_geometry_new_stream_zero_recompiles():
+    """The headline pow2-Rq promise: a second run with the SAME
+    (chunk_edges, window_max, assign_batch, z) geometry but a *different*
+    stream (different m, different edges) adds ZERO scan-kernel compiles —
+    m_real rides as a traced input, never a static — and at most z new
+    ragged-tail spans in the update kernel."""
+    rng = np.random.default_rng(42)
+    geos = _geometries(rng, 6)
+    for geo in geos[:4]:
+        _run_ring(geo, rng)  # warm: compiles this geometry's programs
+        pre = scan_compile_counts()
+        new_ms = [int(rng.integers(40, 300)) for _ in range(geo["z"])]
+        src = _run_ring(geo, rng, ms=new_ms)
+        post = scan_compile_counts()
+        assert post["run_scan_ring"] == pre["run_scan_ring"], (
+            "scan kernel recompiled on a same-geometry re-run: the stream "
+            "length leaked into a static argument",
+            geo, new_ms,
+        )
+        # Quantized spans are cached from the first run up to whatever it
+        # used; the only genuinely new shapes are ragged tails (<= 1 per
+        # instance) and at most a couple of not-yet-seen Rq multiples.
+        assert post["ring_write"] - pre["ring_write"] <= geo["z"] + 2, (
+            geo, new_ms, pre, post,
+        )
+
+
+def test_hdrf_seed_not_in_cache_key():
+    """HdrfCore.seed is field(compare=False): spotlight's per-instance
+    seeds must share one trace, so two equal-geometry cores differing only
+    in seed may not add a second program."""
+    rng = np.random.default_rng(3)
+    geo = dict(
+        core=HdrfCore(num_vertices=30, k=4, seed=1),
+        V=30, z=2, chunk=64, ms=[90, 120], n_chunks=3,
+    )
+    _run_ring(geo, rng)
+    pre = scan_compile_counts()
+    geo2 = dict(geo, core=HdrfCore(num_vertices=30, k=4, seed=77))
+    _run_ring(geo2, rng)
+    post = scan_compile_counts()
+    assert post["run_scan_ring"] == pre["run_scan_ring"]
+
+
+def test_counts_are_live_gauges():
+    counts = scan_compile_counts()
+    assert set(counts) == {"run_scan_resident", "run_scan_ring", "ring_write"}
+    assert all(isinstance(v, int) and v >= 0 for v in counts.values())

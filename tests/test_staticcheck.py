@@ -1,0 +1,293 @@
+"""The trace-contract checker checked: per-rule fixtures (flagged + clean),
+suppression parsing, baseline diffing, the CLI exit-code contract, and the
+whole-repo gate (zero unsuppressed findings over src/ + tools/)."""
+import json
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:  # `python -m pytest` adds cwd; be robust
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.staticcheck import check_paths, check_source, run_selftest  # noqa: E402
+from tools.staticcheck.__main__ import main as cli_main  # noqa: E402
+from tools.staticcheck.engine import (  # noqa: E402
+    load_baseline,
+    new_findings,
+    parse_suppressions,
+    write_baseline,
+)
+
+FIXTURES = REPO_ROOT / "tools" / "staticcheck" / "fixtures"
+CORE_PATH = "src/repro/core/virtual.py"  # activates path-filtered rules
+
+
+def rules_of(findings, suppressed=False):
+    return {f.rule for f in findings if f.suppressed == suppressed}
+
+
+def check(snippet: str, path: str = CORE_PATH):
+    return check_source(textwrap.dedent(snippet), path)
+
+
+# ----------------------------------------------------------------------------
+# per-rule: fixtures flag, clean variants stay silent
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "fixture,rule",
+    [
+        ("sc001_unfrozen_core.py", "SC001"),
+        ("sc002_traced_branch.py", "SC002"),
+        ("sc003_host_sync.py", "SC003"),
+        ("sc004_legacy_rng.py", "SC004"),
+        ("sc005_donated_read.py", "SC005"),
+    ],
+)
+def test_fixture_flags_only_its_rule(fixture, rule):
+    found = check_source(
+        (FIXTURES / fixture).read_text(), f"src/repro/core/{fixture}"
+    )
+    assert rules_of(found) == {rule}
+    # every finding carries the rule's severity + a non-empty fix-it hint
+    for f in found:
+        assert f.severity == "error"
+        assert f.hint
+
+
+def test_clean_fixture_is_clean():
+    found = check_source(
+        (FIXTURES / "clean_core.py").read_text(), "src/repro/core/clean.py"
+    )
+    assert found == []
+
+
+def test_selftest_passes():
+    ok, lines = run_selftest()
+    assert ok, "\n".join(lines)
+
+
+def test_selftest_catches_a_broken_rule(tmp_path):
+    """A fixture whose declared rule never fires must fail the self-test
+    (the 'silently-broken checker' CI guard)."""
+    f = tmp_path / "sc001_bogus.py"
+    f.write_text("# staticcheck-fixture-expect: SC001\nx = 1\n")
+    ok, lines = run_selftest(str(tmp_path))
+    assert not ok
+    assert any("sc001_bogus" in ln for ln in lines)
+
+
+# ----------------------------------------------------------------------------
+# targeted rule behavior beyond the fixtures
+# ----------------------------------------------------------------------------
+
+
+def test_sc001_frozen_stepcore_subclass_ok():
+    found = check(
+        """
+        import dataclasses
+
+        @dataclasses.dataclass(frozen=True)
+        class FineCore(StepCore):
+            k: int = 2
+            gamma: float = 1.0
+        """
+    )
+    assert rules_of(found) == set()
+
+
+def test_sc002_branches_on_closure_constants_ok():
+    """Python branching on *static* closure values (cfg flags, batch size)
+    is the jit-specialization idiom and must not be flagged."""
+    found = check(
+        """
+        def make_step(stream, lazy, b):
+            def step(carry, _):
+                if lazy:
+                    carry = carry + 1
+                if b == 1:
+                    carry = carry + 2
+                return carry, None
+            return step
+        """
+    )
+    assert rules_of(found) == set()
+
+
+def test_sc003_materialize_after_loop_ok():
+    found = check(
+        """
+        import numpy as np
+
+        class ScanDriver:
+            def _run_resident(self, run_chunk, n):
+                carry = self.carry
+                outs = []
+                for _ in range(n):
+                    carry, out = run_chunk(carry)
+                    outs.append(out)
+                return [np.asarray(o) for o in outs]
+        """
+    )
+    assert rules_of(found) == set()
+
+
+def test_sc004_only_applies_under_core():
+    legacy = "import numpy as np\nnoise = np.random.rand(3)\n"
+    assert rules_of(check_source(legacy, CORE_PATH)) == {"SC004"}
+    assert rules_of(check_source(legacy, "src/repro/graph/other.py")) == set()
+    seeded = "import numpy as np\nr = np.random.default_rng(0)\n"
+    assert rules_of(check_source(seeded, CORE_PATH)) == set()
+
+
+def test_sc005_rebind_is_clean_tuple_arg_tracked():
+    found = check(
+        """
+        from functools import partial
+        import jax
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def run(cb, xs):
+            return cb, xs
+
+        def ok(carry, buf, xs):
+            (carry, buf), out = run((carry, buf), xs)
+            return carry, buf, out
+
+        def bad(carry, buf, xs):
+            (c2, b2), out = run((carry, buf), xs)
+            return buf, out  # buf was inside the donated tuple
+        """
+    )
+    sc5 = [f for f in found if f.rule == "SC005"]
+    assert len(sc5) == 1
+    assert "`buf`" in sc5[0].message
+
+
+# ----------------------------------------------------------------------------
+# suppressions
+# ----------------------------------------------------------------------------
+
+LEGACY_LINE = "import numpy as np\n"
+
+
+def test_suppression_same_line_with_reason():
+    found = check_source(
+        LEGACY_LINE
+        + "x = np.random.rand(3)  # staticcheck: disable=SC004 parity oracle\n",
+        CORE_PATH,
+    )
+    assert rules_of(found) == set()
+    assert rules_of(found, suppressed=True) == {"SC004"}
+    (f,) = found
+    assert f.suppress_reason == "parity oracle"
+
+
+def test_suppression_comment_line_above():
+    found = check_source(
+        LEGACY_LINE
+        + "# staticcheck: disable=SC004 oracle noise, not core RNG\n"
+        + "x = np.random.rand(3)\n",
+        CORE_PATH,
+    )
+    assert rules_of(found) == set()
+    assert rules_of(found, suppressed=True) == {"SC004"}
+
+
+def test_suppression_without_reason_does_not_suppress():
+    found = check_source(
+        LEGACY_LINE + "x = np.random.rand(3)  # staticcheck: disable=SC004\n",
+        CORE_PATH,
+    )
+    # the finding survives AND the reasonless suppression is itself flagged
+    assert rules_of(found) == {"SC004", "SC000"}
+
+
+def test_suppression_wrong_rule_does_not_suppress():
+    found = check_source(
+        LEGACY_LINE
+        + "x = np.random.rand(3)  # staticcheck: disable=SC003 wrong rule\n",
+        CORE_PATH,
+    )
+    assert rules_of(found) == {"SC004"}
+
+
+def test_suppression_multiple_rules():
+    lines, bad = parse_suppressions(
+        ["y = f(x)  # staticcheck: disable=SC003,SC005 shared sync point"]
+    )
+    assert bad == []
+    assert lines[1] == {
+        "SC003": "shared sync point",
+        "SC005": "shared sync point",
+    }
+
+
+# ----------------------------------------------------------------------------
+# baseline diffing
+# ----------------------------------------------------------------------------
+
+
+def test_baseline_roundtrip(tmp_path):
+    src = LEGACY_LINE + "x = np.random.rand(3)\n"
+    found = check_source(src, CORE_PATH)
+    assert rules_of(found) == {"SC004"}
+
+    bl = tmp_path / "baseline.json"
+    write_baseline(str(bl), found)
+    assert new_findings(found, load_baseline(str(bl))) == []
+
+    # a NEW finding (different source line) is not masked by the baseline
+    grown = src + "y = np.random.randn(4)\n"
+    found2 = check_source(grown, CORE_PATH)
+    fresh = new_findings(found2, load_baseline(str(bl)))
+    assert len(fresh) == 1 and "randn" not in json.dumps(
+        [f.fingerprint for f in found]
+    )
+
+
+def test_fingerprint_stable_across_line_drift():
+    src = LEGACY_LINE + "x = np.random.rand(3)\n"
+    moved = "import os\n" + LEGACY_LINE + "\n\nx = np.random.rand(3)\n"
+    fp1 = {f.fingerprint for f in check_source(src, CORE_PATH)}
+    fp2 = {f.fingerprint for f in check_source(moved, CORE_PATH)}
+    assert fp1 == fp2
+
+
+# ----------------------------------------------------------------------------
+# CLI + whole-repo gate
+# ----------------------------------------------------------------------------
+
+
+def test_cli_exit_codes(tmp_path):
+    dirty = tmp_path / "core"
+    dirty.mkdir()
+    (dirty / "m.py").write_text("x = 0\n")
+    assert cli_main([str(dirty)]) == 0
+    (dirty / "bad.py").write_text(
+        "from functools import partial\nimport jax\n\n"
+        "@partial(jax.jit, donate_argnums=(0,))\n"
+        "def f(c):\n    return c\n\n"
+        "def g(c):\n    d = f(c)\n    return c\n"
+    )
+    assert cli_main([str(dirty)]) == 1
+    assert cli_main(["--selftest"]) == 0
+
+
+def test_repo_has_zero_unsuppressed_findings():
+    """The CI gate, as a test: src/ and tools/ are clean (fixtures are
+    excluded by the engine; intentional syncs carry justified inline
+    suppressions, not baseline entries — the shipped baseline is empty)."""
+    findings = check_paths([str(REPO_ROOT / "src"), str(REPO_ROOT / "tools")])
+    fresh = [f for f in findings if not f.suppressed]
+    assert fresh == [], "\n".join(f.render() for f in fresh)
+    # every suppression in the tree carries a justification
+    assert all(f.suppress_reason for f in findings if f.suppressed)
+    shipped = load_baseline(
+        str(REPO_ROOT / "tools" / "staticcheck" / "baseline.json")
+    )
+    assert shipped == set()

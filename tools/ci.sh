@@ -1,10 +1,16 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 quick test profile + the smoke pass over every benchmark
-# entrypoint (proves each bench still *runs*; regressions in launch/bench
-# wiring fail here, not in a nightly).
+# CI gate: static trace-contract checks, type check, tier-1 quick test
+# profile, and the smoke pass over every benchmark entrypoint (proves each
+# bench still *runs*; regressions in launch/bench wiring fail here, not in
+# a nightly).
 #
 #   tools/ci.sh          # what the workflow runs
 #   tools/ci.sh --full   # also run the slow-marked tests
+#
+# Runs under `set -euo pipefail` end-to-end: every step below must succeed
+# or the script dies there — no failing checker/bench can be masked by a
+# later successful command (note the nullglob arrays for BENCH counting:
+# `ls ... | wc -l` would abort the script on an empty dir under pipefail).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,6 +22,23 @@ if [[ "${1:-}" == "--full" ]]; then
   MARK=''
 fi
 
+# Trace-contract checker. Self-test FIRST: every fixture must trip its
+# rule, so a silently-broken checker fails CI before it can wave the repo
+# through. Then the repo gate: zero unsuppressed findings over src/ and
+# tools/ (fixtures excluded by the engine; the shipped baseline is empty —
+# intentional violations carry inline justifications instead).
+python -m tools.staticcheck --selftest
+python -m tools.staticcheck src tools --baseline tools/staticcheck/baseline.json
+
+# Strict type check on the trace-contract surface (core/types.py +
+# core/driver.py, per mypy.ini). The workflow installs mypy; bare
+# containers without it skip rather than mask the rest of the gate.
+if python -c "import mypy" >/dev/null 2>&1; then
+  python -m mypy --config-file mypy.ini
+else
+  echo "mypy not installed: skipping type check (workflow installs it)"
+fi
+
 if [[ -n "$MARK" ]]; then
   python -m pytest -x -q -m "$MARK"
 else
@@ -25,13 +48,16 @@ fi
 # The smoke pass also writes a machine-readable BENCH_<n>.json into
 # bench_logs/ (kept / uploaded as a CI artifact), so the perf trajectory —
 # partition walls, h2d stream traffic, ingest MB/s, scan-core speedups,
-# supersteps/s — is tracked run over run instead of scrolling away in logs.
-BENCH_COUNT_BEFORE=$(ls bench_logs/BENCH_*.json 2>/dev/null | wc -l)
+# supersteps/s, jit compile counts — is tracked run over run instead of
+# scrolling away in logs.
+shopt -s nullglob
+BENCH_BEFORE=(bench_logs/BENCH_*.json)
 python -m benchmarks.run --smoke --json-dir bench_logs
-BENCH_COUNT_AFTER=$(ls bench_logs/BENCH_*.json 2>/dev/null | wc -l)
-if [[ "$BENCH_COUNT_AFTER" -le "$BENCH_COUNT_BEFORE" ]]; then
+BENCH_AFTER=(bench_logs/BENCH_*.json)
+shopt -u nullglob
+if (( ${#BENCH_AFTER[@]} <= ${#BENCH_BEFORE[@]} )); then
   echo "FATAL: benchmarks.run --json-dir bench_logs produced no new" \
-       "BENCH_<n>.json (before=$BENCH_COUNT_BEFORE after=$BENCH_COUNT_AFTER)" >&2
+       "BENCH_<n>.json (before=${#BENCH_BEFORE[@]} after=${#BENCH_AFTER[@]})" >&2
   exit 1
 fi
 

@@ -1,0 +1,22 @@
+"""Trace-contract checker: AST static analysis for scan-core hazards.
+
+The streaming-scan architecture rests on contracts nothing in Python
+enforces at runtime: step-cores must be frozen hashable dataclasses (they
+are jit *static* arguments), traced step bodies must never branch in Python
+or sync to host, tie noise must be counter-hashed rather than drawn from
+stateful RNG, and donated buffers die at the donating call. This package
+turns those contracts into CI-gated rules (see README.md for the catalog).
+
+    python -m tools.staticcheck src/ --baseline tools/staticcheck/baseline.json
+    python -m tools.staticcheck --selftest
+
+Pure stdlib (``ast``) — no repro/jax import, safe in any environment.
+"""
+from tools.staticcheck.engine import (  # noqa: F401
+    Finding,
+    check_paths,
+    check_source,
+    load_baseline,
+    run_selftest,
+)
+from tools.staticcheck.rules import RULES  # noqa: F401

@@ -1,0 +1,81 @@
+"""CLI for the trace-contract checker.
+
+    python -m tools.staticcheck src/ --baseline tools/staticcheck/baseline.json
+    python -m tools.staticcheck src/ tools/ --json
+    python -m tools.staticcheck --selftest
+
+Exit codes: 0 = clean (no new unsuppressed findings), 1 = findings (or a
+failed self-test), 2 = usage error. Pure stdlib — runs anywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from tools.staticcheck.engine import (
+    check_paths,
+    load_baseline,
+    new_findings,
+    run_selftest,
+    write_baseline,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.staticcheck",
+        description="AST trace-contract checker (rules SC001-SC005)",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to scan (default: src)")
+    ap.add_argument("--baseline", default=None,
+                    help="JSON baseline; only findings absent from it fail")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline with the current findings")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify every fixture triggers its declared rules")
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        ok, lines = run_selftest()
+        print("\n".join(lines))
+        print("staticcheck selftest:", "OK" if ok else "FAILED")
+        return 0 if ok else 1
+
+    paths = args.paths or ["src"]
+    findings = check_paths(paths)
+    baseline = load_baseline(args.baseline)
+    if args.write_baseline:
+        if not args.baseline:
+            ap.error("--write-baseline requires --baseline")
+        write_baseline(args.baseline, findings)
+        baseline = load_baseline(args.baseline)
+    new = new_findings(findings, baseline)
+    suppressed = [f for f in findings if f.suppressed]
+
+    if args.json:
+        print(json.dumps({
+            "new": [f.as_json() for f in new],
+            "suppressed": [f.as_json() for f in suppressed],
+            "baseline_matched": len(findings) - len(new) - len(suppressed),
+            "files_scanned": paths,
+            "ok": not new,
+        }, indent=1))
+    else:
+        for f in new:
+            print(f.render())
+        for f in suppressed:
+            print(f.render())
+        print(
+            f"staticcheck: {len(new)} new finding(s), "
+            f"{len(suppressed)} suppressed, "
+            f"{len(findings) - len(new) - len(suppressed)} baselined"
+        )
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,272 @@
+"""Checker engine: findings, suppressions, baseline diffing, file walking.
+
+Rule implementations live in :mod:`tools.staticcheck.rules`; this module is
+the rule-agnostic plumbing:
+
+* :class:`Finding` — one diagnostic (rule id, severity, location, message,
+  fix-it hint, suppression state, and a line-content fingerprint that stays
+  stable across unrelated edits for baseline diffing).
+* Inline suppressions — ``# staticcheck: disable=SC003 <reason>`` on the
+  offending line or on a comment line directly above it. The reason is
+  MANDATORY: a reasonless suppression does not suppress and is itself
+  reported as an ``SC000`` finding, so "shut it up" without a recorded
+  justification can never pass CI.
+* Baseline — a JSON set of fingerprints of known findings; only findings
+  *not* in the baseline count as new. The repo policy (ISSUE 7) is an empty
+  baseline: intentional violations get inline suppressions with reasons.
+* Self-test — every fixture under ``fixtures/`` declares the rule ids it
+  must trigger (``# staticcheck-fixture-expect: SC001,...``); the checker
+  validates itself against them so a silently-broken rule fails CI.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*staticcheck:\s*disable=((?:SC\d{3})(?:\s*,\s*SC\d{3})*)"
+    r"(?:[ \t]+(?P<reason>\S.*?))?\s*$"
+)
+FIXTURE_EXPECT_RE = re.compile(
+    r"#\s*staticcheck-fixture-expect:\s*((?:SC\d{3})(?:\s*,\s*SC\d{3})*)?\s*$",
+    re.MULTILINE,
+)
+# Fixture files are deliberate violations — never scanned in a normal run.
+_EXCLUDED_DIR = "fixtures"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    severity: str  # "error" | "warning"
+    path: str
+    line: int
+    col: int
+    message: str
+    hint: str = ""
+    suppressed: bool = False
+    suppress_reason: str = ""
+    fingerprint: str = ""
+
+    def render(self) -> str:
+        sup = f"  [suppressed: {self.suppress_reason}]" if self.suppressed else ""
+        hint = f"\n    hint: {self.hint}" if self.hint and not self.suppressed else ""
+        return (
+            f"{self.path}:{self.line}:{self.col}: {self.rule} "
+            f"[{self.severity}] {self.message}{sup}{hint}"
+        )
+
+    def as_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _fingerprint(rule: str, path: str, source_line: str, dup: int) -> str:
+    """Stable id for baseline diffing: rule + path + the stripped source
+    line (not the line *number*, so unrelated edits above don't churn the
+    baseline) + a duplicate counter for repeated identical lines."""
+    key = f"{rule}|{path}|{source_line.strip()}|{dup}"
+    return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+
+def parse_suppressions(
+    lines: Sequence[str],
+) -> Tuple[Dict[int, Dict[str, str]], List[Finding]]:
+    """Map line -> {rule_id: reason} plus SC000 findings for reasonless
+    suppressions. A suppression on a comment-only line also covers the next
+    line (so long statements can carry the justification above them)."""
+    by_line: Dict[int, Dict[str, str]] = {}
+    bad: List[Finding] = []
+    for i, raw in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(raw)
+        if not m:
+            continue
+        rules = [r.strip() for r in m.group(1).split(",")]
+        reason = (m.group("reason") or "").strip()
+        if not reason:
+            bad.append(
+                Finding(
+                    rule="SC000",
+                    severity="error",
+                    path="",
+                    line=i,
+                    col=raw.index("#"),
+                    message=(
+                        "suppression without justification: "
+                        "'# staticcheck: disable=...' requires a reason "
+                        "after the rule list (the finding is NOT suppressed)"
+                    ),
+                    hint="write `# staticcheck: disable=SCnnn <why this is intentional>`",
+                )
+            )
+            continue
+        targets = [i]
+        if raw.strip().startswith("#"):
+            targets.append(i + 1)
+        for ln in targets:
+            by_line.setdefault(ln, {}).update({r: reason for r in rules})
+    return by_line, bad
+
+
+def check_source(
+    text: str, path: str, rules: Optional[Sequence] = None
+) -> List[Finding]:
+    """Run every applicable rule over one file's source. ``path`` is the
+    path findings are reported (and path-filtered rules matched) under —
+    callers may pass a virtual path (the self-test does)."""
+    if rules is None:
+        from tools.staticcheck.rules import RULES as rules  # lazy, no cycle
+
+    norm = path.replace("\\", "/")
+    lines = text.splitlines()
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as e:
+        return [
+            Finding(
+                rule="SC000",
+                severity="error",
+                path=norm,
+                line=int(e.lineno or 1),
+                col=int(e.offset or 0),
+                message=f"file does not parse: {e.msg}",
+            )
+        ]
+
+    suppress, bad_sup = parse_suppressions(lines)
+    findings: List[Finding] = [
+        dataclasses.replace(f, path=norm) for f in bad_sup
+    ]
+    seen = set()
+    dup_count: Dict[str, int] = {}
+    for rule in rules:
+        if not rule.applies_to(norm):
+            continue
+        for raw in rule.check(tree, norm, lines):
+            key = (raw.rule, raw.line, raw.col, raw.message)
+            if key in seen:  # nested-scope walks may visit a node twice
+                continue
+            seen.add(key)
+            src_line = lines[raw.line - 1] if 0 < raw.line <= len(lines) else ""
+            fkey = f"{raw.rule}|{src_line.strip()}"
+            dup = dup_count.get(fkey, 0)
+            dup_count[fkey] = dup + 1
+            reason = suppress.get(raw.line, {}).get(raw.rule, "")
+            findings.append(
+                dataclasses.replace(
+                    raw,
+                    path=norm,
+                    suppressed=bool(reason),
+                    suppress_reason=reason,
+                    fingerprint=_fingerprint(raw.rule, norm, src_line, dup),
+                )
+            )
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def iter_py_files(paths: Iterable[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        root = Path(p)
+        if root.is_file():
+            out.append(root)
+            continue
+        for f in sorted(root.rglob("*.py")):
+            if _EXCLUDED_DIR in f.parts and "staticcheck" in f.parts:
+                continue
+            out.append(f)
+    return out
+
+
+def check_paths(
+    paths: Iterable[str], rules: Optional[Sequence] = None
+) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_py_files(paths):
+        findings.extend(check_source(f.read_text(), str(f), rules))
+    return findings
+
+
+# -- baseline ----------------------------------------------------------------
+
+
+def load_baseline(path: Optional[str]) -> set:
+    if not path:
+        return set()
+    doc = json.loads(Path(path).read_text())
+    return {e["fingerprint"] for e in doc.get("findings", [])}
+
+
+def write_baseline(path: str, findings: Sequence[Finding]) -> None:
+    doc = {
+        "version": 1,
+        "findings": [
+            {"rule": f.rule, "path": f.path, "fingerprint": f.fingerprint}
+            for f in findings
+            if not f.suppressed
+        ],
+    }
+    Path(path).write_text(json.dumps(doc, indent=1) + "\n")
+
+
+def new_findings(
+    findings: Sequence[Finding], baseline: set
+) -> List[Finding]:
+    """Unsuppressed findings not already recorded in the baseline."""
+    return [
+        f
+        for f in findings
+        if not f.suppressed and f.fingerprint not in baseline
+    ]
+
+
+# -- self-test over the bundled fixtures -------------------------------------
+
+
+def run_selftest(fixtures_dir: Optional[str] = None) -> Tuple[bool, List[str]]:
+    """Every fixture must trigger exactly the rule ids it declares (clean
+    fixtures declare none and must stay finding-free). Returns (ok, report
+    lines). Fixtures are checked under a virtual ``src/repro/core/`` path so
+    path-filtered rules (SC004) apply."""
+    fdir = Path(fixtures_dir or Path(__file__).parent / "fixtures")
+    lines_out: List[str] = []
+    ok = True
+    files = sorted(fdir.glob("*.py"))
+    if not files:
+        return False, [f"selftest: no fixtures found in {fdir}"]
+    for f in files:
+        text = f.read_text()
+        m = FIXTURE_EXPECT_RE.search(text)
+        if not m:
+            ok = False
+            lines_out.append(
+                f"selftest FAIL {f.name}: missing "
+                "'# staticcheck-fixture-expect:' header"
+            )
+            continue
+        expected = set()
+        if m.group(1):
+            expected = {r.strip() for r in m.group(1).split(",")}
+        found = check_source(text, f"src/repro/core/{f.name}")
+        got = {x.rule for x in found if not x.suppressed}
+        missing = expected - got
+        unexpected = got - expected
+        if missing or unexpected:
+            ok = False
+            lines_out.append(
+                f"selftest FAIL {f.name}: expected {sorted(expected)}, "
+                f"got {sorted(got)}"
+                + (f" (missing {sorted(missing)})" if missing else "")
+            )
+            for x in found:
+                lines_out.append(f"    {x.render()}")
+        else:
+            lines_out.append(
+                f"selftest ok   {f.name}: {sorted(got) or 'clean'}"
+            )
+    return ok, lines_out

@@ -1,0 +1,39 @@
+# staticcheck-fixture-expect: SC001
+"""SC001 fixture: step-cores that are not frozen hashable dataclasses.
+
+Never imported — parsed only. Each class below violates the core contract
+in a distinct way the rule must catch.
+"""
+import dataclasses
+
+import numpy as np
+
+
+class StepCore:  # stand-in base; exempt by name
+    pass
+
+
+class MutableCore(StepCore):  # SC001: not a dataclass at all
+    deg: np.ndarray = None  # SC001: ndarray-typed field
+
+    def make_step(self, stream, m_real, allowed, cap, prev_assign):
+        return None
+
+
+@dataclasses.dataclass
+class UnfrozenCore(StepCore):  # SC001: dataclass but frozen=False
+    weights: list = dataclasses.field(default_factory=list)  # SC001: list field
+
+
+@dataclasses.dataclass(frozen=True)
+class OrphanCore:  # SC001: defines make_step without subclassing StepCore
+    k: int = 2
+
+    def make_step(self, stream, m_real, allowed, cap, prev_assign):
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheCore(StepCore):
+    k: int = 2
+    scratch: dict = None  # SC001: dict-typed field poisons the jit cache

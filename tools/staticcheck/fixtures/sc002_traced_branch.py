@@ -1,0 +1,39 @@
+# staticcheck-fixture-expect: SC002
+"""SC002 fixture: Python control flow on traced values in step closures."""
+import jax
+import jax.numpy as jnp
+
+
+def make_step(stream, cap):
+    def step(carry, _):
+        row = stream[carry % stream.shape[0]]
+        if row[0] > cap:  # SC002: Python if on a traced value
+            carry = carry + 1
+        while carry > 0:  # SC002: Python while on a traced value
+            carry = carry - 1
+        assert carry >= 0  # SC002: assert concretizes the tracer
+        flag = bool(carry)  # SC002: bool() coercion
+        out = row if carry > 0 else -row  # SC002: ternary on traced test
+        return carry, (out, flag)
+
+    return step
+
+
+def body(i, acc):
+    derived = acc + i
+    if derived > 0:  # SC002: body is passed to fori_loop below
+        derived = -derived
+    return derived
+
+
+def run(n, acc):
+    return jax.lax.fori_loop(0, n, body, acc)
+
+
+def scanned(xs):
+    def inner(carry, x):  # passed to lax.scan below
+        if x > carry:  # SC002
+            carry = x
+        return carry, x
+
+    return jax.lax.scan(inner, jnp.int32(0), xs)

@@ -1,0 +1,36 @@
+# staticcheck-fixture-expect: SC003
+"""SC003 fixture: host syncs inside stepping loops / refill / closures."""
+import jax
+import numpy as np
+
+
+class ScanDriver:  # name puts its methods on the stepping surface
+    def _run_ring(self, run_chunk, m_per):
+        carry = self.carry
+        calls = 0
+        while calls < 64:
+            carry, out = run_chunk(carry)
+            calls += 1
+            done = float(carry.assigned)  # SC003: float() on device value
+            host = np.asarray(out.p)  # SC003: per-call materialization
+            stall = carry.budget.item()  # SC003: .item() round-trip
+            jax.block_until_ready(carry)  # SC003: full-pipeline sync
+            if done >= m_per and host.size and stall >= 0:
+                break
+        return carry
+
+
+class FileSource:
+    def refill(self, buf, cursors):
+        for i in range(4):
+            rows = int(buf.hi[i])  # SC003: int() on the device ring
+            buf = self._write(buf, rows)
+        return buf
+
+
+def make_step(stream):
+    def step(carry, _):
+        probe = np.asarray(carry)  # SC003: sync inside the traced step
+        return carry, probe
+
+    return step

@@ -1,0 +1,20 @@
+# staticcheck-fixture-expect: SC004
+"""SC004 fixture: legacy global-state RNG (checked under a virtual
+src/repro/core/ path by the self-test)."""
+import random
+
+import numpy as np
+from numpy.random import randint  # SC004: legacy import
+
+np.random.seed(0)  # SC004: hidden global seed
+
+
+def tie_noise(m):
+    noise = np.random.rand(m)  # SC004: stateful draw -> geometry-dependent
+    jitter = random.random()  # SC004: stdlib global RNG
+    return noise + jitter + randint(0, 2)
+
+
+def seeded_ok(seed, m):
+    rng = np.random.default_rng(seed)  # fine: explicit seeded Generator
+    return rng.integers(0, 2, size=m)

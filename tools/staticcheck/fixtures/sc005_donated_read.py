@@ -1,0 +1,28 @@
+# staticcheck-fixture-expect: SC005
+"""SC005 fixture: reading a buffer after donating it to a jitted call."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def run_chunk(carry, xs):
+    return carry + xs, xs
+
+
+def drive(carry, xs):
+    new_carry, out = run_chunk(carry, xs)
+    leak = carry + 1  # SC005: carry's buffer was donated to run_chunk
+    return new_carry, leak
+
+
+def drive_loop(carry, chunks):
+    for xs in chunks:
+        total = carry.sum()  # SC005 (2nd iteration): donated last iteration
+        state, _ = run_chunk(carry, xs)
+    return state, total
+
+
+def drive_ok(carry, xs):
+    carry, out = run_chunk(carry, xs)  # rebinding the name is the idiom
+    return carry + 1, out

@@ -1,0 +1,772 @@
+"""The trace-contract rules (SC001–SC005). See README.md for the catalog.
+
+Each rule is an object with ``id`` / ``severity`` / ``hint`` /
+``applies_to(path)`` and ``check(tree, path, lines) -> [Finding]``. The
+shared analyses below are deliberately simple forward passes — conservative
+taint propagation and a dataflow-lite donated-liveness walk — tuned so the
+current repo has zero false positives while every fixture violation fires.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from tools.staticcheck.engine import Finding
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted(node: Optional[ast.AST]) -> Optional[str]:
+    """'jax.lax.scan' for nested Attribute/Name chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def last_part(name: Optional[str]) -> str:
+    return name.rsplit(".", 1)[-1] if name else ""
+
+
+def names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """carry.assigned[i] -> 'carry'."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _target_names(target: ast.AST) -> Set[str]:
+    """Names actually *bound* by an assignment target — Store context only,
+    so `self.carry = x` binds nothing by name (not `self`)."""
+    return {
+        n.id
+        for n in ast.walk(target)
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)
+    }
+
+
+def functions_in(tree: ast.AST) -> List[ast.FunctionDef]:
+    return [
+        n
+        for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+
+
+def param_names(fn: ast.FunctionDef) -> Set[str]:
+    a = fn.args
+    params = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+    if a.vararg:
+        params.append(a.vararg)
+    if a.kwarg:
+        params.append(a.kwarg)
+    return {p.arg for p in params} - {"self", "cls"}
+
+
+def propagate(fn: ast.AST, seed: Set[str]) -> Set[str]:
+    """Forward-close a taint set over assignments until fixpoint: any
+    target assigned from an expression mentioning a tainted name becomes
+    tainted. Conservative (ignores control flow, descends into nested
+    defs) — fine, because only specific *uses* of tainted names are
+    flagged."""
+    tainted = set(seed)
+    for _ in range(16):
+        grew = False
+        for node in ast.walk(fn):
+            value = None
+            targets: List[ast.AST] = []
+            if isinstance(node, ast.Assign):
+                value, targets = node.value, node.targets
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                value, targets = node.value, [node.target]
+            elif isinstance(node, ast.AugAssign):
+                value, targets = node.value, [node.target]
+            elif isinstance(node, ast.NamedExpr):
+                value, targets = node.value, [node.target]
+            elif isinstance(node, ast.For):
+                value, targets = node.iter, [node.target]
+            if value is None or not (names_in(value) & tainted):
+                continue
+            new = set().union(*(_target_names(t) for t in targets)) - tainted
+            if new:
+                tainted |= new
+                grew = True
+        if not grew:
+            break
+    return tainted
+
+
+# -- step-closure discovery (shared by SC002 / SC003) ------------------------
+
+# jax transforms whose function arguments run traced. Index = which
+# positional args are traced callables (None = all Name args).
+_TRACED_CALLEE_ARGS: Dict[str, Tuple[int, ...]] = {
+    "scan": (0,),
+    "fori_loop": (2,),
+    "while_loop": (0, 1),
+    "cond": (1, 2),
+    "switch": (1,),
+    "vmap": (0,),
+    "pmap": (0,),
+    "shard_map": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+}
+_MAKE_STEP_NAMES = {"make_step", "_make_step"}
+
+
+def step_closures(tree: ast.AST) -> Dict[ast.FunctionDef, str]:
+    """FunctionDefs whose bodies run under jax tracing: functions returned
+    by ``make_step``/``_make_step`` factories, and functions passed by name
+    to ``lax.scan`` / ``fori_loop`` / ``while_loop`` / ``cond`` / ``vmap``
+    / ``shard_map`` (and friends). Maps node -> why it is a closure."""
+    by_name: Dict[str, List[ast.FunctionDef]] = {}
+    for f in functions_in(tree):
+        by_name.setdefault(f.name, []).append(f)
+
+    closures: Dict[ast.FunctionDef, str] = {}
+    for factory in functions_in(tree):
+        if factory.name not in _MAKE_STEP_NAMES:
+            continue
+        returned = {
+            dotted(r.value)
+            for r in ast.walk(factory)
+            if isinstance(r, ast.Return) and r.value is not None
+        }
+        for g in functions_in(factory):
+            if g is not factory and g.name in returned:
+                closures[g] = f"returned by {factory.name}"
+
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        callee = last_part(dotted(call.func))
+        if callee not in _TRACED_CALLEE_ARGS:
+            continue
+        for idx in _TRACED_CALLEE_ARGS[callee]:
+            if idx >= len(call.args):
+                continue
+            arg_name = dotted(call.args[idx])
+            for g in by_name.get(arg_name or "", []):
+                closures.setdefault(g, f"passed to {callee}")
+    return closures
+
+
+# ---------------------------------------------------------------------------
+# SC001 — step-cores are frozen hashable dataclasses
+# ---------------------------------------------------------------------------
+
+_UNHASHABLE_TYPE_NAMES = {
+    "list", "dict", "set", "bytearray",
+    "List", "Dict", "Set", "DefaultDict", "Counter", "OrderedDict",
+    "MutableMapping", "MutableSequence", "MutableSet",
+    "ndarray", "Array", "DeviceArray",
+}
+_MUTABLE_FACTORIES = {
+    "list", "dict", "set", "bytearray",
+    "array", "zeros", "ones", "empty", "full", "arange",
+}
+
+
+class SC001:
+    id = "SC001"
+    severity = "error"
+    hint = (
+        "cores are jit STATIC arguments: make the class "
+        "`@dataclasses.dataclass(frozen=True)`, subclass StepCore, and keep "
+        "every field a hashable scalar — per-instance arrays belong in the "
+        "carry, not the core"
+    )
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(
+        self, tree: ast.AST, path: str, lines: Sequence[str]
+    ) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef) or node.name == "StepCore":
+                continue
+            bases = [last_part(dotted(b)) for b in node.bases]
+            is_sub = "StepCore" in bases
+            has_make_step = any(
+                isinstance(x, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and x.name == "make_step"
+                for x in node.body
+            )
+            if not (is_sub or has_make_step):
+                continue
+            if has_make_step and not is_sub:
+                yield self._f(
+                    node,
+                    f"class {node.name} defines make_step but does not "
+                    "subclass StepCore — it evades the step-core contract "
+                    "(and this rule's field checks)",
+                )
+            is_dc = frozen = False
+            for dec in node.decorator_list:
+                name = last_part(
+                    dotted(dec.func if isinstance(dec, ast.Call) else dec)
+                )
+                if name != "dataclass":
+                    continue
+                is_dc = True
+                if isinstance(dec, ast.Call):
+                    for kw in dec.keywords:
+                        if (
+                            kw.arg == "frozen"
+                            and isinstance(kw.value, ast.Constant)
+                            and kw.value.value is True
+                        ):
+                            frozen = True
+            if not is_dc:
+                yield self._f(
+                    node,
+                    f"step-core {node.name} is not a dataclass — it must be "
+                    "@dataclass(frozen=True) so instances hash by value as "
+                    "jit cache keys",
+                )
+            elif not frozen:
+                yield self._f(
+                    node,
+                    f"step-core {node.name} is a dataclass but not "
+                    "frozen=True — mutable cores break hashing and poison "
+                    "the jit-static cache",
+                )
+            yield from self._check_fields(node)
+
+    def _check_fields(self, cls: ast.ClassDef) -> Iterator[Finding]:
+        for stmt in cls.body:
+            ann = value = None
+            name = "?"
+            if isinstance(stmt, ast.AnnAssign) and isinstance(
+                stmt.target, ast.Name
+            ):
+                ann, value, name = stmt.annotation, stmt.value, stmt.target.id
+            elif isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and (
+                isinstance(stmt.targets[0], ast.Name)
+            ):
+                value, name = stmt.value, stmt.targets[0].id
+            else:
+                continue
+            if ann is not None:
+                bad = self._bad_annotation_names(ann)
+                if bad:
+                    yield self._f(
+                        stmt,
+                        f"field {cls.name}.{name} is annotated with "
+                        f"unhashable type {sorted(bad)} — core fields must "
+                        "be hashable scalars (arrays/containers go in the "
+                        "carry)",
+                    )
+            if value is not None:
+                why = self._mutable_default(value)
+                if why:
+                    yield self._f(
+                        stmt,
+                        f"field {cls.name}.{name} has a mutable default "
+                        f"({why}) — this makes the core unhashable and "
+                        "aliases state across instances",
+                    )
+
+    def _bad_annotation_names(self, ann: ast.AST) -> Set[str]:
+        if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+            try:
+                ann = ast.parse(ann.value, mode="eval").body
+            except SyntaxError:
+                return set()
+        found = set()
+        for n in ast.walk(ann):
+            nm = None
+            if isinstance(n, ast.Name):
+                nm = n.id
+            elif isinstance(n, ast.Attribute):
+                nm = n.attr
+            if nm in _UNHASHABLE_TYPE_NAMES:
+                found.add(nm)
+        return found
+
+    def _mutable_default(self, value: ast.AST) -> Optional[str]:
+        if isinstance(value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                              ast.DictComp, ast.SetComp)):
+            return "container literal"
+        if isinstance(value, ast.Call):
+            callee = dotted(value.func)
+            tail = last_part(callee)
+            if tail == "field":
+                for kw in value.keywords:
+                    if kw.arg == "default_factory" and last_part(
+                        dotted(kw.value)
+                    ) in _MUTABLE_FACTORIES:
+                        return f"field(default_factory={dotted(kw.value)})"
+                    if kw.arg == "default" and self._mutable_default(kw.value):
+                        return "field(default=<mutable>)"
+                return None
+            if tail in _MUTABLE_FACTORIES:
+                return f"{callee}(...)"
+        return None
+
+    def _f(self, node: ast.AST, msg: str) -> Finding:
+        return Finding(
+            rule=self.id, severity=self.severity, path="",
+            line=node.lineno, col=node.col_offset, message=msg,
+            hint=self.hint,
+        )
+
+
+# ---------------------------------------------------------------------------
+# SC002 — no Python control flow on traced values in step closures
+# ---------------------------------------------------------------------------
+
+
+class SC002:
+    id = "SC002"
+    severity = "error"
+    hint = (
+        "traced values have no concrete truth value inside jit — use "
+        "jnp.where / lax.select / lax.cond on the traced operand instead "
+        "of Python `if`/`while`/`assert`/bool()"
+    )
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(
+        self, tree: ast.AST, path: str, lines: Sequence[str]
+    ) -> Iterator[Finding]:
+        for fn, why in step_closures(tree).items():
+            tainted = propagate(fn, param_names(fn))
+            for node in ast.walk(fn):
+                test = None
+                kind = ""
+                if isinstance(node, (ast.If, ast.While)):
+                    test, kind = node.test, type(node).__name__.lower()
+                elif isinstance(node, ast.IfExp):
+                    test, kind = node.test, "conditional expression"
+                elif isinstance(node, ast.Assert):
+                    test, kind = node.test, "assert"
+                elif isinstance(node, ast.Call) and dotted(node.func) == "bool":
+                    if any(names_in(a) & tainted for a in node.args):
+                        yield self._f(
+                            node, fn, why,
+                            "bool() coercion of a traced value",
+                        )
+                    continue
+                if test is None:
+                    continue
+                hit = names_in(test) & tainted
+                if hit:
+                    yield self._f(
+                        node, fn, why,
+                        f"Python `{kind}` on traced value(s) "
+                        f"{sorted(hit)}",
+                    )
+
+    def _f(self, node, fn, why, what) -> Finding:
+        return Finding(
+            rule=self.id, severity=self.severity, path="",
+            line=node.lineno, col=node.col_offset,
+            message=(
+                f"{what} inside step closure `{fn.name}` ({why}) — "
+                "concretizes a tracer (errors under jit, or silently bakes "
+                "one branch into the trace)"
+            ),
+            hint=self.hint,
+        )
+
+
+# ---------------------------------------------------------------------------
+# SC003 — no host syncs in stepping loops / step closures / refill paths
+# ---------------------------------------------------------------------------
+
+_STEP_SURFACE_CLASSES = {"ScanDriver", "FileSource"}
+_STEP_SURFACE_FN = re.compile(r"^(_run_\w*|refill|recalibrate)$")
+_SYNC_ON_TAINTED = {
+    "np.asarray", "numpy.asarray", "np.array", "numpy.array",
+    "np.ascontiguousarray", "numpy.ascontiguousarray",
+    "int", "float",
+}
+_SYNC_ALWAYS = {
+    "jax.device_get", "device_get",
+    "jax.block_until_ready", "block_until_ready",
+}
+_DEVICE_PRODUCERS = re.compile(r"^(_run_scan\w*|run_chunk|_ring_write)$")
+_DEVICE_NAME_SEEDS = {"carry", "buf", "carry_buf"}
+
+
+class SC003:
+    id = "SC003"
+    severity = "error"
+    hint = (
+        "each host sync serializes dispatch and stalls the device — keep "
+        "the stepping loop async (materialize outputs after the loop) or "
+        "suppress with a justification if the sync is the design (e.g. a "
+        "termination check that must read `assigned`)"
+    )
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(
+        self, tree: ast.AST, path: str, lines: Sequence[str]
+    ) -> Iterator[Finding]:
+        closures = step_closures(tree)
+        for fn, why in closures.items():
+            tainted = propagate(fn, param_names(fn))
+            yield from self._scan_region(fn, tainted, f"step closure ({why})")
+        for fn, region, owner in self._stepping_regions(tree):
+            if fn in closures:
+                continue
+            tainted = self._device_taint(fn)
+            yield from self._scan_region(region, tainted, owner)
+
+    # -- scope discovery ----------------------------------------------------
+    def _stepping_regions(self, tree) -> Iterator[Tuple[ast.AST, ast.AST, str]]:
+        """(function, region-node, description) for every stepping-surface
+        region: loop bodies (tests included) of driver/source methods and
+        `_run_*`/`refill` functions, and whole `recalibrate` bodies."""
+        method_owner: Dict[ast.AST, str] = {}
+        for cls in ast.walk(tree):
+            if isinstance(cls, ast.ClassDef):
+                for item in cls.body:
+                    if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        method_owner[item] = cls.name
+        for fn in functions_in(tree):
+            owner = method_owner.get(fn, "")
+            surface = bool(_STEP_SURFACE_FN.match(fn.name)) or (
+                owner in _STEP_SURFACE_CLASSES
+            )
+            if not surface:
+                continue
+            where = f"{owner + '.' if owner else ''}{fn.name}"
+            if fn.name == "recalibrate":
+                yield fn, fn, f"budget recalibration `{where}`"
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.For, ast.While)):
+                    yield fn, node, f"stepping loop in `{where}`"
+
+    def _device_taint(self, fn: ast.AST) -> Set[str]:
+        seeds: Set[str] = set()
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            seeds |= param_names(fn) & _DEVICE_NAME_SEEDS
+            if fn.name == "recalibrate":
+                seeds |= param_names(fn)
+        for node in ast.walk(fn):
+            value = None
+            targets: List[ast.AST] = []
+            if isinstance(node, ast.Assign):
+                value, targets = node.value, node.targets
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                value, targets = node.value, [node.target]
+            if value is None:
+                continue
+            names = set().union(*(_target_names(t) for t in targets))
+            if names & _DEVICE_NAME_SEEDS:
+                seeds |= names & _DEVICE_NAME_SEEDS
+            producer = False
+            for call in ast.walk(value):
+                if isinstance(call, ast.Call) and _DEVICE_PRODUCERS.match(
+                    last_part(dotted(call.func)) or ""
+                ):
+                    producer = True
+            vname = dotted(value)
+            if vname and last_part(vname) == "carry":
+                producer = True  # e.g. `carry = self.carry`
+            if producer:
+                seeds |= names
+        return propagate(fn, seeds)
+
+    # -- sync detection -----------------------------------------------------
+    def _scan_region(
+        self, region: ast.AST, tainted: Set[str], where: str
+    ) -> Iterator[Finding]:
+        for node in ast.walk(region):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted(node.func)
+            # x.item() on a device value
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item"
+                and not node.args
+            ):
+                if (root_name(node.func.value) or "") in tainted:
+                    yield self._f(node, where, ".item() host round-trip")
+                continue
+            if callee in _SYNC_ALWAYS:
+                yield self._f(
+                    node, where, f"{callee}() forces a host sync"
+                )
+                continue
+            if callee in _SYNC_ON_TAINTED:
+                hit = set().union(*(names_in(a) for a in node.args)) & tainted
+                if hit:
+                    yield self._f(
+                        node, where,
+                        f"{callee}() on device value(s) {sorted(hit)}",
+                    )
+                continue
+            # jax.tree.map(np.asarray, device_tree) and tree_map variants
+            if last_part(callee) in {"map", "tree_map"} and node.args:
+                f0 = dotted(node.args[0])
+                if f0 in _SYNC_ON_TAINTED:
+                    hit = set().union(
+                        *(names_in(a) for a in node.args[1:])
+                    ) & tainted
+                    if hit:
+                        yield self._f(
+                            node, where,
+                            f"{callee}({f0}, ...) materializes device "
+                            f"tree(s) {sorted(hit)}",
+                        )
+
+    def _f(self, node, where, what) -> Finding:
+        return Finding(
+            rule=self.id, severity=self.severity, path="",
+            line=node.lineno, col=node.col_offset,
+            message=f"host sync in {where}: {what}",
+            hint=self.hint,
+        )
+
+
+# ---------------------------------------------------------------------------
+# SC004 — no legacy global RNG in src/repro/core/
+# ---------------------------------------------------------------------------
+
+_RNG_OK = {
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "MT19937", "Philox", "SFC64",
+}
+_STDLIB_RANDOM_LEGACY = {
+    "random", "randint", "randrange", "uniform", "normalvariate", "gauss",
+    "choice", "choices", "sample", "shuffle", "seed", "betavariate",
+    "expovariate", "getrandbits", "random_sample",
+}
+
+
+class SC004:
+    id = "SC004"
+    severity = "error"
+    hint = (
+        "tie noise and sampling must be reproducible and geometry-"
+        "independent: use a seeded np.random.default_rng(seed) Generator, "
+        "or (for per-row tie noise) the stateless counter hash "
+        "(baselines.tie_break_hash) so chunking cannot change assignments"
+    )
+
+    def applies_to(self, path: str) -> bool:
+        return "repro/core/" in path
+
+    def check(
+        self, tree: ast.AST, path: str, lines: Sequence[str]
+    ) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute):
+                base = dotted(node.value)
+                if base in {"np.random", "numpy.random"} and (
+                    node.attr not in _RNG_OK
+                ):
+                    yield self._f(
+                        node,
+                        f"legacy global-state RNG {base}.{node.attr} — "
+                        "hidden global state makes runs irreproducible and "
+                        "chunk-geometry-dependent",
+                    )
+                elif base == "random" and node.attr in _STDLIB_RANDOM_LEGACY:
+                    yield self._f(
+                        node,
+                        f"stdlib global RNG random.{node.attr} — same "
+                        "hidden-global-state hazard as np.random.*",
+                    )
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "numpy.random":
+                    for alias in node.names:
+                        if alias.name not in _RNG_OK:
+                            yield self._f(
+                                node,
+                                "importing legacy RNG "
+                                f"numpy.random.{alias.name}",
+                            )
+
+    def _f(self, node, msg) -> Finding:
+        return Finding(
+            rule=self.id, severity=self.severity, path="",
+            line=node.lineno, col=node.col_offset, message=msg,
+            hint=self.hint,
+        )
+
+
+# ---------------------------------------------------------------------------
+# SC005 — no read of a donated buffer after the donating call
+# ---------------------------------------------------------------------------
+
+
+class SC005:
+    id = "SC005"
+    severity = "error"
+    hint = (
+        "donate_argnums invalidates the argument buffer at the call — "
+        "rebind the result to the same name (`carry, out = f(carry)`), or "
+        "copy before donating if the old value is still needed"
+    )
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(
+        self, tree: ast.AST, path: str, lines: Sequence[str]
+    ) -> Iterator[Finding]:
+        donators = self._donating_functions(tree)
+        if not donators:
+            return
+        for fn in functions_in(tree):
+            if fn.name in donators:
+                continue  # inside the jitted fn itself everything is traced
+            findings: List[Finding] = []
+            self._exec_block(fn.body, {}, donators, findings)
+            yield from findings
+
+    def _donating_functions(self, tree) -> Dict[str, Tuple[int, ...]]:
+        out: Dict[str, Tuple[int, ...]] = {}
+        for fn in functions_in(tree):
+            for dec in fn.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                d = last_part(dotted(dec.func))
+                is_jit = False
+                if d == "partial" and dec.args and last_part(
+                    dotted(dec.args[0])
+                ) == "jit":
+                    is_jit = True
+                elif d == "jit":
+                    is_jit = True
+                if not is_jit:
+                    continue
+                for kw in dec.keywords:
+                    if kw.arg not in ("donate_argnums", "donate_argnames"):
+                        continue
+                    idxs = []
+                    for c in ast.walk(kw.value):
+                        if isinstance(c, ast.Constant) and isinstance(
+                            c.value, int
+                        ):
+                            idxs.append(c.value)
+                    if idxs:
+                        out[fn.name] = tuple(idxs)
+        return out
+
+    # -- dataflow-lite ------------------------------------------------------
+    def _exec_block(self, stmts, dead, donators, findings) -> None:
+        for st in stmts:
+            self._exec_stmt(st, dead, donators, findings)
+
+    def _exec_stmt(self, st, dead, donators, findings) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            return  # separate frame; analyzed on its own
+        if isinstance(st, ast.If):
+            self._check_loads(st.test, dead, findings)
+            d1, d2 = dict(dead), dict(dead)
+            self._exec_block(st.body, d1, donators, findings)
+            self._exec_block(st.orelse, d2, donators, findings)
+            dead.clear()
+            dead.update(d1)
+            dead.update(d2)
+            return
+        if isinstance(st, (ast.For, ast.While)):
+            # Two passes so a donation late in the body kills a read at the
+            # top of the next iteration.
+            seen: Set[Tuple[int, int, str]] = set()
+            for _ in range(2):
+                if isinstance(st, ast.While):
+                    self._check_loads(st.test, dead, findings, seen)
+                else:
+                    self._check_loads(st.iter, dead, findings, seen)
+                    for n in _target_names(st.target):
+                        dead.pop(n, None)
+                for s in st.body:
+                    self._exec_pass(s, dead, donators, findings, seen)
+            self._exec_block(st.orelse, dead, donators, findings)
+            return
+        if isinstance(st, (ast.With,)):
+            for item in st.items:
+                self._check_loads(item.context_expr, dead, findings)
+            self._exec_block(st.body, dead, donators, findings)
+            return
+        if isinstance(st, ast.Try):
+            self._exec_block(st.body, dead, donators, findings)
+            for h in st.handlers:
+                self._exec_block(h.body, dict(dead), donators, findings)
+            self._exec_block(st.finalbody, dead, donators, findings)
+            return
+        # simple statement: loads happen before the call donates, then the
+        # assignment targets revive.
+        self._check_loads(st, dead, findings)
+        for call in ast.walk(st):
+            if not isinstance(call, ast.Call):
+                continue
+            fname = last_part(dotted(call.func))
+            if fname not in donators:
+                continue
+            for idx in donators[fname]:
+                if idx < len(call.args):
+                    for n in names_in(call.args[idx]):
+                        dead[n] = fname
+        targets: List[ast.AST] = []
+        if isinstance(st, ast.Assign):
+            targets = st.targets
+        elif isinstance(st, (ast.AnnAssign, ast.AugAssign)):
+            targets = [st.target]
+        for t in targets:
+            for n in _target_names(t):
+                dead.pop(n, None)
+
+    def _exec_pass(self, st, dead, donators, findings, seen) -> None:
+        before = len(findings)
+        self._exec_stmt(st, dead, donators, findings)
+        kept = []
+        for f in findings[before:]:
+            key = (f.line, f.col, f.message)
+            if key not in seen:
+                seen.add(key)
+                kept.append(f)
+        findings[before:] = kept
+
+    def _check_loads(self, node, dead, findings, seen=None) -> None:
+        if not dead:
+            return
+        for n in ast.walk(node):
+            if (
+                isinstance(n, ast.Name)
+                and isinstance(n.ctx, ast.Load)
+                and n.id in dead
+            ):
+                f = Finding(
+                    rule=self.id, severity=self.severity, path="",
+                    line=n.lineno, col=n.col_offset,
+                    message=(
+                        f"`{n.id}` is read after being donated to "
+                        f"`{dead[n.id]}` (donate_argnums) — the buffer is "
+                        "invalidated at the call; reading it is undefined"
+                    ),
+                    hint=self.hint,
+                )
+                if seen is not None:
+                    key = (f.line, f.col, f.message)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                findings.append(f)
+
+
+RULES = (SC001(), SC002(), SC003(), SC004(), SC005())
