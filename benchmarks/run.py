@@ -55,6 +55,11 @@ def _summarize(results: dict) -> dict:
                     if row.get("scan_calls") else None
                 )
                 head["ring_rows"] = row.get("ring_rows")
+                head["partition_file_sync_wall_s"] = row.get("t_file_sync_s")
+                head["h2d_wait_s"] = row.get("h2d_wait_s")
+                head["prefetch_depth"] = row.get("prefetch_depth")
+                head["overlap_efficiency"] = row.get("overlap_efficiency")
+        head["restream_h2d_bytes"] = io.get("restream_h2d_bytes")
     for row in io.get("scan_vs_oracle", []):
         head.setdefault("scan_core_speedup", {})[row["strategy"]] = (
             row.get("speedup")

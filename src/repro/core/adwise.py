@@ -394,6 +394,7 @@ def partition_stream(
     n_chunks: int = 8,
     cost_per_score: Optional[float] = None,
     warm: Optional[WarmState] = None,
+    residency=None,
 ) -> PartitionResult:
     """Partition an edge stream with ADWISE (vectorized scan).
 
@@ -414,6 +415,9 @@ def partition_stream(
         the replica/degree tables and partition loads carry over, degrees are
         not re-counted, and — when ``warm.prev_assign`` is given — each
         edge's prior placement is revoked as it re-enters the window.
+      residency: optional :class:`repro.core.driver.StreamResidency` shared
+        across re-streaming passes over the SAME edges — later passes reuse
+        the resident device stream array and ship only their prev table.
 
     Returns: PartitionResult with assign (int32[m]) and stats.
     """
@@ -426,6 +430,7 @@ def partition_stream(
     source = ResidentSource(
         np.ascontiguousarray(edges, np.int32).reshape(1, m, 2),
         np.array([m], np.int64),
+        residency=residency,
     )
     drv = ScanDriver(
         source, cfg, num_vertices,
@@ -464,6 +469,7 @@ def partition_stream_batched(
     n_chunks: int = 8,
     cost_per_score: Optional[float] = None,
     warm: Optional[Sequence[WarmState]] = None,
+    residency=None,
 ) -> list[PartitionResult]:
     """Run ``z`` independent instance scans as ONE batched program.
 
@@ -497,6 +503,9 @@ def partition_stream_batched(
       warm: optional length-z sequence of per-instance :class:`WarmState`
         (re-streaming composed with spotlight). All instances must agree on
         whether ``prev_assign`` is provided.
+      residency: optional :class:`repro.core.driver.StreamResidency` shared
+        across re-streaming passes over the SAME streams — later passes
+        reuse the resident device array and ship only their prev table.
 
     Returns:
       A list of z :class:`PartitionResult`; entry i's ``assign`` covers
@@ -531,7 +540,7 @@ def partition_stream_batched(
         ]
 
     drv = ScanDriver(
-        ResidentSource(streams, m_per),
+        ResidentSource(streams, m_per, residency=residency),
         core if core is not None else cfg,
         num_vertices,
         allowed=allowed,

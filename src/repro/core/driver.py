@@ -60,17 +60,63 @@ jit-specializes on. A core implements:
 ``repro.core.restream`` the 2PS-L phase-2 core — all four ride the very
 same driver, sources, and h2d accounting.
 
+The double-buffer refill pipeline (prefetch)
+--------------------------------------------
+With ``prefetch >= 1`` (the default — ``prefetch=0`` is the synchronous
+bit-parity escape hatch, also reachable via the ``ADWISE_PREFETCH`` env
+var), :class:`FileSource` runs a two-stage pipeline:
+
+1. A host **read-ahead worker** (:class:`_ReadAhead`: one daemon thread +
+   a bounded staging queue) reads the stream — and, on re-streaming
+   passes, the prior placements — in ``Rq``-row blocks ahead of
+   consumption, at most ``prefetch * max_span`` rows past what the scan
+   has taken. Refill spans are always whole multiples of ``Rq`` (plus one
+   ragged tail ending exactly at ``m_i``), so staged blocks align with
+   span consumption exactly — the queue never splits a block.
+2. After dispatching scan call k, the driver issues a **speculative
+   refill** *before* syncing the ``assigned`` counter, so the
+   ``_ring_write`` h2d for span k+1 is enqueued while scan k is still in
+   flight. The safe cursor proxy is the guaranteed-progress lower bound
+   ``lb = min(assigned_k + S, m)`` (every scan step with a non-empty
+   window assigns >= 1 edge — the same bound that proves termination):
+   the slots a speculative write recycles held rows ``< lb``, and the
+   next scan starts at ``cursor >= assigned_{k+1} >= lb``, so it can
+   never read a recycled slot. Because ``_run_scan_ring`` *donates* the
+   ring, XLA orders the write after the in-flight scan — the pipeline
+   only moves *when* spans are staged and shipped, never *what* they
+   contain, which is why bit-parity is geometry-independent.
+
+Cross-pass shared-buffer contract: after a completed ring pass the driver
+exposes a :class:`RingHandle` (the final donated ring + upload high-water
+marks). A re-streaming pass may adopt it (``FileSource(resume=...)``):
+instances whose whole stream fit in the ring without wrapping
+(``m_i <= B``) keep their ``uv`` rows device-resident and ship only the
+4 B/row ``prev`` placements — restream h2d drops from ``8m + 12m`` bytes
+per extra pass to ``8m + 4m``. Wrapped instances fall back to the full
+re-ship. The in-memory analogue is :class:`StreamResidency`: re-stream
+passes over a :class:`ResidentSource` reuse pass p's uploaded device
+stream array and ship only the new ``prev`` table.
+
 Host→device accounting: the driver counts every stream-buffer byte it ships
-(``h2d_rows`` / ``h2d_bytes`` / ``h2d_calls``), callers surface the counters
-in partition stats, and ``repro.engine.latency_model.partition_latency``
-bills them against :data:`~repro.engine.latency_model.H2D_BW_BPS`.
+(``h2d_rows`` / ``h2d_bytes`` / ``h2d_calls``), the measured refill stall
+(``h2d_wait_s``: wall spent in non-speculative refills, i.e. staging work
+the device had to wait for) and the pipeline hit rate
+(``spans_prestaged`` / ``spans_missed``; their sum is ``refill_spans``).
+Callers surface the counters in partition stats, and
+``repro.engine.latency_model.partition_latency`` bills them — against
+:data:`~repro.engine.latency_model.H2D_BW_BPS` when only modeled traffic
+is available, overlap-aware (``max(io, h2d, compute)``) when a prefetch
+depth and measured stalls are present.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import os
+import threading
 import time
 from functools import partial
-from typing import Any, Callable, List, NamedTuple, Optional, Sequence
+from typing import Any, Callable, Deque, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,11 +133,27 @@ __all__ = [
     "ResidentSource",
     "FileSource",
     "RingBuf",
+    "RingHandle",
+    "StreamResidency",
     "ScanDriver",
     "DriveResult",
     "resolve_backend",
+    "resolve_prefetch",
     "scan_compile_counts",
+    "PREFETCH_ENV",
 ]
+
+PREFETCH_ENV = "ADWISE_PREFETCH"
+
+
+def resolve_prefetch(prefetch: Optional[int] = None) -> int:
+    """Effective read-ahead depth: explicit argument > ``ADWISE_PREFETCH``
+    env var > default 2. ``0`` selects the synchronous bit-parity path
+    (no worker thread, every span read inline between scan calls)."""
+    if prefetch is None:
+        raw = os.environ.get(PREFETCH_ENV, "").strip()
+        prefetch = int(raw) if raw else 2
+    return max(0, int(prefetch))
 
 
 def resolve_backend(backend: str, z: int) -> tuple[str, int]:
@@ -370,7 +432,9 @@ def _run_scan_ring(
     return batched(carry_buf, m_real, allowed, cap)
 
 
-@partial(jax.jit, donate_argnums=(0,), static_argnames=("with_prev",))
+@partial(
+    jax.jit, donate_argnums=(0,), static_argnames=("with_uv", "with_prev")
+)
 def _ring_write(
     buf: RingBuf,
     uv_rows: jax.Array,  # (c, 2) int32 — the ONLY stream bytes shipped h2d
@@ -379,10 +443,15 @@ def _ring_write(
     slot: jax.Array,  # () int32 — c never wraps past B (spans pre-split)
     *,
     with_prev: bool,
+    with_uv: bool = True,  # False on cross-pass resumed instances: uv rows
+    # are already device-resident, only prev ships (dummy empty uv_rows)
 ) -> RingBuf:
-    uv = jax.lax.dynamic_update_slice(
-        buf.uv, uv_rows[None], (instance, slot, jnp.int32(0))
-    )
+    if with_uv:
+        uv = jax.lax.dynamic_update_slice(
+            buf.uv, uv_rows[None], (instance, slot, jnp.int32(0))
+        )
+    else:
+        uv = buf.uv
     if with_prev:
         prev = jax.lax.dynamic_update_slice(
             buf.prev, prev_rows[None], (instance, slot)
@@ -420,6 +489,208 @@ def scan_compile_counts() -> dict:
 # ----------------------------------------------------------------------------
 
 
+class RingHandle(NamedTuple):
+    """Cross-pass hand-off of a completed ring pass (file mode).
+
+    Produced by :class:`ScanDriver` after a ring drive finishes; a
+    re-streaming pass with identical geometry may adopt it via
+    ``FileSource(resume=...)`` so instances whose whole stream fit in the
+    ring without wrapping keep their uv rows device-resident and ship only
+    prev placements. The handle is single-use: the adopting pass donates
+    the buffer back into its own scan calls.
+    """
+
+    buf: RingBuf  # final donated ring (valid until the next pass donates it)
+    hi: np.ndarray  # (z,) per-instance upload high-water marks at pass end
+    B: int  # ring rows per instance
+    z: int
+    m_per: np.ndarray  # (z,) real stream lengths the pass ran over
+
+
+class StreamResidency:
+    """Cross-pass device residency for resident (in-memory) sources.
+
+    A re-streaming caller creates one holder and threads it through every
+    pass; pass p publishes its uploaded ``(z, per, 2)`` device stream array
+    here and pass p+1 reuses it, shipping only the new ``prev`` table.
+    Caller contract: every pass must stream the SAME edge content in the
+    same instance layout — only the shape is cheap to verify, so the holder
+    must never be shared across different streams.
+    """
+
+    __slots__ = ("streams", "shape")
+
+    def __init__(self) -> None:
+        self.streams: Optional[jax.Array] = None
+        self.shape: Optional[Tuple[int, ...]] = None
+
+    def publish(self, streams: jax.Array, shape: Tuple[int, ...]) -> None:
+        self.streams = streams
+        self.shape = shape
+
+    def lookup(self, shape: Tuple[int, ...]) -> Optional[jax.Array]:
+        if self.streams is not None and self.shape == shape:
+            return self.streams
+        return None
+
+
+# One staged block: (start_row, row_count, uv rows or None, prev rows or
+# None). uv is None for cross-pass resumed instances (prev-only refills).
+_Block = Tuple[int, int, Optional[np.ndarray], Optional[np.ndarray]]
+
+
+class _ReadAhead:
+    """Host read-ahead worker: stage stream/prev rows while the scan runs.
+
+    One daemon thread services all z instances round-robin, reading
+    ``Rq``-row blocks (final ragged tail ends exactly at ``m_i``) into a
+    bounded per-instance staging deque, at most ``depth_rows`` rows past
+    what :meth:`take` has consumed. Every refill span is a whole number of
+    Rq blocks (or ends exactly at ``m_i`` — see the FileSource sizing), so
+    ``take`` always pops whole blocks and never splits one.
+
+    Disk reads happen OUTSIDE the lock (the lock only guards the deques and
+    the progress counters); worker exceptions are captured and re-raised in
+    the consumer's next ``take``. ``close`` is idempotent and joins the
+    thread — safe on every exception path.
+    """
+
+    def __init__(self, source: "FileSource", depth_rows: int) -> None:
+        self._src = source
+        self._depth = int(depth_rows)
+        self._cv = threading.Condition()
+        z = source.z
+        self._staged: List[Deque[_Block]] = [
+            collections.deque() for _ in range(z)
+        ]
+        # Worker-side read position and consumer-side pop position per
+        # instance; both only ever advance.
+        self._next = np.zeros((z,), np.int64)
+        self._taken = np.zeros((z,), np.int64)
+        self._exc: Optional[BaseException] = None
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._loop, name="adwise-readahead", daemon=True
+        )
+        self._thread.start()
+
+    # -- worker side -------------------------------------------------------
+    def _pick(self) -> Optional[int]:
+        """Least-staged eligible instance, or None (caller holds the lock)."""
+        src = self._src
+        best, best_lag = None, 0
+        for i in range(src.z):
+            if self._next[i] >= src.m_per[i]:
+                continue  # instance fully staged
+            lag = int(self._next[i] - self._taken[i])
+            if lag >= self._depth:
+                continue  # at the bound: wait for the consumer
+            if best is None or lag < best_lag:
+                best, best_lag = i, lag
+        return best
+
+    def _loop(self) -> None:
+        src = self._src
+        try:
+            while True:
+                with self._cv:
+                    while True:
+                        if self._stop:
+                            return
+                        i = self._pick()
+                        if i is not None:
+                            break
+                        if (self._next >= src.m_per).all():
+                            return  # everything staged; worker retires
+                        self._cv.wait()
+                    start = int(self._next[i])
+                    c = min(src.Rq, int(src.m_per[i]) - start)
+                # Reads outside the lock: the consumer keeps popping while
+                # the worker is on disk.
+                uv: Optional[np.ndarray] = None
+                if not src.uv_resident[i]:
+                    uv = np.ascontiguousarray(
+                        src.readers[i].read(start, c), np.int32
+                    )
+                    assert len(uv) == c, (
+                        f"instance {i}: reader returned {len(uv)} of {c} "
+                        f"rows at offset {start}"
+                    )
+                prev: Optional[np.ndarray] = None
+                if src.prev_read is not None:
+                    prev = np.ascontiguousarray(
+                        src.prev_read[i](start, c), np.int32
+                    )
+                    assert len(prev) == c, (
+                        f"instance {i}: prev_read returned {len(prev)} of "
+                        f"{c} rows at offset {start}"
+                    )
+                with self._cv:
+                    self._staged[i].append((start, c, uv, prev))
+                    self._next[i] = start + c
+                    self._cv.notify_all()
+        except BaseException as e:  # surfaced via take(); thread must not die silently
+            with self._cv:
+                self._exc = e
+                self._cv.notify_all()
+
+    # -- consumer side -----------------------------------------------------
+    def take(
+        self, i: int, start: int, count: int
+    ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray], bool]:
+        """Pop ``count`` staged rows of instance i beginning at ``start``.
+
+        Returns ``(uv_rows, prev_rows, waited)`` — ``waited`` is True when
+        the consumer had to block on the worker (a pipeline miss).
+        """
+        end = start + count
+        uv_parts: List[np.ndarray] = []
+        prev_parts: List[np.ndarray] = []
+        waited = False
+        with self._cv:
+            assert start == int(self._taken[i]), (
+                f"instance {i}: take at {start}, staged position is "
+                f"{int(self._taken[i])}"
+            )
+            while self._taken[i] < end:
+                if self._exc is not None:
+                    raise RuntimeError(
+                        "read-ahead worker failed"
+                    ) from self._exc
+                if self._staged[i]:
+                    b_start, c, uv, prev = self._staged[i].popleft()
+                    assert b_start == int(self._taken[i])
+                    assert b_start + c <= end, (
+                        f"instance {i}: staged block [{b_start}, "
+                        f"{b_start + c}) straddles take end {end} — "
+                        "span/block alignment broken"
+                    )
+                    if uv is not None:
+                        uv_parts.append(uv)
+                    if prev is not None:
+                        prev_parts.append(prev)
+                    self._taken[i] = b_start + c
+                    self._cv.notify_all()  # freed depth: wake the worker
+                else:
+                    waited = True
+                    self._cv.wait()
+        uv_all = (
+            uv_parts[0] if len(uv_parts) == 1
+            else np.concatenate(uv_parts) if uv_parts else None
+        )
+        prev_all = (
+            prev_parts[0] if len(prev_parts) == 1
+            else np.concatenate(prev_parts) if prev_parts else None
+        )
+        return uv_all, prev_all, waited
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=30.0)
+
+
 class ResidentSource:
     """Whole stream resident on device: ONE upload for the entire run.
 
@@ -427,11 +698,22 @@ class ResidentSource:
     (:meth:`repro.graph.stream.EdgeStream.split_padded`); ``m_per[i]`` is the
     real (un-padded) length of instance i's stream. z == 1 wraps a plain
     (m, 2) stream as (1, m, 2).
+
+    ``residency`` (optional :class:`StreamResidency`) lets re-streaming
+    passes over the same stream reuse the previous pass's uploaded device
+    array: when the holder already has a matching-shape array, the driver
+    skips the stream upload and ships only the new ``prev`` table.
     """
 
     resident = True
 
-    def __init__(self, streams: np.ndarray, m_per: np.ndarray) -> None:
+    def __init__(
+        self,
+        streams: np.ndarray,
+        m_per: np.ndarray,
+        *,
+        residency: Optional[StreamResidency] = None,
+    ) -> None:
         streams = np.ascontiguousarray(streams, np.int32)
         assert streams.ndim == 3 and streams.shape[2] == 2, streams.shape
         self.z, self.per = int(streams.shape[0]), int(streams.shape[1])
@@ -439,6 +721,7 @@ class ResidentSource:
         assert self.m_per.shape == (self.z,)
         assert (self.m_per <= self.per).all()
         self.streams = streams
+        self.residency = residency
 
     @property
     def upload_rows(self) -> int:
@@ -471,6 +754,14 @@ class FileSource:
     Invariants (checked): ``cursor ≤ hi ≤ cursor + B`` and ``hi`` advances
     monotonically — every stream row is read from disk and shipped to the
     device exactly once per pass.
+
+    ``prefetch >= 1`` enables the double-buffer pipeline (module docstring):
+    a :class:`_ReadAhead` worker stages up to ``prefetch * max_span`` rows
+    ahead of consumption, and the driver issues a speculative refill before
+    its per-call counter sync. ``prefetch=0`` is the synchronous bit-parity
+    path. ``resume`` adopts a previous pass's :class:`RingHandle` —
+    matching-geometry instances that never wrapped ship prev-only spans
+    (4 B/row instead of 12 B/row).
     """
 
     resident = False
@@ -483,6 +774,8 @@ class FileSource:
         cfg: Optional[AdwiseConfig] = None,
         core: Optional[StepCore] = None,
         prev_read: Optional[List[Callable[[int, int], np.ndarray]]] = None,
+        prefetch: Optional[int] = None,
+        resume: Optional[RingHandle] = None,
     ) -> None:
         self.readers = list(readers)
         self.z = len(self.readers)
@@ -508,23 +801,98 @@ class FileSource:
         self.h2d_rows = 0
         self.h2d_bytes = 0
         self.h2d_calls = 0
+        self.h2d_wait_s = 0.0
+        self.refill_spans = 0
+        self.spans_prestaged = 0
+        self.spans_missed = 0
+        self.prefetch = resolve_prefetch(prefetch)
+        # uv_resident[i]: instance i's uv rows survive from the adopted
+        # previous-pass ring — refills ship prev-only spans.
+        self.uv_resident = np.zeros((self.z,), bool)
+        self._resume_buf: Optional[RingBuf] = None
+        if resume is not None:
+            self._adopt(resume)
+        self._worker: Optional[_ReadAhead] = None
+        self._worker_started = False
+
+    def _adopt(self, resume: RingHandle) -> None:
+        """Adopt a previous pass's ring under the cross-pass contract:
+        same geometry (B, z, per-instance m), and only instances whose
+        whole stream fit without wrapping (``m_i <= B`` and the pass
+        uploaded all of it) keep uv residency."""
+        assert self.prev_read is not None, (
+            "resuming a ring without prev_read would re-run the same pass; "
+            "cross-pass adoption is for re-streaming revocation only"
+        )
+        if (
+            resume.B != self.B
+            or resume.z != self.z
+            or not (np.asarray(resume.m_per) == self.m_per).all()
+        ):
+            return  # geometry changed (re-chunked): full re-ship fallback
+        fits = (self.m_per <= resume.B) & (np.asarray(resume.hi) >= self.m_per)
+        if fits.any():
+            self.uv_resident = fits
+            self._resume_buf = resume.buf
 
     def alloc(self) -> RingBuf:
-        """Fresh device ring: uv zeros, prev all -1 (= no prior placement —
-        0 would be a real partition id and would trigger false revocation)."""
+        """Device ring for this pass: the adopted previous-pass buffer when
+        resuming (single-use — it is donated back into this pass's scan
+        calls), else a fresh one: uv zeros, prev all -1 (= no prior
+        placement — 0 would be a real partition id and would trigger false
+        revocation). Stale prev rows in an adopted ring are harmless: hi
+        restarts at 0, so every row's prev is re-shipped before the cursor
+        can reach it."""
+        if self._resume_buf is not None:
+            buf = self._resume_buf
+            self._resume_buf = None
+            return buf
         return RingBuf(
             uv=jnp.zeros((self.z, self.B, 2), jnp.int32),
             prev=jnp.full((self.z, self.B), -1, jnp.int32),
         )
 
-    def refill(self, buf: RingBuf, cursors: np.ndarray) -> RingBuf:
+    def _fetch(
+        self, i: int, start: int, c: int
+    ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray], bool]:
+        """One span's host rows: from the staging queue when pipelined,
+        read inline otherwise. Lazily starts the worker so sizing-only
+        FileSource uses never spawn a thread."""
+        if self.prefetch > 0 and not self._worker_started:
+            self._worker_started = True
+            self._worker = _ReadAhead(
+                self, max(1, self.prefetch) * self.max_span
+            )
+        if self._worker is not None:
+            return self._worker.take(i, start, c)
+        uv: Optional[np.ndarray] = None
+        if not self.uv_resident[i]:
+            uv = np.ascontiguousarray(self.readers[i].read(start, c), np.int32)
+            assert len(uv) == c, (
+                f"instance {i}: reader returned {len(uv)} of {c} rows "
+                f"at offset {start}"
+            )
+        prev: Optional[np.ndarray] = None
+        if self.prev_read is not None:
+            prev = np.ascontiguousarray(self.prev_read[i](start, c), np.int32)
+        # The synchronous path stalls on every span by construction.
+        return uv, prev, True
+
+    def refill(
+        self, buf: RingBuf, cursors: np.ndarray, *, speculative: bool = False
+    ) -> RingBuf:
         """Ship the new tail rows for every instance; returns the new ring.
 
         ``cursors[i]`` is instance i's scan cursor — rows behind it are dead
-        and their slots are free to overwrite.
+        and their slots are free to overwrite. A ``speculative`` refill
+        passes the guaranteed-progress lower bound instead of the true
+        cursor (see the module docstring) and is excluded from the measured
+        ``h2d_wait_s`` stall: its staging work overlaps the in-flight scan.
         """
         self.h2d_calls += 1
+        t_start = 0.0 if speculative else time.perf_counter()
         with_prev = self.prev_read is not None
+        dummy_uv = np.zeros((0, 2), np.int32)
         dummy_prev = np.zeros((0,), np.int32)
         for i in range(self.z):
             cur = int(cursors[i])
@@ -544,34 +912,49 @@ class FileSource:
                 # ahead of the cursor even after flooring.
                 span_total -= span_total % self.Rq
             end = hi + span_total
+            ship_uv = not bool(self.uv_resident[i])
             while hi < end:
                 slot = hi % self.B
                 # Never wrap inside a write; never exceed the chunk bound.
                 c = min(end - hi, self.B - slot, self.max_span)
-                rows = self.readers[i].read(hi, c)
-                assert len(rows) == c, (
-                    f"instance {i}: reader returned {len(rows)} of {c} rows "
-                    f"at offset {hi}"
-                )
-                if self.prev_read is not None:
-                    prows = np.ascontiguousarray(
-                        self.prev_read[i](hi, c), np.int32
-                    )
+                rows, prows, waited = self._fetch(i, hi, c)
+                self.refill_spans += 1
+                if waited:
+                    self.spans_missed += 1
                 else:
-                    prows = dummy_prev
+                    self.spans_prestaged += 1
                 buf = _ring_write(
                     buf,
-                    np.ascontiguousarray(rows, np.int32),
-                    prows,
+                    rows if rows is not None else dummy_uv,
+                    prows if prows is not None else dummy_prev,
                     np.int32(i),
                     np.int32(slot),
                     with_prev=with_prev,
+                    with_uv=ship_uv,
                 )
-                self.h2d_rows += c
-                self.h2d_bytes += c * 8 + (c * 4 if with_prev else 0)
+                if ship_uv:
+                    self.h2d_rows += c
+                    self.h2d_bytes += c * 8
+                if with_prev:
+                    self.h2d_bytes += c * 4
                 hi += c
             self.hi[i] = hi
+        if not speculative:
+            self.h2d_wait_s += time.perf_counter() - t_start
         return buf
+
+    def close(self) -> None:
+        """Join the read-ahead worker (idempotent; safe on exception paths).
+        After close, further refills fall back to synchronous reads."""
+        if self._worker is not None:
+            self._worker.close()
+            self._worker = None
+
+    def __enter__(self) -> "FileSource":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
 
 
 # ----------------------------------------------------------------------------
@@ -604,6 +987,12 @@ class DriveResult(NamedTuple):
     h2d_bytes: int
     buffer_rows: int  # ring B (file mode) / per (resident mode)
     scan_steps_per_call: int
+    # Refill-pipeline accounting (file mode; zeros for resident sources).
+    h2d_wait_s: float = 0.0  # wall spent in non-speculative (blocking) refills
+    prefetch_depth: int = 0
+    refill_spans: int = 0
+    spans_prestaged: int = 0
+    spans_missed: int = 0
 
 
 class ScanDriver:
@@ -703,6 +1092,9 @@ class ScanDriver:
         self._allowed_j = jnp.asarray(allowed_np)
         self._caps_j = jnp.asarray(caps)
         self._prev_np = prev_np
+        # Set after a completed ring drive: the cross-pass hand-off a
+        # re-streaming pass may adopt (FileSource(resume=...)).
+        self.ring_handle: Optional[RingHandle] = None
 
     # -- budget recalibration (shared by both modes) -----------------------
     def _recalibrate(self, carry: Any, t0: float) -> Any:
@@ -727,10 +1119,24 @@ class ScanDriver:
 
         prev_np = self._prev_np
         assert prev_np is not None  # resident mode always builds prev table
-        streams_j = jnp.asarray(src.streams)
+        residency: Optional[StreamResidency] = getattr(src, "residency", None)
+        resident_streams = (
+            residency.lookup(src.streams.shape) if residency is not None
+            else None
+        )
+        if resident_streams is not None:
+            # Cross-pass residency: the stream array is already on device
+            # from the previous pass — only the new prev table ships.
+            streams_j = resident_streams
+            h2d_rows = 0
+            h2d_bytes = prev_np.size * 4
+        else:
+            streams_j = jnp.asarray(src.streams)
+            h2d_rows = src.upload_rows
+            h2d_bytes = src.upload_rows * 8 + prev_np.size * 4
+        if residency is not None:
+            residency.publish(streams_j, src.streams.shape)
         prev_j = jnp.asarray(prev_np)
-        h2d_rows = src.upload_rows
-        h2d_bytes = src.upload_rows * 8 + prev_np.size * 4
         carry = self.carry
 
         def run_chunk(carry: Any) -> Any:
@@ -778,50 +1184,78 @@ class ScanDriver:
         z = self.z
         m_max = int(self.m_per.max())
         S = src.scan_steps
-        buf = src.alloc()
+        pipelined = src.prefetch > 0
         carry = self.carry
-        t0 = time.perf_counter()
         iters = 0
         # Every step with a non-empty window assigns >= 1 edge per instance
         # (capacity caps sum to > m, so an allowed partition below cap always
         # exists), so total steps are bounded by m_max plus the window
         # build-up.
         max_iters = -(-(m_max + core.window_rows) // S) + 8
-        while True:
-            # staticcheck: disable=SC003 ring-mode termination: ONE assigned-counter sync per scan call, amortized over S steps
-            assigned = np.asarray(carry.assigned)
-            if (assigned >= self.m_per).all():
-                break
-            iters += 1
-            assert iters <= max_iters, (
-                f"streaming scan failed to converge: {assigned} of "
-                f"{self.m_per} assigned after {iters} calls"
+        # Host mirrors of the synced counters, one sync per scan call. The
+        # loop body is ordered for the pipeline: top-up refill (true cursor)
+        # -> dispatch scan k -> SPECULATIVE refill for call k+1 (the
+        # guaranteed-progress lower bound, enqueued before the sync so the
+        # h2d overlaps scan k) -> the one assigned/cursor sync -> emit.
+        # At prefetch=0 the speculative refill is skipped and the sequence
+        # of refills/scans is identical to the classic synchronous loop.
+        assigned = np.zeros((z,), np.int64)
+        cursors = np.zeros((z,), np.int64)
+        try:
+            buf = src.alloc()
+            t0 = time.perf_counter()
+            while not (assigned >= self.m_per).all():
+                iters += 1
+                assert iters <= max_iters, (
+                    f"streaming scan failed to converge: {assigned} of "
+                    f"{self.m_per} assigned after {iters} calls"
+                )
+                buf = src.refill(buf, cursors)
+                (carry, buf), out = _run_scan_ring(
+                    (carry, buf), self._m_real_j, self._allowed_j,
+                    self._caps_j,
+                    core=core, n_steps=S, n_shards=self.n_shards,
+                )
+                if pipelined:
+                    # Safe without syncing: the in-flight call advances
+                    # every unfinished instance by >= S assignments, so rows
+                    # below lb are dead for every future scan; the donated
+                    # ring orders this write after the in-flight scan.
+                    lb = np.minimum(assigned + S, self.m_per)
+                    buf = src.refill(buf, lb, speculative=True)
+                # staticcheck: disable=SC003 ring-mode termination: ONE assigned-counter sync per scan call, amortized over S steps
+                assigned = np.asarray(carry.assigned).astype(np.int64)
+                # staticcheck: disable=SC003 next refill needs the host cursor to size disk reads; same single sync point per call
+                cursors = np.asarray(carry.cursor).astype(np.int64)
+                # staticcheck: disable=SC003 file mode streams placements to on_assign to stay O(chunk) — per-call materialization is the design
+                sidx = np.asarray(out.sidx).reshape(z, -1)
+                # staticcheck: disable=SC003 same spill materialization as sidx above
+                pout = np.asarray(out.p).reshape(z, -1)
+                for i in range(z):
+                    live = sidx[i] >= 0
+                    if live.any():
+                        on_assign(
+                            i, sidx[i][live].astype(np.int64), pout[i][live]
+                        )
+                carry = self._recalibrate(carry, t0)
+            assert (cursors <= src.hi).all(), (
+                f"scan cursors {cursors} overran uploaded rows {src.hi}"
             )
-            # staticcheck: disable=SC003 refill needs the host cursor to size disk reads; same single sync point per call
-            buf = src.refill(buf, np.asarray(carry.cursor))
-            (carry, buf), out = _run_scan_ring(
-                (carry, buf), self._m_real_j, self._allowed_j, self._caps_j,
-                core=core, n_steps=S, n_shards=self.n_shards,
-            )
-            # staticcheck: disable=SC003 file mode streams placements to on_assign to stay O(chunk) — per-call materialization is the design
-            sidx = np.asarray(out.sidx).reshape(z, -1)
-            # staticcheck: disable=SC003 same spill materialization as sidx above
-            pout = np.asarray(out.p).reshape(z, -1)
-            for i in range(z):
-                live = sidx[i] >= 0
-                if live.any():
-                    on_assign(i, sidx[i][live].astype(np.int64), pout[i][live])
-            carry = self._recalibrate(carry, t0)
-        cursors = np.asarray(carry.cursor)
-        assert (cursors <= src.hi).all(), (
-            f"scan cursors {cursors} overran uploaded rows {src.hi}"
-        )
-        wall = time.perf_counter() - t0
+            wall = time.perf_counter() - t0
+        finally:
+            src.close()
         self.carry = carry
+        self.ring_handle = RingHandle(
+            buf=buf, hi=src.hi.copy(), B=src.B, z=z, m_per=self.m_per.copy()
+        )
         return self._result(
             carry, wall, sidx=None, p=None, w_trace=None,
             scan_calls=iters, h2d_rows=src.h2d_rows, h2d_bytes=src.h2d_bytes,
             buffer_rows=src.B, steps_per_call=S,
+            h2d_wait_s=src.h2d_wait_s, prefetch_depth=src.prefetch,
+            refill_spans=src.refill_spans,
+            spans_prestaged=src.spans_prestaged,
+            spans_missed=src.spans_missed,
         )
 
     def _result(
@@ -837,6 +1271,11 @@ class ScanDriver:
         h2d_bytes: int,
         buffer_rows: int,
         steps_per_call: int,
+        h2d_wait_s: float = 0.0,
+        prefetch_depth: int = 0,
+        refill_spans: int = 0,
+        spans_prestaged: int = 0,
+        spans_missed: int = 0,
     ) -> DriveResult:
         cnt = self.core.counters(carry)
         return DriveResult(
@@ -857,6 +1296,11 @@ class ScanDriver:
             h2d_bytes=int(h2d_bytes),
             buffer_rows=int(buffer_rows),
             scan_steps_per_call=int(steps_per_call),
+            h2d_wait_s=float(h2d_wait_s),
+            prefetch_depth=int(prefetch_depth),
+            refill_spans=int(refill_spans),
+            spans_prestaged=int(spans_prestaged),
+            spans_missed=int(spans_missed),
         )
 
     def run(
@@ -897,4 +1341,9 @@ class ScanDriver:
             h2d_bytes=res.h2d_bytes,
             buffer_rows=res.buffer_rows,
             scan_steps_per_call=res.scan_steps_per_call,
+            h2d_wait_s=res.h2d_wait_s,
+            prefetch_depth=res.prefetch_depth,
+            refill_spans=res.refill_spans,
+            spans_prestaged=res.spans_prestaged,
+            spans_missed=res.spans_missed,
         )

@@ -57,7 +57,7 @@ import numpy as np
 
 from repro.core import baselines
 from repro.core.adwise import WarmState
-from repro.core.driver import FileSource, ScanDriver
+from repro.core.driver import FileSource, RingHandle, ScanDriver
 from repro.core.restream import TpslCore, VertexClusteringState, _pack_clusters
 from repro.core.spotlight import _SPOTLIGHT_INCOMPATIBLE, spread_mask
 from repro.core.types import AdwiseConfig, PartitionResult
@@ -166,7 +166,9 @@ def _drive_core(
     warm: Optional[List[WarmState]] = None,
     prev_read: Optional[List[Callable[[int, int], np.ndarray]]] = None,
     backend: str = "auto",
-) -> List[dict]:
+    prefetch: Optional[int] = None,
+    resume: Optional[RingHandle] = None,
+) -> tuple[List[dict], Optional[RingHandle]]:
     """Feed z instance streams through any step-core's scan in a bounded
     device-resident ring buffer — a thin caller of
     :class:`repro.core.driver.ScanDriver` over a
@@ -175,20 +177,22 @@ def _drive_core(
     ``readers[i]`` is instance i's (locally addressed) stream;
     ``write_assign(i, local_idx, p)`` receives finished placements.
     ``prev_read[i](start, count)`` supplies the prior pass's placements for
-    buffered re-streaming revocation. Returns per-instance stats dicts.
+    buffered re-streaming revocation; ``resume`` adopts the previous pass's
+    ring under the cross-pass shared-buffer contract. Returns per-instance
+    stats dicts plus this pass's :class:`RingHandle` for the next one.
     """
     z = len(readers)
     m_per = np.array([r.num_edges for r in readers], dtype=np.int64)
     m_max = int(m_per.max()) if z else 0
     if m_max == 0:
         return [dict(k=core.k, score_rows=0, assigned=0, unassigned=0)
-                for _ in range(z)]
+                for _ in range(z)], None
 
     is_cfg = isinstance(core, AdwiseConfig)
     source = FileSource(
         readers, chunk_edges=chunk_edges,
         cfg=core if is_cfg else None, core=None if is_cfg else core,
-        prev_read=prev_read,
+        prev_read=prev_read, prefetch=prefetch, resume=resume,
     )
     drv = ScanDriver(source, core, num_vertices, allowed=allowed, warm=warm,
                      backend=backend)
@@ -209,7 +213,7 @@ def _drive_core(
                 unassigned=0,
             )
         )
-    return stats
+    return stats, drv.ring_handle
 
 
 # ----------------------------------------------------------------------------
@@ -286,6 +290,7 @@ def _run_two_phase_chunks(
     variant: str = "2ps",
     allowed: Optional[np.ndarray] = None,  # (z, k) bool
     backend: str = "auto",
+    prefetch: Optional[int] = None,
     cluster_slack: float = 1.25,
     **cfg,
 ) -> List[dict]:
@@ -337,9 +342,10 @@ def _run_two_phase_chunks(
             cap_slack=float(cfg.pop("cap_slack", 1.15)),
         )
         assert not cfg, cfg  # partition_file validated the keys
-    per_stats = _drive_core(
+    per_stats, _ = _drive_core(
         readers, num_vertices, core, write_assign=write_assign,
         chunk_edges=chunk_edges, allowed=allowed, warm=warms, backend=backend,
+        prefetch=prefetch,
     )
     wall = time.perf_counter() - t0
     return [
@@ -381,11 +387,15 @@ def _run_restream_chunks(
     keep_best: bool = True,
     eps: Optional[float] = None,
     backend: str = "auto",
+    prefetch: Optional[int] = None,
     **adwise_cfg,
 ) -> dict:
     """n-pass re-streaming where every pass re-reads the stream from disk and
     the prior pass's placements from its spill (WarmState.prev_assign becomes
-    a spill-backed range read instead of a resident array)."""
+    a spill-backed range read instead of a resident array). Consecutive
+    passes share the device ring through the driver's :class:`RingHandle`:
+    when the geometry lets a stream sit in the ring without wrapping, pass
+    j+1 ships only the 4 B/row prev placements."""
     if passes < 1:
         raise ValueError(f"passes must be >= 1, got {passes}")
     z = len(readers)
@@ -400,13 +410,15 @@ def _run_restream_chunks(
 
     t0 = time.perf_counter()
     spill = new_spill(0)
+    handle: Optional[RingHandle] = None
     if base == "adwise":
-        pass_stats = _drive_core(
+        pass_stats, handle = _drive_core(
             readers, num_vertices, cfg,
             write_assign=(
                 lambda sp: lambda i, idx, p: sp.write(offsets[i] + idx, p)
             )(spill),
             chunk_edges=chunk_edges, allowed=allowed, backend=backend,
+            prefetch=prefetch,
         )
     else:
         if z > 1:
@@ -442,11 +454,20 @@ def _run_restream_chunks(
         return (s0.get("h2d_rows", 0), s0.get("h2d_bytes", 0),
                 s0.get("scan_calls", 0))
 
+    def pipeline_of(stats_list) -> tuple[float, int, int, int]:
+        s0 = stats_list[0] if stats_list else {}
+        return (s0.get("h2d_wait_s", 0.0), s0.get("refill_spans", 0),
+                s0.get("spans_prestaged", 0), s0.get("spans_missed", 0))
+
     pm = metrics_of(spill)
     pass_rd = [[pm[i].rd] for i in range(z)]
     pass_imbalance = [[pm[i].imbalance] for i in range(z)]
     pass_score_rows = [[s] for s in score_rows_of(pass_stats)]
     h2d_rows, h2d_bytes, scan_calls = h2d_of(pass_stats)
+    h2d_wait_s, refill_spans, spans_prestaged, spans_missed = pipeline_of(
+        pass_stats
+    )
+    prefetch_depth = pass_stats[0].get("prefetch_depth", 0)
     buffer_rows = pass_stats[0].get("buffer_rows", 0)
     best_spill = [spill] * z
     best_rd = [pass_rd[i][0] for i in range(z)]
@@ -469,19 +490,25 @@ def _run_restream_chunks(
             for i in range(z)
         ]
         spill = new_spill(j)
-        pass_stats = _drive_core(
+        pass_stats, handle = _drive_core(
             readers, num_vertices, cfg,
             write_assign=(
                 lambda sp: lambda i, idx, p: sp.write(offsets[i] + idx, p)
             )(spill),
             chunk_edges=chunk_edges, allowed=allowed, warm=warms,
             prev_read=prev_read, backend=backend,
+            prefetch=prefetch, resume=handle,
         )
         pm = metrics_of(spill)
         dr, db, dc = h2d_of(pass_stats)
         h2d_rows += dr
         h2d_bytes += db
         scan_calls += dc
+        dw, ds, dp, dm = pipeline_of(pass_stats)
+        h2d_wait_s += dw
+        refill_spans += ds
+        spans_prestaged += dp
+        spans_missed += dm
         buffer_rows = max(buffer_rows, pass_stats[0].get("buffer_rows", 0))
         improved = 0.0
         for i in range(z):
@@ -525,6 +552,11 @@ def _run_restream_chunks(
         score_count=score_rows * k,
         h2d_rows=h2d_rows,
         h2d_bytes=h2d_bytes,
+        h2d_wait_s=h2d_wait_s,
+        prefetch_depth=prefetch_depth,
+        refill_spans=refill_spans,
+        spans_prestaged=spans_prestaged,
+        spans_missed=spans_missed,
         scan_calls=scan_calls,
         buffer_rows=buffer_rows,
         wall_time_s=time.perf_counter() - t0,
@@ -547,6 +579,7 @@ def partition_file(
     chunk_edges: int = 1 << 16,
     spill_dir: Optional[str] = None,
     backend: str = "auto",
+    prefetch: Optional[int] = None,
     **cfg,
 ) -> PartitionResult:
     """Partition a file-resident edge stream with bounded edge memory.
@@ -574,6 +607,10 @@ def partition_file(
         the directory outlives the call — pass e.g. a pytest tmp_path to
         control its lifetime).
       backend: forwarded to the batched scan ('auto'/'vmap'/'shard_map').
+      prefetch: ring read-ahead depth (None → ``ADWISE_PREFETCH`` env →
+        default 2; 0 = synchronous refills). See
+        :func:`repro.core.driver.resolve_prefetch` and the double-buffer
+        protocol in :mod:`repro.core.driver`.
       cfg: strategy knobs, exactly as `repro.core.registry.run_partitioner`
         takes them (AdwiseConfig fields; `passes=`/`base=`/`keep_best=`/
         `eps=` for adwise-restream; `cluster_slack=` for 2ps;
@@ -604,6 +641,8 @@ def partition_file(
                  spill_path=None, wall_time_s=0.0, io_wall_s=0.0,
                  rows_read=0, stream_reads=0, stream_reads_measured=0,
                  h2d_rows=0, h2d_bytes=0, scan_calls=0, buffer_rows=0,
+                 h2d_wait_s=0.0, prefetch_depth=0, refill_spans=0,
+                 spans_prestaged=0, spans_missed=0,
                  unassigned=0),
         )
     if spill_dir is None:
@@ -646,9 +685,10 @@ def partition_file(
         cfg.pop("n_chunks", None)
         if strategy == "adwise":
             acfg = AdwiseConfig(k=k, seed=seed, **cfg)
-            per_stats = _drive_core(
+            per_stats, _ = _drive_core(
                 readers, n, acfg, write_assign=write_core,
                 chunk_edges=chunk_edges, allowed=allowed, backend=backend,
+                prefetch=prefetch,
             )
             stats = dict(per_stats[0], stream_reads=1)
             if z > 1:
@@ -656,7 +696,7 @@ def partition_file(
         else:
             stats = _run_restream_chunks(
                 readers, n, k, seed, chunk_edges, spill_dir, m, offsets, final,
-                allowed=allowed, backend=backend, **cfg,
+                allowed=allowed, backend=backend, prefetch=prefetch, **cfg,
             )
             if z > 1:
                 stats.update(name="spotlight-adwise-restream", z=z, spread=spread)
@@ -672,7 +712,8 @@ def partition_file(
         cfg.pop("n_chunks", None)
         per_stats = _run_two_phase_chunks(
             readers, n, k, seed, chunk_edges, write_core,
-            variant=strategy, allowed=allowed, backend=backend, **cfg,
+            variant=strategy, allowed=allowed, backend=backend,
+            prefetch=prefetch, **cfg,
         )
         stats = per_stats[0]
         if z > 1:
@@ -693,9 +734,10 @@ def partition_file(
             if cfg:
                 raise TypeError(f"greedy: unknown config keys {sorted(cfg)}")
             core = baselines.GreedyCore(num_vertices=n, k=k)
-        per_stats = _drive_core(
+        per_stats, _ = _drive_core(
             readers, n, core, write_assign=write_core,
             chunk_edges=chunk_edges, allowed=allowed, backend=backend,
+            prefetch=prefetch,
         )
         stats = dict(per_stats[0], stream_reads=1)
         if z > 1:

@@ -45,8 +45,11 @@ Every pass here is a thin call into :func:`repro.core.adwise.partition_stream`
 the unified :class:`repro.core.driver.ScanDriver` — carry warm-starting,
 r_sel/cap resolution, and budget wiring live there, not per pass. Stats
 aggregate the per-pass host→device stream traffic (``h2d_rows`` /
-``h2d_bytes``), so the latency model bills a p-pass in-memory re-stream as p
-stream uploads.
+``h2d_bytes``). Re-streaming passes share ONE device stream upload through
+a :class:`repro.core.driver.StreamResidency` holder: pass 1 ships the
+stream, every later pass reuses the resident device array and ships only
+its new ``prev`` table — so a p-pass in-memory re-stream bills one stream
+upload plus (p − 1) prev tables, not p stream uploads.
 """
 from __future__ import annotations
 
@@ -70,7 +73,7 @@ from repro.core.baselines import (
     _scan_partition,
     _single_edge_out,
 )
-from repro.core.driver import StepCore
+from repro.core.driver import StepCore, StreamResidency
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.graph import metrics
 
@@ -156,9 +159,13 @@ def restream_partition(
         raise ValueError(f"passes must be >= 1, got {passes}")
     cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
     base_kw = {} if allowed is None else {"allowed": allowed}
+    # Every ADWISE pass streams the same edges: share one device upload
+    # across passes (later passes ship only their prev table).
+    residency = StreamResidency()
     if base == "adwise":
         res = partition_stream(
-            edges, num_vertices, cfg, n_chunks=n_chunks, allowed=allowed
+            edges, num_vertices, cfg, n_chunks=n_chunks, allowed=allowed,
+            residency=residency,
         )
     else:
         res = registry.run_partitioner(
@@ -185,7 +192,7 @@ def restream_partition(
         warm_wall += time.perf_counter() - t_w
         res = partition_stream(
             edges, num_vertices, cfg, n_chunks=n_chunks, warm=warm,
-            allowed=allowed,
+            allowed=allowed, residency=residency,
         )
         pass_rd.append(_rd(edges, res.assign, num_vertices, k))
         pass_imbalance.append(metrics.partition_balance(res.assign, k))
@@ -282,9 +289,12 @@ def restream_partition_batched(
     edges_i = [streams[i, : m_per[i]] for i in range(z)]
 
     t0 = time.perf_counter()
+    # Shared device upload across passes (pass 2+ ships prev tables only).
+    residency = StreamResidency()
     results = partition_stream_batched(
         streams, valid, num_vertices, cfg,
         allowed=allowed, backend=backend, n_chunks=n_chunks,
+        residency=residency,
     )
     pass_rd = [[_rd(edges_i[i], results[i].assign, num_vertices, k)]
                for i in range(z)]
@@ -306,6 +316,7 @@ def restream_partition_batched(
         results = partition_stream_batched(
             streams, valid, num_vertices, cfg,
             allowed=allowed, backend=backend, n_chunks=n_chunks, warm=warms,
+            residency=residency,
         )
         h2d_rows += int(results[0].stats.get("h2d_rows", 0))
         h2d_bytes += int(results[0].stats.get("h2d_bytes", 0))

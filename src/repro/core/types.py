@@ -138,7 +138,18 @@ class PartitionResult:
     Attributes:
       assign: int32[m] — partition id per edge, in the original stream order.
       stats: counters — score computations, window-size trace, λ trace,
-        wall-clock partitioning latency, etc.
+        wall-clock partitioning latency, etc. Device-offloaded runs add the
+        transfer/pipeline counters from ``repro.core.driver``:
+        ``h2d_rows``/``h2d_bytes`` (stream traffic actually shipped),
+        ``h2d_wait_s`` (wall the driver spent blocked in non-speculative
+        ring refills — the *measured* transfer stall),
+        ``prefetch_depth`` (read-ahead depth; 0 = synchronous refills,
+        resolved from the explicit argument, else ``$ADWISE_PREFETCH``,
+        else 2), and ``refill_spans`` = ``spans_prestaged`` +
+        ``spans_missed`` (whether each contiguous refill span was already
+        staged by the read-ahead worker when the driver asked for it).
+        ``repro.engine.latency_model.partition_latency`` prefers the
+        measured stall over the modeled ``h2d_bytes`` bill when refills ran.
     """
 
     assign: np.ndarray

@@ -34,6 +34,9 @@ file (`repro.graph.io` format) is partitioned out-of-core through
 chunks, and the report includes the measured ingest wall / stream reads.
 `--ingest` converts a SNAP-style text edge list to the binary format first
 (one pass, O(chunk) memory; `--relabel` densifies sparse vertex ids).
+`--prefetch N` sets the double-buffered ring-refill depth (0 = synchronous
+escape hatch); the report then shows the measured h2d stall and the fraction
+of refill spans the read-ahead worker had prestaged.
 """
 from __future__ import annotations
 
@@ -147,7 +150,7 @@ def run_partition_file(path, args):
         reader, args.strategy, args.k, z=args.parallel,
         spread=args.spread if args.parallel > 1 else None, seed=args.seed,
         chunk_edges=args.chunk_edges, backend=backend,
-        spill_dir=args.spill_dir or spill_tmp,
+        spill_dir=args.spill_dir or spill_tmp, prefetch=args.prefetch,
         **strategy_cfg_kwargs(args),
     )
     return reader, res, spill_tmp, ingest_tmp
@@ -208,6 +211,11 @@ def main(argv=None):
                     help="directory for the assignment spill (file-driven "
                          "path). Default: a temp dir, removed when the run "
                          "finishes; pass a path to keep the spill")
+    ap.add_argument("--prefetch", type=int, default=None,
+                    help="read-ahead depth for the file-driven ring refill "
+                         "pipeline: 0 = synchronous (bit-identical escape "
+                         "hatch), N>=1 overlaps file read + h2d staging with "
+                         "the running scan. Default: $ADWISE_PREFETCH or 2")
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--strategy", default="adwise",
                     choices=available_strategies())
@@ -287,6 +295,16 @@ def main(argv=None):
             f"ring={res.stats.get('buffer_rows', 0)} rows), "
             f"spill={res.stats['spill_path']}"
         )
+        spans = int(res.stats.get("refill_spans", 0) or 0)
+        if spans:
+            pre = int(res.stats.get("spans_prestaged", 0) or 0)
+            print(
+                f"pipeline: prefetch={res.stats.get('prefetch_depth', 0)}, "
+                f"h2d_wait={res.stats.get('h2d_wait_s', 0.0):.3f}s, "
+                f"spans={spans} ({pre} prestaged / "
+                f"{int(res.stats.get('spans_missed', 0) or 0)} missed, "
+                f"overlap={pre / spans:.0%})"
+            )
 
     out = dict(
         graph=args.graph, strategy=args.strategy, k=args.k,

@@ -1,6 +1,10 @@
 """Unified streaming-scan driver (`repro.core.driver`): ring-buffer
 invariants, bit-parity between the device-resident ring (file) path and the
-resident full-upload path, and the host→device traffic accounting."""
+resident full-upload path, the host→device traffic accounting, and the
+double-buffered refill pipeline (read-ahead worker determinism/teardown)."""
+import threading
+import time
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
@@ -18,6 +22,7 @@ from repro.core.driver import (
     ResidentSource,
     ScanDriver,
     resolve_backend,
+    resolve_prefetch,
 )
 from repro.graph import rmat
 from repro.graph.io import EdgeFileReader, write_edge_file
@@ -60,11 +65,11 @@ def test_file_source_refill_overrun_guard(rmat_file):
     path, _, n = rmat_file
     cfg = AdwiseConfig(k=K, window_max=8)
     with EdgeFileReader(path) as r:
-        src = FileSource([r], chunk_edges=100, cfg=cfg)
-        buf = src.alloc()
-        buf = src.refill(buf, np.zeros(1, np.int64))
-        with pytest.raises(AssertionError, match="overran"):
-            src.refill(buf, np.array([int(src.hi[0]) + 1], np.int64))
+        with FileSource([r], chunk_edges=100, cfg=cfg) as src:
+            buf = src.alloc()
+            buf = src.refill(buf, np.zeros(1, np.int64))
+            with pytest.raises(AssertionError, match="overran"):
+                src.refill(buf, np.array([int(src.hi[0]) + 1], np.int64))
 
 
 def test_driver_direct_ring_run(rmat_file):
@@ -140,7 +145,10 @@ def test_ring_parity_property(rmat_file, tmp_path_factory, chunk, wmax, b, z):
 def test_restream_ring_h2d_accounting(rmat_file, tmp_path):
     """Re-streaming from disk: pass 1 ships (u, v) rows only; pass 2 also
     ships the prior pass's placements (4 more bytes per row) for buffered
-    revocation — and still matches the in-memory restream bit for bit."""
+    revocation — and still matches the in-memory restream bit for bit.
+
+    With chunk_edges < m the ring wraps, so pass 2 must re-ship the uv rows
+    (the cross-pass resume only adopts never-wrapped rings)."""
     path, edges, n = rmat_file
     m = len(edges)
     cfg = dict(window_max=8, passes=2)
@@ -151,8 +159,161 @@ def test_restream_ring_h2d_accounting(rmat_file, tmp_path):
     assert (np.asarray(res.assign) == ref.assign).all()
     assert res.stats["h2d_rows"] == 2 * m
     assert res.stats["h2d_bytes"] == m * 8 + m * 12
-    # In-memory restream bills one full stream upload per pass.
-    assert ref.stats["h2d_rows"] == 2 * m
+    # In-memory restream reuses the uploaded device stream across passes
+    # (StreamResidency): one uv upload total; every resident pass still
+    # ships its (m,) prev table (pass 1's is the all -1 cold table).
+    assert ref.stats["h2d_rows"] == m
+    assert ref.stats["h2d_bytes"] == m * 8 + 2 * m * 4
+
+
+def test_restream_ring_cross_pass_resume(rmat_file, tmp_path):
+    """chunk_edges >= m keeps the whole stream ring-resident, so pass 2
+    adopts pass 1's donated ring (RingHandle) and ships ONLY the 4 B/row
+    prev table: h2d drops from 8m + 12m to 8m + 4m — bit-identically."""
+    path, edges, n = rmat_file
+    m = len(edges)
+    cfg = dict(window_max=8, passes=2)
+    ref = run_partitioner("adwise-restream", edges, n, K, seed=0, **cfg)
+    with EdgeFileReader(path) as r:
+        res = partition_file(r, "adwise-restream", K, seed=0,
+                             chunk_edges=2048, spill_dir=str(tmp_path), **cfg)
+    assert (np.asarray(res.assign) == ref.assign).all()
+    assert res.stats["h2d_rows"] == m  # uv shipped once, pass 2 prev-only
+    assert res.stats["h2d_bytes"] == m * 8 + m * 4
+    assert (res.stats["spans_prestaged"] + res.stats["spans_missed"]
+            == res.stats["refill_spans"])
+
+
+# ----------------------------------------------------------------------------
+# Double-buffered refill pipeline (read-ahead worker)
+# ----------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    chunk=st.integers(min_value=48, max_value=500),
+    wmax=st.sampled_from([4, 8]),
+    b=st.sampled_from([1, 2]),
+    z=st.sampled_from([1, 2]),
+    depth=st.sampled_from([1, 3]),
+)
+def test_prefetch_determinism_property(
+    rmat_file, tmp_path_factory, chunk, wmax, b, z, depth
+):
+    """The refill pipeline is a pure latency optimization: for random
+    (chunk_edges, window_max, assign_batch, z, prefetch_depth) and jittered
+    worker read timing, the pipelined run assigns bit-identically to the
+    synchronous (prefetch=0) run and to the in-memory path, and every refill
+    span is accounted exactly once (prestaged XOR missed)."""
+    path, edges, n = rmat_file
+    m = len(edges)
+    cfg = dict(window_max=wmax, assign_batch=b)
+    if z == 1:
+        ref = run_partitioner("adwise", edges, n, K, seed=0, **cfg)
+    else:
+        ref = spotlight_partition(
+            edges, n, K, z=z, spread=max(1, K // z), strategy="adwise",
+            cfg=AdwiseConfig(k=K, seed=0, **cfg),
+        )
+    td = tmp_path_factory.mktemp("pfprop")
+    outs = {}
+    from repro.graph.io.format import EdgeFileReader as _R
+    from repro.graph.io.format import EdgeFileSubReader as _SR
+    for pf in (0, depth):
+        jitter = {}
+        if pf:  # delays land inside the read-ahead worker thread
+            jitter = {
+                _R: ("read", _R.read), _SR: ("read", _SR.read),
+            }
+            for klass, (name, orig) in jitter.items():
+                def slow(self, start, count, _orig=orig):
+                    time.sleep(((start // 64) % 3) * 5e-4)
+                    return _orig(self, start, count)
+                setattr(klass, name, slow)
+        try:
+            with EdgeFileReader(path) as r:
+                res = partition_file(
+                    r, "adwise", K, z=z,
+                    spread=max(1, K // z) if z > 1 else None, seed=0,
+                    chunk_edges=chunk, spill_dir=str(td), prefetch=pf, **cfg,
+                )
+        finally:
+            for klass, (name, orig) in jitter.items():
+                setattr(klass, name, orig)
+        outs[pf] = res
+        s = res.stats
+        assert s["prefetch_depth"] == pf
+        assert s["spans_prestaged"] + s["spans_missed"] == s["refill_spans"]
+        if pf == 0:
+            assert s["spans_prestaged"] == 0  # sync path never prestages
+        assert s["h2d_rows"] == m  # pipeline never re-ships a row
+        assert (np.asarray(res.assign) == ref.assign).all(), (
+            f"prefetch={pf} diverged at chunk={chunk} wmax={wmax} b={b} z={z}"
+        )
+    assert (np.asarray(outs[0].assign) == np.asarray(outs[depth].assign)).all()
+
+
+def test_prefetch_worker_prestages(rmat_file):
+    """The read-ahead worker stages spans before the consumer asks: once it
+    has provably read past the next refill target, that refill is a
+    pipeline hit (spans_prestaged), not a miss."""
+    path, _, n = rmat_file
+    cfg = AdwiseConfig(k=K, window_max=8)
+    with EdgeFileReader(path) as r:
+        with FileSource([r], chunk_edges=150, cfg=cfg, prefetch=2) as src:
+            buf = src.alloc()
+            buf = src.refill(buf, np.zeros(1, np.int64))
+            hi0 = int(src.hi[0])
+            assert src._worker is not None  # pipeline actually engaged
+            # Wait until the worker has staged at least one block past hi
+            # (it may stage up to depth = 2 * max_span rows ahead).
+            target = min(hi0 + src.Rq, int(src.m_per[0]))
+            deadline = time.monotonic() + 10.0
+            while int(src._worker._next[0]) < target:
+                assert time.monotonic() < deadline, "worker never got ahead"
+                time.sleep(0.005)
+            buf = src.refill(buf, np.array([hi0], np.int64))
+            assert int(src.hi[0]) > hi0
+            assert src.spans_prestaged >= 1, "staged refill counted as miss"
+            assert (src.spans_prestaged + src.spans_missed
+                    == src.refill_spans)
+
+
+def test_prefetch_worker_teardown_on_error(rmat_file):
+    """A reader failure inside the worker thread surfaces as the consumer's
+    exception, and FileSource teardown joins the thread — no leak."""
+    path, _, n = rmat_file
+
+    class _BoomReader:
+        def __init__(self, inner):
+            self.num_edges = inner.num_edges
+
+        def read(self, start, count):
+            raise IOError("disk pulled")
+
+    cfg = AdwiseConfig(k=K, window_max=8)
+    before = {t for t in threading.enumerate() if t.name == "adwise-readahead"}
+    with EdgeFileReader(path) as r:
+        with pytest.raises(RuntimeError, match="read-ahead worker failed"):
+            with FileSource([_BoomReader(r)], chunk_edges=100, cfg=cfg,
+                            prefetch=2) as src:
+                src.refill(src.alloc(), np.zeros(1, np.int64))
+    leaked = {
+        t for t in threading.enumerate() if t.name == "adwise-readahead"
+    } - before
+    assert not leaked, f"read-ahead thread leaked: {leaked}"
+
+
+def test_resolve_prefetch_env(monkeypatch):
+    monkeypatch.delenv("ADWISE_PREFETCH", raising=False)
+    assert resolve_prefetch(None) == 2  # pipeline on by default
+    assert resolve_prefetch(0) == 0
+    assert resolve_prefetch(5) == 5
+    monkeypatch.setenv("ADWISE_PREFETCH", "0")
+    assert resolve_prefetch(None) == 0
+    monkeypatch.setenv("ADWISE_PREFETCH", "3")
+    assert resolve_prefetch(None) == 3
+    assert resolve_prefetch(1) == 1  # explicit argument beats the env
 
 
 # ----------------------------------------------------------------------------

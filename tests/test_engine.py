@@ -121,6 +121,38 @@ def test_partition_quality_drives_modeled_latency(tiny_graph):
     assert m_good["sync_bytes_per_step"] < m_bad["sync_bytes_per_step"]
 
 
+def test_partition_latency_overlap_billing():
+    """`partition_latency` prefers the measured refill stall over the
+    modeled h2d transfer when refills actually ran, and bills
+    max(compute, io, h2d) instead of the sum once the prefetch pipeline
+    is active."""
+    from repro.engine.latency_model import (
+        EDGE_IO_COST_S,
+        H2D_BW_BPS,
+        SCORE_COST_S,
+        partition_latency,
+    )
+
+    m, k = 10_000, 8
+    base = dict(score_rows=m, stream_reads=1, h2d_bytes=m * 8)
+    compute = m * k * SCORE_COST_S
+    io = m * EDGE_IO_COST_S
+    # No refills ran (resident upload): modeled transfer, additive model.
+    modeled = m * 8 / H2D_BW_BPS
+    lat = partition_latency(dict(base, h2d_wait_s=0.0, refill_spans=0), m, k)
+    assert lat == pytest.approx(compute + io + modeled)
+    # Ring refills ran: the measured stall replaces the modeled transfer.
+    lat = partition_latency(
+        dict(base, h2d_wait_s=0.5, refill_spans=7, prefetch_depth=0), m, k
+    )
+    assert lat == pytest.approx(compute + io + 0.5)
+    # Pipeline active: overlap-aware max() — the dominant term wins alone.
+    lat = partition_latency(
+        dict(base, h2d_wait_s=0.5, refill_spans=7, prefetch_depth=2), m, k
+    )
+    assert lat == pytest.approx(max(compute, io, 0.5))
+
+
 def test_replication_degree_bounds(tiny_graph):
     edges, n = tiny_graph
     k = 8

@@ -13,6 +13,7 @@ from repro.core import (
     run_partitioner,
     spotlight_partition,
 )
+from repro.core.driver import resolve_prefetch
 from repro.core.restream import (
     VertexClusteringState,
     _degrees,
@@ -274,8 +275,11 @@ class CountingReader:
 ])
 def test_partition_file_memory_bounded(tmp_path, strategy, cfg, z):
     """Peak live edge rows handed out by the reader stay O(chunk) — far
-    below m — while the output still matches the in-memory path."""
-    edges, n = rmat(9, 2500, seed=13)
+    below m — while the output still matches the in-memory path.
+
+    The graph grows with z so the staging bound (which is per-instance)
+    stays meaningfully below m for the spotlight case too."""
+    edges, n = rmat(9 if z == 1 else 11, 2500 * z, seed=13)
     m = len(edges)
     path = _write(tmp_path, edges, n)
     chunk = 400
@@ -286,8 +290,10 @@ def test_partition_file_memory_bounded(tmp_path, strategy, cfg, z):
                              chunk_edges=chunk, spill_dir=str(tmp_path / "sp"),
                              **cfg)
     # Buffer refills copy the chunk out and drop it; at most a couple of
-    # read results are alive at once per instance.
-    bound = 3 * max(chunk, WMAX + 1) * max(z, 1)
+    # read results are alive at once per instance — plus, with the refill
+    # pipeline on, up to `prefetch` read-ahead spans staged per instance.
+    pf = resolve_prefetch(None)
+    bound = (3 + pf) * max(chunk, WMAX + 1) * max(z, 1)
     assert r.max_request <= max(chunk, WMAX + 1), (
         f"a single read pulled {r.max_request} rows (> chunk bound)"
     )

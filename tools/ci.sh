@@ -45,6 +45,13 @@ else
   python -m pytest -x -q
 fi
 
+# Refill-pipeline matrix: the driver/ring suite must hold bit-parity and
+# its h2d accounting at BOTH ends of the prefetch knob — 0 (synchronous
+# escape hatch) and 2 (the double-buffered default) — whatever the
+# environment's ADWISE_PREFETCH happens to be.
+ADWISE_PREFETCH=0 python -m pytest -x -q tests/test_driver.py
+ADWISE_PREFETCH=2 python -m pytest -x -q tests/test_driver.py
+
 # The smoke pass also writes a machine-readable BENCH_<n>.json into
 # bench_logs/ (kept / uploaded as a CI artifact), so the perf trajectory —
 # partition walls, h2d stream traffic, ingest MB/s, scan-core speedups,

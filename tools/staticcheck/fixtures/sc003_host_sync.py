@@ -28,6 +28,29 @@ class FileSource:
         return buf
 
 
+class _ReadAhead:  # the refill pipeline's staging worker is also surface
+    def _loop(self, src):
+        while not self._stop:
+            block = src.readers[0].read(0, 64)
+            jax.block_until_ready(block)  # SC003: sync in the staging loop
+            self._staged.append(block)
+
+    def take(self, buf, start, count):
+        while self._taken < start + count:
+            rows = np.asarray(buf.uv)  # SC003: materializes the donated ring
+            self._taken += len(rows)
+        return rows
+
+
+def _run_pipeline(src, cursors):
+    ring = src.alloc()
+    while True:
+        ring = src.refill(ring, cursors)  # refill returns the device ring
+        depth = int(ring.hi[0])  # SC003: int() on the refill result
+        if depth > 64:
+            return ring
+
+
 def make_step(stream):
     def step(carry, _):
         probe = np.asarray(carry)  # SC003: sync inside the traced step

@@ -388,8 +388,8 @@ class SC002:
 # SC003 — no host syncs in stepping loops / step closures / refill paths
 # ---------------------------------------------------------------------------
 
-_STEP_SURFACE_CLASSES = {"ScanDriver", "FileSource"}
-_STEP_SURFACE_FN = re.compile(r"^(_run_\w*|refill|recalibrate)$")
+_STEP_SURFACE_CLASSES = {"ScanDriver", "FileSource", "_ReadAhead"}
+_STEP_SURFACE_FN = re.compile(r"^(_run_\w*|refill|recalibrate|take|_loop|_fetch)$")
 _SYNC_ON_TAINTED = {
     "np.asarray", "numpy.asarray", "np.array", "numpy.array",
     "np.ascontiguousarray", "numpy.ascontiguousarray",
@@ -399,7 +399,7 @@ _SYNC_ALWAYS = {
     "jax.device_get", "device_get",
     "jax.block_until_ready", "block_until_ready",
 }
-_DEVICE_PRODUCERS = re.compile(r"^(_run_scan\w*|run_chunk|_ring_write)$")
+_DEVICE_PRODUCERS = re.compile(r"^(_run_scan\w*|run_chunk|_ring_write|refill)$")
 _DEVICE_NAME_SEEDS = {"carry", "buf", "carry_buf"}
 
 
