@@ -13,6 +13,9 @@ summary (n auto-increments over the files already in DIR, so a kept
 directory accumulates the perf trajectory run over run): partition walls,
 host→device stream traffic, ingest MB/s, engine supersteps/s, and the raw
 per-bench rows. tools/ci.sh passes ``bench_logs/`` and keeps the file.
+
+``--trace out.json`` wraps every bench section in a ``bench``-category span
+(repro.obs) and writes a Perfetto-loadable Chrome trace-event timeline.
 """
 from __future__ import annotations
 
@@ -57,6 +60,7 @@ def _summarize(results: dict) -> dict:
                 head["ring_rows"] = row.get("ring_rows")
                 head["partition_file_sync_wall_s"] = row.get("t_file_sync_s")
                 head["h2d_wait_s"] = row.get("h2d_wait_s")
+                head["prestage_wall_s"] = row.get("prestage_wall_s")
                 head["prefetch_depth"] = row.get("prefetch_depth")
                 head["overlap_efficiency"] = row.get("overlap_efficiency")
         head["restream_h2d_bytes"] = io.get("restream_h2d_bytes")
@@ -82,10 +86,25 @@ def main(argv=None):
     ap.add_argument("--json-dir", default=None,
                     help="write a BENCH_<n>.json machine-readable summary "
                          "into this directory (auto-incrementing n)")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="record a section-level span timeline (repro.obs) "
+                         "and write Chrome trace-event JSON here (open in "
+                         "https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
     scale = 0.08 if args.full else 0.012
+
+    from repro.obs import Tracer, resolve_tracer
+
+    tr = resolve_tracer(Tracer() if args.trace else None)
+
+    def sec(title, name, fn):
+        """One bench section: banner + a `bench`-category span around it."""
+        print(title)
+        with tr.span(name, cat="bench"):
+            return fn()
+
     t0 = time.time()
 
     from benchmarks import (
@@ -104,53 +123,71 @@ def main(argv=None):
     results: dict = {}
     if args.smoke:
         k = ["--k", "8"]
-        print("=== Fig.7a-f: total latency (smoke) ===")
-        results["total_latency"] = bench_total_latency.main(
-            ["--scale", "0.006", *k, "--graphs", "brain_like",
-             "--windows", "8", "--baselines", "dbh"])
-        print("\n=== Fig.7g-i: replication degree (smoke) ===")
-        bench_replication.main(["--scale", "0.006", *k, "--graphs", "brain_like"])
-        print("\n=== re-streaming pass sweep (smoke) ===")
-        bench_restream.main(["--scale", "0.006", *k, "--graphs", "brain_like",
-                             "--passes", "2", "--window", "8"])
-        print("\n=== Fig.8: spotlight spread sweep (smoke) ===")
-        bench_spotlight.main(["--scale", "0.01", *k, "--z", "4"])
-        print("\n=== multi-device scaling (smoke: N in {1,2}) ===")
-        results["scaling"] = bench_scaling.main(["--smoke"])
-        print("\n=== out-of-core I/O: ingest + ring-buffer partitioning (smoke) ===")
-        results["io"] = bench_io.main(["--smoke"])
-        print("\n=== §III ablations (smoke) ===")
-        bench_window.main(["--scale", "0.004", *k])
-        print("\n=== ADWISE-balance MoE routing (smoke) ===")
-        bench_moe_balance.main(["--steps", "3", "--tokens", "128", "--d", "16"])
-        print("\n=== kernels (smoke) ===")
-        bench_kernels.main(["--quick"])
-        print("\n=== roofline table ===")
-        roofline.main([])
+        results["total_latency"] = sec(
+            "=== Fig.7a-f: total latency (smoke) ===", "total_latency",
+            lambda: bench_total_latency.main(
+                ["--scale", "0.006", *k, "--graphs", "brain_like",
+                 "--windows", "8", "--baselines", "dbh"]))
+        sec("\n=== Fig.7g-i: replication degree (smoke) ===", "replication",
+            lambda: bench_replication.main(
+                ["--scale", "0.006", *k, "--graphs", "brain_like"]))
+        sec("\n=== re-streaming pass sweep (smoke) ===", "restream",
+            lambda: bench_restream.main(
+                ["--scale", "0.006", *k, "--graphs", "brain_like",
+                 "--passes", "2", "--window", "8"]))
+        sec("\n=== Fig.8: spotlight spread sweep (smoke) ===", "spotlight",
+            lambda: bench_spotlight.main(["--scale", "0.01", *k, "--z", "4"]))
+        results["scaling"] = sec(
+            "\n=== multi-device scaling (smoke: N in {1,2}) ===", "scaling",
+            lambda: bench_scaling.main(["--smoke"]))
+        results["io"] = sec(
+            "\n=== out-of-core I/O: ingest + ring-buffer partitioning (smoke) ===",
+            "io", lambda: bench_io.main(["--smoke"]))
+        sec("\n=== §III ablations (smoke) ===", "window",
+            lambda: bench_window.main(["--scale", "0.004", *k]))
+        sec("\n=== ADWISE-balance MoE routing (smoke) ===", "moe_balance",
+            lambda: bench_moe_balance.main(
+                ["--steps", "3", "--tokens", "128", "--d", "16"]))
+        sec("\n=== kernels (smoke) ===", "kernels",
+            lambda: bench_kernels.main(["--quick"]))
+        sec("\n=== roofline table ===", "roofline", lambda: roofline.main([]))
         print(f"\nsmoke pass over all bench entrypoints done in {time.time()-t0:.0f}s")
     else:
-        print("=== Fig.7a-f: total latency (partition + modeled processing) ===")
-        results["total_latency"] = bench_total_latency.main(["--scale", str(scale)])
-        print("\n=== Fig.7g-i: replication degree per strategy and L ===")
-        bench_replication.main(["--scale", str(scale)])
-        print("\n=== re-streaming: RD vs pass count (adwise-restream / 2ps) ===")
-        bench_restream.main(["--scale", str(scale / 2)])
-        print("\n=== Fig.8: spotlight spread sweep ===")
-        bench_spotlight.main(["--scale", str(scale * 1.5)])
-        print("\n=== multi-device scaling: batched spotlight + engine vs N ===")
-        results["scaling"] = bench_scaling.main(
-            ["--scale", str(scale / 2), "--devices", "1,2,4,8"])
-        print("\n=== out-of-core I/O: ingest MB/s + file vs in-memory wall ===")
-        results["io"] = bench_io.main(["--scale", str(scale)])
-        print("\n=== §III ablations: window / lazy / clustering / lambda ===")
-        bench_window.main(["--scale", str(scale / 2)])
-        print("\n=== beyond-paper: ADWISE-balance MoE routing ===")
-        bench_moe_balance.main(["--steps", "12" if not args.full else "40"])
-        print("\n=== kernels (interpret-mode wall times, CPU-indicative) ===")
-        bench_kernels.main(["--quick"] if not args.full else [])
-        print("\n=== roofline table (from dry-run artifact, if present) ===")
-        roofline.main([])
+        results["total_latency"] = sec(
+            "=== Fig.7a-f: total latency (partition + modeled processing) ===",
+            "total_latency",
+            lambda: bench_total_latency.main(["--scale", str(scale)]))
+        sec("\n=== Fig.7g-i: replication degree per strategy and L ===",
+            "replication",
+            lambda: bench_replication.main(["--scale", str(scale)]))
+        sec("\n=== re-streaming: RD vs pass count (adwise-restream / 2ps) ===",
+            "restream",
+            lambda: bench_restream.main(["--scale", str(scale / 2)]))
+        sec("\n=== Fig.8: spotlight spread sweep ===", "spotlight",
+            lambda: bench_spotlight.main(["--scale", str(scale * 1.5)]))
+        results["scaling"] = sec(
+            "\n=== multi-device scaling: batched spotlight + engine vs N ===",
+            "scaling",
+            lambda: bench_scaling.main(
+                ["--scale", str(scale / 2), "--devices", "1,2,4,8"]))
+        results["io"] = sec(
+            "\n=== out-of-core I/O: ingest MB/s + file vs in-memory wall ===",
+            "io", lambda: bench_io.main(["--scale", str(scale)]))
+        sec("\n=== §III ablations: window / lazy / clustering / lambda ===",
+            "window", lambda: bench_window.main(["--scale", str(scale / 2)]))
+        sec("\n=== beyond-paper: ADWISE-balance MoE routing ===", "moe_balance",
+            lambda: bench_moe_balance.main(
+                ["--steps", "12" if not args.full else "40"]))
+        sec("\n=== kernels (interpret-mode wall times, CPU-indicative) ===",
+            "kernels",
+            lambda: bench_kernels.main(["--quick"] if not args.full else []))
+        sec("\n=== roofline table (from dry-run artifact, if present) ===",
+            "roofline", lambda: roofline.main([]))
         print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+    if args.trace:
+        n_events = tr.export(args.trace)
+        print(f"trace: {n_events} events -> {args.trace}")
 
     if args.json_dir:
         path = _next_bench_path(args.json_dir)

@@ -395,6 +395,7 @@ def partition_stream(
     cost_per_score: Optional[float] = None,
     warm: Optional[WarmState] = None,
     residency=None,
+    trace=None,
 ) -> PartitionResult:
     """Partition an edge stream with ADWISE (vectorized scan).
 
@@ -418,6 +419,8 @@ def partition_stream(
       residency: optional :class:`repro.core.driver.StreamResidency` shared
         across re-streaming passes over the SAME edges — later passes reuse
         the resident device stream array and ship only their prev table.
+      trace: optional :class:`repro.obs.Tracer` recording per-scan-call
+        spans (host dispatch/wait only); stats gain a ``trace_summary``.
 
     Returns: PartitionResult with assign (int32[m]) and stats.
     """
@@ -438,6 +441,7 @@ def partition_stream(
         warm=None if warm is None else [warm],
         cost_per_score=cost_per_score,
         backend="vmap",
+        trace=trace,
     )
     res = drv.run(n_chunks=n_chunks)
     sidx, pout = res.sidx[0], res.p[0]
@@ -454,6 +458,8 @@ def partition_stream(
         w_trace=res.w_trace[0],
         unassigned=unassigned,
     )
+    if trace is not None and trace.enabled:
+        stats["trace_summary"] = trace.summary().as_dict()
     return PartitionResult(assign, stats)
 
 
@@ -470,6 +476,7 @@ def partition_stream_batched(
     cost_per_score: Optional[float] = None,
     warm: Optional[Sequence[WarmState]] = None,
     residency=None,
+    trace=None,
 ) -> list[PartitionResult]:
     """Run ``z`` independent instance scans as ONE batched program.
 
@@ -547,8 +554,13 @@ def partition_stream_batched(
         warm=list(warm) if warm is not None else None,
         cost_per_score=cost_per_score,
         backend=backend,
+        trace=trace,
     )
     res = drv.run(n_chunks=n_chunks)
+    tsum = (
+        trace.summary().as_dict()
+        if trace is not None and trace.enabled else None
+    )
     results = []
     for i in range(z):
         m_i = int(m_per[i])
@@ -572,5 +584,7 @@ def partition_stream_batched(
             w_trace=res.w_trace[i],
             unassigned=unassigned,
         )
+        if tsum is not None:
+            stats["trace_summary"] = tsum
         results.append(PartitionResult(assign, stats))
     return results

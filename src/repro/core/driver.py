@@ -126,6 +126,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core.adwise import Carry, _init_carry, _make_step
 from repro.core.types import AdwiseConfig, WarmState
+from repro.obs import resolve_tracer
 
 __all__ = [
     "StepCore",
@@ -607,6 +608,8 @@ class _ReadAhead:
                     c = min(src.Rq, int(src.m_per[i]) - start)
                 # Reads outside the lock: the consumer keeps popping while
                 # the worker is on disk.
+                trace = src.trace
+                t_stage = time.perf_counter()
                 uv: Optional[np.ndarray] = None
                 if not src.uv_resident[i]:
                     uv = np.ascontiguousarray(
@@ -625,10 +628,27 @@ class _ReadAhead:
                         f"instance {i}: prev_read returned {len(prev)} of "
                         f"{c} rows at offset {start}"
                     )
+                t_staged = time.perf_counter()
+                if trace.enabled:
+                    # Recorded from the worker thread, so the span lands on
+                    # the `adwise-readahead` track.
+                    trace.add_span(
+                        "stage", "stage", t_stage, t_staged,
+                        attrs=dict(instance=i, start=start, rows=c,
+                                   prev=prev is not None),
+                    )
                 with self._cv:
+                    # Worker-side staging wall: the blind spot h2d_wait_s
+                    # (blocking refills only) cannot see. Accumulated even
+                    # when untraced so overlap_efficiency is always measured.
+                    src.prestage_wall_s += t_staged - t_stage
                     self._staged[i].append((start, c, uv, prev))
                     self._next[i] = start + c
+                    if trace.enabled:
+                        depth = int((self._next - self._taken).sum())
                     self._cv.notify_all()
+                if trace.enabled:
+                    trace.gauge("readahead_staged_rows", depth)
         except BaseException as e:  # surfaced via take(); thread must not die silently
             with self._cv:
                 self._exc = e
@@ -776,7 +796,9 @@ class FileSource:
         prev_read: Optional[List[Callable[[int, int], np.ndarray]]] = None,
         prefetch: Optional[int] = None,
         resume: Optional[RingHandle] = None,
+        trace: Any = None,
     ) -> None:
+        self.trace = resolve_tracer(trace)
         self.readers = list(readers)
         self.z = len(self.readers)
         self.m_per = np.array([r.num_edges for r in self.readers], np.int64)
@@ -802,6 +824,7 @@ class FileSource:
         self.h2d_bytes = 0
         self.h2d_calls = 0
         self.h2d_wait_s = 0.0
+        self.prestage_wall_s = 0.0
         self.refill_spans = 0
         self.spans_prestaged = 0
         self.spans_missed = 0
@@ -834,6 +857,11 @@ class FileSource:
         if fits.any():
             self.uv_resident = fits
             self._resume_buf = resume.buf
+            if self.trace.enabled:
+                self.trace.instant(
+                    "ring-adopt", "refill",
+                    resident_instances=int(fits.sum()), z=self.z, B=self.B,
+                )
 
     def alloc(self) -> RingBuf:
         """Device ring for this pass: the adopted previous-pass buffer when
@@ -890,7 +918,12 @@ class FileSource:
         ``h2d_wait_s`` stall: its staging work overlaps the in-flight scan.
         """
         self.h2d_calls += 1
-        t_start = 0.0 if speculative else time.perf_counter()
+        trace = self.trace
+        traced = trace.enabled
+        t_start = time.perf_counter() if (traced or not speculative) else 0.0
+        shipped_rows = 0
+        call_spans = 0
+        call_missed = 0
         with_prev = self.prev_read is not None
         dummy_uv = np.zeros((0, 2), np.int32)
         dummy_prev = np.zeros((0,), np.int32)
@@ -917,10 +950,20 @@ class FileSource:
                 slot = hi % self.B
                 # Never wrap inside a write; never exceed the chunk bound.
                 c = min(end - hi, self.B - slot, self.max_span)
+                if traced:
+                    t_fetch = time.perf_counter()
                 rows, prows, waited = self._fetch(i, hi, c)
+                if traced:
+                    trace.add_span(
+                        "fetch", "fetch", t_fetch, time.perf_counter(),
+                        attrs=dict(instance=i, start=hi, rows=c,
+                                   prestaged=not waited),
+                    )
                 self.refill_spans += 1
+                call_spans += 1
                 if waited:
                     self.spans_missed += 1
+                    call_missed += 1
                 else:
                     self.spans_prestaged += 1
                 buf = _ring_write(
@@ -937,10 +980,26 @@ class FileSource:
                     self.h2d_bytes += c * 8
                 if with_prev:
                     self.h2d_bytes += c * 4
+                shipped_rows += c
                 hi += c
             self.hi[i] = hi
         if not speculative:
-            self.h2d_wait_s += time.perf_counter() - t_start
+            t_end = time.perf_counter()
+            self.h2d_wait_s += t_end - t_start
+            if traced:
+                # Same (t_start, t_end) floats that fed h2d_wait_s: the
+                # `refill` category total reconciles with it exactly.
+                trace.add_span(
+                    "refill", "refill", t_start, t_end,
+                    attrs=dict(rows=shipped_rows, spans=call_spans,
+                               missed=call_missed, Rq=self.Rq),
+                )
+        elif traced and call_spans:
+            trace.add_span(
+                "refill-spec", "refill-spec", t_start, time.perf_counter(),
+                attrs=dict(rows=shipped_rows, spans=call_spans,
+                           missed=call_missed, Rq=self.Rq),
+            )
         return buf
 
     def close(self) -> None:
@@ -993,6 +1052,9 @@ class DriveResult(NamedTuple):
     refill_spans: int = 0
     spans_prestaged: int = 0
     spans_missed: int = 0
+    # Worker-side staging wall (read-ahead thread): the time spent reading
+    # and preparing spans the blocking h2d_wait_s stall cannot see.
+    prestage_wall_s: float = 0.0
 
 
 class ScanDriver:
@@ -1017,7 +1079,15 @@ class ScanDriver:
         warm: Optional[Sequence[WarmState]] = None,
         cost_per_score: Optional[float] = None,
         backend: str = "vmap",
+        trace: Any = None,
     ) -> None:
+        self.trace = resolve_tracer(trace)
+        # A traced driver over an untraced FileSource adopts the driver's
+        # tracer, so refill/stage spans land in the same timeline without
+        # every caller having to thread trace= twice.
+        src_trace = getattr(source, "trace", None)
+        if self.trace.enabled and src_trace is not None and not src_trace.enabled:
+            source.trace = self.trace
         self.source = source
         if isinstance(core, AdwiseConfig):
             assert num_vertices is not None, "AdwiseConfig path needs |V|"
@@ -1146,25 +1216,53 @@ class ScanDriver:
                 core=core, n_steps=chunk_steps, n_shards=self.n_shards,
             )
 
+        trace = self.trace
+        traced = trace.enabled
         outs = []
         calls = 0
         t0 = time.perf_counter()
         for _ in range(n_chunks):
+            if traced:
+                t_call = time.perf_counter()
+                cc0 = scan_compile_counts()["run_scan_resident"]
             carry, out = run_chunk(carry)
             calls += 1
             # Device handles only — materializing here would sync the host
             # to every chunk and serialize dispatch (SC003); the transfer
             # happens once, after the stepping loop.
             outs.append(out)
+            if traced:
+                # Dispatch-only span: the provisioned loop never syncs, so
+                # this measures trace/compile/enqueue time, not device wall.
+                trace.add_span(
+                    "scan-call", "scan", t_call, time.perf_counter(),
+                    attrs=dict(call=calls, steps=chunk_steps, mode="dispatch",
+                               compiled=scan_compile_counts()[
+                                   "run_scan_resident"] > cc0),
+                )
             carry = self._recalibrate(carry, t0)
         drain_left = -(-m_max // chunk_steps) + 2
         # staticcheck: disable=SC003 drain termination must observe `assigned`; one sync per extra call, none in the provisioned loop
         while (np.asarray(carry.assigned) < self.m_per).any() and drain_left > 0:
+            if traced:
+                t_call = time.perf_counter()
             carry, out = run_chunk(carry)
             calls += 1
             outs.append(out)
+            if traced:
+                trace.add_span(
+                    "scan-call", "scan", t_call, time.perf_counter(),
+                    attrs=dict(call=calls, steps=chunk_steps, mode="drain"),
+                )
             drain_left -= 1
+        if traced:
+            t_mat = time.perf_counter()
         outs = [jax.tree.map(np.asarray, o) for o in outs]
+        if traced:
+            trace.add_span(
+                "materialize", "host", t_mat, time.perf_counter(),
+                attrs=dict(calls=calls),
+            )
         wall = time.perf_counter() - t0
         self.carry = carry
         return self._result(
@@ -1201,6 +1299,9 @@ class ScanDriver:
         # of refills/scans is identical to the classic synchronous loop.
         assigned = np.zeros((z,), np.int64)
         cursors = np.zeros((z,), np.int64)
+        trace = self.trace
+        traced = trace.enabled
+        done_before = 0
         try:
             buf = src.alloc()
             t0 = time.perf_counter()
@@ -1211,6 +1312,9 @@ class ScanDriver:
                     f"{self.m_per} assigned after {iters} calls"
                 )
                 buf = src.refill(buf, cursors)
+                if traced:
+                    t_call = time.perf_counter()
+                    cc0 = scan_compile_counts()["run_scan_ring"]
                 (carry, buf), out = _run_scan_ring(
                     (carry, buf), self._m_real_j, self._allowed_j,
                     self._caps_j,
@@ -1237,6 +1341,20 @@ class ScanDriver:
                         on_assign(
                             i, sidx[i][live].astype(np.int64), pout[i][live]
                         )
+                if traced:
+                    # Dispatch -> speculative refill -> the per-call sync ->
+                    # emit: the whole host wait for scan call k. `rows` stays
+                    # an np scalar (no int() on synced mirrors on this hot
+                    # path); the exporter unwraps it.
+                    done = assigned.sum()
+                    trace.add_span(
+                        "scan-call", "scan", t_call, time.perf_counter(),
+                        attrs=dict(call=iters, steps=S,
+                                   rows=done - done_before,
+                                   compiled=scan_compile_counts()[
+                                       "run_scan_ring"] > cc0),
+                    )
+                    done_before = done
                 carry = self._recalibrate(carry, t0)
             assert (cursors <= src.hi).all(), (
                 f"scan cursors {cursors} overran uploaded rows {src.hi}"
@@ -1256,6 +1374,7 @@ class ScanDriver:
             refill_spans=src.refill_spans,
             spans_prestaged=src.spans_prestaged,
             spans_missed=src.spans_missed,
+            prestage_wall_s=src.prestage_wall_s,
         )
 
     def _result(
@@ -1276,6 +1395,7 @@ class ScanDriver:
         refill_spans: int = 0,
         spans_prestaged: int = 0,
         spans_missed: int = 0,
+        prestage_wall_s: float = 0.0,
     ) -> DriveResult:
         cnt = self.core.counters(carry)
         return DriveResult(
@@ -1301,6 +1421,7 @@ class ScanDriver:
             refill_spans=int(refill_spans),
             spans_prestaged=int(spans_prestaged),
             spans_missed=int(spans_missed),
+            prestage_wall_s=float(prestage_wall_s),
         )
 
     def run(
@@ -1346,4 +1467,5 @@ class ScanDriver:
             refill_spans=res.refill_spans,
             spans_prestaged=res.spans_prestaged,
             spans_missed=res.spans_missed,
+            prestage_wall_s=res.prestage_wall_s,
         )

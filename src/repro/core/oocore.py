@@ -63,6 +63,7 @@ from repro.core.spotlight import _SPOTLIGHT_INCOMPATIBLE, spread_mask
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.graph import metrics
 from repro.graph.stream import EdgeStream
+from repro.obs import resolve_tracer
 
 __all__ = ["partition_file"]
 
@@ -168,6 +169,7 @@ def _drive_core(
     backend: str = "auto",
     prefetch: Optional[int] = None,
     resume: Optional[RingHandle] = None,
+    trace=None,
 ) -> tuple[List[dict], Optional[RingHandle]]:
     """Feed z instance streams through any step-core's scan in a bounded
     device-resident ring buffer — a thin caller of
@@ -192,10 +194,10 @@ def _drive_core(
     source = FileSource(
         readers, chunk_edges=chunk_edges,
         cfg=core if is_cfg else None, core=None if is_cfg else core,
-        prev_read=prev_read, prefetch=prefetch, resume=resume,
+        prev_read=prev_read, prefetch=prefetch, resume=resume, trace=trace,
     )
     drv = ScanDriver(source, core, num_vertices, allowed=allowed, warm=warm,
-                     backend=backend)
+                     backend=backend, trace=trace)
     res = drv.run(on_assign=write_assign)
     stats = []
     for i in range(z):
@@ -229,6 +231,7 @@ def _run_baseline_chunks(
     seed: int,
     chunk_edges: int,
     write_range: Callable[[int, np.ndarray], None],
+    trace=None,
     **cfg,
 ) -> dict:
     """Stream a single-edge baseline over reader chunks (state resumes)."""
@@ -276,6 +279,12 @@ def _run_baseline_chunks(
     else:
         raise KeyError(f"no chunk-resumable core for strategy {strategy!r}")
     stats.update(k=k, wall_time_s=time.perf_counter() - t0, stream_reads=reads)
+    tr = resolve_tracer(trace)
+    if tr.enabled:
+        tr.add_span(
+            f"baseline:{strategy}", "phase", t0, time.perf_counter(),
+            attrs=dict(strategy=strategy, k=k, stream_reads=reads),
+        )
     return stats
 
 
@@ -292,6 +301,7 @@ def _run_two_phase_chunks(
     backend: str = "auto",
     prefetch: Optional[int] = None,
     cluster_slack: float = 1.25,
+    trace=None,
     **cfg,
 ) -> List[dict]:
     """2PS / 2PS-L over z per-instance readers: chunked degree pass →
@@ -301,19 +311,22 @@ def _run_two_phase_chunks(
     per-instance phase 1 is bit-identical to
     :func:`repro.core.restream._phase1_warm` on the resident sub-stream."""
     z = len(readers)
+    tr = resolve_tracer(trace)
     t0 = time.perf_counter()
     warms, n_clusters = [], []
     for i in range(z):
         a_i = None if allowed is None else np.asarray(allowed[i], bool)
         n_allowed = k if a_i is None else max(int(a_i.sum()), 1)
-        deg = _chunked_degrees(readers[i], num_vertices, chunk_edges)
+        with tr.span("degree-pass", cat="phase", instance=i):
+            deg = _chunked_degrees(readers[i], num_vertices, chunk_edges)
         state = VertexClusteringState(
             num_vertices, n_allowed, readers[i].num_edges, deg,
             cluster_slack=cluster_slack, chunk_edges=chunk_edges,
         )
-        for chunk in readers[i].chunks(chunk_edges):
-            state.update(chunk)
-        cl, vols = state.finalize()
+        with tr.span("clustering", cat="phase", instance=i):
+            for chunk in readers[i].chunks(chunk_edges):
+                state.update(chunk)
+            cl, vols = state.finalize()
         part = (
             _pack_clusters(vols, n_allowed) if len(vols)
             else np.zeros(0, np.int32)
@@ -330,6 +343,12 @@ def _run_two_phase_chunks(
         ))
         n_clusters.append(int(len(vols)))
     t_phase1 = time.perf_counter() - t0
+    if tr.enabled:
+        # Same endpoints that define phase1_wall_s in the returned stats.
+        tr.add_span(
+            "phase1", "phase", t0, t0 + t_phase1,
+            attrs=dict(variant=variant, z=z, n_clusters=sum(n_clusters)),
+        )
 
     if variant == "2ps":
         cfg.setdefault("window_max", 32)
@@ -342,11 +361,12 @@ def _run_two_phase_chunks(
             cap_slack=float(cfg.pop("cap_slack", 1.15)),
         )
         assert not cfg, cfg  # partition_file validated the keys
-    per_stats, _ = _drive_core(
-        readers, num_vertices, core, write_assign=write_assign,
-        chunk_edges=chunk_edges, allowed=allowed, warm=warms, backend=backend,
-        prefetch=prefetch,
-    )
+    with tr.span("phase2", cat="phase", variant=variant):
+        per_stats, _ = _drive_core(
+            readers, num_vertices, core, write_assign=write_assign,
+            chunk_edges=chunk_edges, allowed=allowed, warm=warms,
+            backend=backend, prefetch=prefetch, trace=trace,
+        )
     wall = time.perf_counter() - t0
     return [
         dict(
@@ -388,6 +408,7 @@ def _run_restream_chunks(
     eps: Optional[float] = None,
     backend: str = "auto",
     prefetch: Optional[int] = None,
+    trace=None,
     **adwise_cfg,
 ) -> dict:
     """n-pass re-streaming where every pass re-reads the stream from disk and
@@ -399,6 +420,7 @@ def _run_restream_chunks(
     if passes < 1:
         raise ValueError(f"passes must be >= 1, got {passes}")
     z = len(readers)
+    tr = resolve_tracer(trace)
     cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
     m_per = np.array([r.num_edges for r in readers], dtype=np.int64)
     spills: List[_Spill] = []
@@ -418,7 +440,7 @@ def _run_restream_chunks(
                 lambda sp: lambda i, idx, p: sp.write(offsets[i] + idx, p)
             )(spill),
             chunk_edges=chunk_edges, allowed=allowed, backend=backend,
-            prefetch=prefetch,
+            prefetch=prefetch, trace=trace,
         )
     else:
         if z > 1:
@@ -429,17 +451,19 @@ def _run_restream_chunks(
         st = _run_baseline_chunks(
             base, readers[0], num_vertices, k, seed, chunk_edges,
             lambda off, a: spill.write_range(int(offsets[0]) + off, a),
+            trace=trace,
         )
         pass_stats = [st]
 
     def metrics_of(j_spill: _Spill) -> List[_PassMetrics]:
         # One fused read per instance: quality stats AND the next pass's
         # warm tables come out of the same chunked accumulation.
-        return [
-            _PassMetrics(readers[i], j_spill, int(offsets[i]), num_vertices,
-                         k, chunk_edges)
-            for i in range(z)
-        ]
+        with tr.span("metrics", cat="phase", z=z):
+            return [
+                _PassMetrics(readers[i], j_spill, int(offsets[i]),
+                             num_vertices, k, chunk_edges)
+                for i in range(z)
+            ]
 
     def score_rows_of(stats_list) -> List[int]:
         return [
@@ -454,19 +478,24 @@ def _run_restream_chunks(
         return (s0.get("h2d_rows", 0), s0.get("h2d_bytes", 0),
                 s0.get("scan_calls", 0))
 
-    def pipeline_of(stats_list) -> tuple[float, int, int, int]:
+    def pipeline_of(stats_list) -> tuple[float, int, int, int, float]:
         s0 = stats_list[0] if stats_list else {}
         return (s0.get("h2d_wait_s", 0.0), s0.get("refill_spans", 0),
-                s0.get("spans_prestaged", 0), s0.get("spans_missed", 0))
+                s0.get("spans_prestaged", 0), s0.get("spans_missed", 0),
+                s0.get("prestage_wall_s", 0.0))
 
     pm = metrics_of(spill)
+    if tr.enabled:
+        tr.add_span(
+            "pass-1", "pass", t0, time.perf_counter(),
+            track="restream-pass-1", attrs=dict(base=base, rd=pm[0].rd),
+        )
     pass_rd = [[pm[i].rd] for i in range(z)]
     pass_imbalance = [[pm[i].imbalance] for i in range(z)]
     pass_score_rows = [[s] for s in score_rows_of(pass_stats)]
     h2d_rows, h2d_bytes, scan_calls = h2d_of(pass_stats)
-    h2d_wait_s, refill_spans, spans_prestaged, spans_missed = pipeline_of(
-        pass_stats
-    )
+    (h2d_wait_s, refill_spans, spans_prestaged, spans_missed,
+     prestage_wall_s) = pipeline_of(pass_stats)
     prefetch_depth = pass_stats[0].get("prefetch_depth", 0)
     buffer_rows = pass_stats[0].get("buffer_rows", 0)
     best_spill = [spill] * z
@@ -476,12 +505,16 @@ def _run_restream_chunks(
 
     # The degree tables are pass-invariant: one counting read per instance,
     # reused by every warm start (no re-reads inside the pass loop).
-    degs = (
-        [_chunked_degrees(readers[i], num_vertices, chunk_edges) for i in range(z)]
-        if passes > 1
-        else []
-    )
+    if passes > 1:
+        with tr.span("degree-pass", cat="phase", z=z):
+            degs = [
+                _chunked_degrees(readers[i], num_vertices, chunk_edges)
+                for i in range(z)
+            ]
+    else:
+        degs = []
     for j in range(1, passes):
+        t_pass = time.perf_counter()
         warms = [pm[i].warm(degs[i]) for i in range(z)]
         prev_read = [
             (lambda pv, off: lambda start, count: pv.read(off + start, count))(
@@ -497,18 +530,19 @@ def _run_restream_chunks(
             )(spill),
             chunk_edges=chunk_edges, allowed=allowed, warm=warms,
             prev_read=prev_read, backend=backend,
-            prefetch=prefetch, resume=handle,
+            prefetch=prefetch, resume=handle, trace=trace,
         )
         pm = metrics_of(spill)
         dr, db, dc = h2d_of(pass_stats)
         h2d_rows += dr
         h2d_bytes += db
         scan_calls += dc
-        dw, ds, dp, dm = pipeline_of(pass_stats)
+        dw, ds, dp, dm, dpw = pipeline_of(pass_stats)
         h2d_wait_s += dw
         refill_spans += ds
         spans_prestaged += dp
         spans_missed += dm
+        prestage_wall_s += dpw
         buffer_rows = max(buffer_rows, pass_stats[0].get("buffer_rows", 0))
         improved = 0.0
         for i in range(z):
@@ -519,6 +553,15 @@ def _run_restream_chunks(
             if pm[i].rd <= best_rd[i]:
                 best_spill[i], best_rd[i] = spill, pm[i].rd
                 best_pass[i] = len(pass_rd[i])
+        if tr.enabled:
+            # Per-pass lane with the quality delta this pass bought.
+            tr.add_span(
+                f"pass-{j + 1}", "pass", t_pass, time.perf_counter(),
+                track=f"restream-pass-{j + 1}",
+                attrs=dict(rd=pm[0].rd,
+                           rd_delta=pass_rd[0][-2] - pass_rd[0][-1],
+                           improved=improved),
+            )
         prev = spill
         if eps is not None and improved < eps:
             break
@@ -527,14 +570,15 @@ def _run_restream_chunks(
     # Compose the final assignment from each instance's winning pass, then
     # drop the (passes x 4m-byte) intermediate spills — only the final spill
     # backs the returned memmap.
-    for i in range(z):
-        src = best_spill[i] if keep_best else spill
-        g0 = int(offsets[i])
-        for start in range(0, int(m_per[i]), chunk_edges):
-            c = min(chunk_edges, int(m_per[i]) - start)
-            final_spill.write_range(g0 + start, src.read(g0 + start, c))
-    for s in spills:
-        s.remove()
+    with tr.span("compose", cat="phase", passes_run=passes_run):
+        for i in range(z):
+            src = best_spill[i] if keep_best else spill
+            g0 = int(offsets[i])
+            for start in range(0, int(m_per[i]), chunk_edges):
+                c = min(chunk_edges, int(m_per[i]) - start)
+                final_spill.write_range(g0 + start, src.read(g0 + start, c))
+        for s in spills:
+            s.remove()
     score_rows = int(sum(sum(sr) for sr in pass_score_rows))
     return dict(
         k=k,
@@ -557,6 +601,7 @@ def _run_restream_chunks(
         refill_spans=refill_spans,
         spans_prestaged=spans_prestaged,
         spans_missed=spans_missed,
+        prestage_wall_s=prestage_wall_s,
         scan_calls=scan_calls,
         buffer_rows=buffer_rows,
         wall_time_s=time.perf_counter() - t0,
@@ -580,6 +625,7 @@ def partition_file(
     spill_dir: Optional[str] = None,
     backend: str = "auto",
     prefetch: Optional[int] = None,
+    trace=None,
     **cfg,
 ) -> PartitionResult:
     """Partition a file-resident edge stream with bounded edge memory.
@@ -611,6 +657,11 @@ def partition_file(
         default 2; 0 = synchronous refills). See
         :func:`repro.core.driver.resolve_prefetch` and the double-buffer
         protocol in :mod:`repro.core.driver`.
+      trace: an optional :class:`repro.obs.Tracer`. When given, the whole
+        pipeline records host-side spans into it (scan calls, refills,
+        read-ahead staging, restream passes, phases) and stats carry a
+        ``trace_summary`` (see :mod:`repro.obs`). ``None`` selects the
+        zero-overhead null tracer.
       cfg: strategy knobs, exactly as `repro.core.registry.run_partitioner`
         takes them (AdwiseConfig fields; `passes=`/`base=`/`keep_best=`/
         `eps=` for adwise-restream; `cluster_slack=` for 2ps;
@@ -642,13 +693,14 @@ def partition_file(
                  rows_read=0, stream_reads=0, stream_reads_measured=0,
                  h2d_rows=0, h2d_bytes=0, scan_calls=0, buffer_rows=0,
                  h2d_wait_s=0.0, prefetch_depth=0, refill_spans=0,
-                 spans_prestaged=0, spans_missed=0,
+                 spans_prestaged=0, spans_missed=0, prestage_wall_s=0.0,
                  unassigned=0),
         )
     if spill_dir is None:
         spill_dir = tempfile.mkdtemp(prefix="adwise-oocore-")
     os.makedirs(spill_dir, exist_ok=True)
 
+    tr = resolve_tracer(trace)
     rows_before = getattr(reader, "rows_read", 0)
     io_before = getattr(reader, "read_seconds", 0.0)
     final = _Spill(os.path.join(spill_dir, "assign.i32"), m)
@@ -688,7 +740,7 @@ def partition_file(
             per_stats, _ = _drive_core(
                 readers, n, acfg, write_assign=write_core,
                 chunk_edges=chunk_edges, allowed=allowed, backend=backend,
-                prefetch=prefetch,
+                prefetch=prefetch, trace=trace,
             )
             stats = dict(per_stats[0], stream_reads=1)
             if z > 1:
@@ -696,7 +748,8 @@ def partition_file(
         else:
             stats = _run_restream_chunks(
                 readers, n, k, seed, chunk_edges, spill_dir, m, offsets, final,
-                allowed=allowed, backend=backend, prefetch=prefetch, **cfg,
+                allowed=allowed, backend=backend, prefetch=prefetch,
+                trace=trace, **cfg,
             )
             if z > 1:
                 stats.update(name="spotlight-adwise-restream", z=z, spread=spread)
@@ -713,7 +766,7 @@ def partition_file(
         per_stats = _run_two_phase_chunks(
             readers, n, k, seed, chunk_edges, write_core,
             variant=strategy, allowed=allowed, backend=backend,
-            prefetch=prefetch, **cfg,
+            prefetch=prefetch, trace=trace, **cfg,
         )
         stats = per_stats[0]
         if z > 1:
@@ -737,7 +790,7 @@ def partition_file(
         per_stats, _ = _drive_core(
             readers, n, core, write_assign=write_core,
             chunk_edges=chunk_edges, allowed=allowed, backend=backend,
-            prefetch=prefetch,
+            prefetch=prefetch, trace=trace,
         )
         stats = dict(per_stats[0], stream_reads=1)
         if z > 1:
@@ -746,12 +799,12 @@ def partition_file(
         if z == 1:
             stats = _run_baseline_chunks(
                 strategy, reader, n, k, seed, chunk_edges,
-                lambda off, a: final.write_range(off, a), **cfg,
+                lambda off, a: final.write_range(off, a), trace=trace, **cfg,
             )
         else:
             stats = _run_stateless_spotlight(
                 strategy, readers, offsets, n, k, z, spread, seed,
-                chunk_edges, final, cfg,
+                chunk_edges, final, cfg, trace=trace,
             )
     else:
         raise KeyError(
@@ -785,12 +838,19 @@ def partition_file(
         unassigned=0,
     )
     # Chunked completeness check (no O(m) temporary; raises even under -O).
-    neg = 0
-    for start in range(0, m, chunk_edges):
-        a = final.read(start, min(chunk_edges, m - start))
-        neg += int((a < 0).sum())
+    with tr.span("spill-verify", cat="phase", m=m):
+        neg = 0
+        for start in range(0, m, chunk_edges):
+            a = final.read(start, min(chunk_edges, m - start))
+            neg += int((a < 0).sum())
     if neg:
         raise RuntimeError(f"partition_file left {neg} of {m} edges unassigned")
+    if tr.enabled:
+        tr.add_span(
+            "partition_file", "phase", t0, time.perf_counter(),
+            attrs=dict(strategy=strategy, k=k, z=z, m=m),
+        )
+        stats["trace_summary"] = tr.summary().as_dict()
     return PartitionResult(final.flush_readonly(), stats)
 
 
@@ -806,6 +866,7 @@ def _run_stateless_spotlight(
     chunk_edges: int,
     final: _Spill,
     cfg: dict,
+    trace=None,
 ) -> dict:
     """z>1 spotlight for the stateless hashes (hash/dbh): each instance runs
     the chunked assignment at its local spread-k over its byte range with
@@ -824,6 +885,7 @@ def _run_stateless_spotlight(
             lambda off, a, g0=g0, m_=local_to_global: final.write_range(
                 g0 + off, m_[a]
             ),
+            trace=trace,
             **cfg,
         )
         walls.append(st.get("wall_time_s", 0.0))

@@ -74,6 +74,7 @@ from repro.core.baselines import (
     _single_edge_out,
 )
 from repro.core.driver import StepCore, StreamResidency
+from repro.obs import resolve_tracer
 from repro.core.types import AdwiseConfig, PartitionResult
 from repro.graph import metrics
 
@@ -134,6 +135,7 @@ def restream_partition(
     seed: int = 0,
     n_chunks: int = 8,
     allowed: Optional[np.ndarray] = None,
+    trace=None,
     **adwise_cfg,
 ) -> PartitionResult:
     """n-pass re-streaming: warm-started ADWISE over a base pass.
@@ -152,20 +154,25 @@ def restream_partition(
         ``stats['passes_run']`` reports how many passes actually ran; this
         ``eps`` is the restream knob, distinct from ``AdwiseConfig.eps``
         (the Eq. 3/Θ score epsilon, which stays at its default here).
+      trace: optional :class:`repro.obs.Tracer` — records one ``pass``-
+        category span per restream pass (lane ``restream-pass-<j>``) and
+        threads through to the per-pass scan drivers. None disables tracing.
       adwise_cfg: AdwiseConfig fields for the ADWISE passes (pass 1 included
         when ``base == 'adwise'``), e.g. ``window_max=64``.
     """
     if passes < 1:
         raise ValueError(f"passes must be >= 1, got {passes}")
+    tr = resolve_tracer(trace)
     cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
     base_kw = {} if allowed is None else {"allowed": allowed}
     # Every ADWISE pass streams the same edges: share one device upload
     # across passes (later passes ship only their prev table).
     residency = StreamResidency()
+    t_p1 = time.perf_counter()
     if base == "adwise":
         res = partition_stream(
             edges, num_vertices, cfg, n_chunks=n_chunks, allowed=allowed,
-            residency=residency,
+            residency=residency, trace=trace,
         )
     else:
         res = registry.run_partitioner(
@@ -178,6 +185,12 @@ def restream_partition(
         return int(stats.get("score_rows", stats.get("score_count", 0) // max(k, 1)))
 
     pass_rd: List[float] = [_rd(edges, res.assign, num_vertices, k)]
+    if tr.enabled:
+        # Each restream pass gets its own lane; attrs carry the pass quality.
+        tr.add_span(
+            "pass-1", "pass", t_p1, time.perf_counter(),
+            track="restream-pass-1", attrs=dict(base=base, rd=pass_rd[0]),
+        )
     pass_imbalance: List[float] = [metrics.partition_balance(res.assign, k)]
     pass_wall: List[float] = [float(res.stats.get("wall_time_s", 0.0))]
     pass_score_rows: List[int] = [_score_rows(res.stats)]
@@ -186,15 +199,22 @@ def restream_partition(
     best_res, best_rd, best_pass = res, pass_rd[0], 1
     warm_wall = 0.0
 
-    for _ in range(1, passes):
+    for j in range(1, passes):
         t_w = time.perf_counter()
         warm = warm_from_assignment(edges, res.assign, num_vertices, k)
         warm_wall += time.perf_counter() - t_w
         res = partition_stream(
             edges, num_vertices, cfg, n_chunks=n_chunks, warm=warm,
-            allowed=allowed, residency=residency,
+            allowed=allowed, residency=residency, trace=trace,
         )
         pass_rd.append(_rd(edges, res.assign, num_vertices, k))
+        if tr.enabled:
+            tr.add_span(
+                f"pass-{j + 1}", "pass", t_w, time.perf_counter(),
+                track=f"restream-pass-{j + 1}",
+                attrs=dict(rd=pass_rd[-1],
+                           rd_delta=pass_rd[-2] - pass_rd[-1]),
+            )
         pass_imbalance.append(metrics.partition_balance(res.assign, k))
         pass_wall.append(float(res.stats.get("wall_time_s", 0.0)))
         pass_score_rows.append(_score_rows(res.stats))
@@ -232,6 +252,10 @@ def restream_partition(
         wall_time_s=float(sum(pass_wall)) + warm_wall,
         unassigned=metrics.unassigned_count(final.assign),
     )
+    if tr.enabled:
+        # final.stats carries the summary snapshot from its own pass; refresh
+        # so the returned stats see every pass's spans.
+        stats["trace_summary"] = tr.summary().as_dict()
     return PartitionResult(final.assign, stats)
 
 
@@ -249,6 +273,7 @@ def restream_partition_batched(
     seed: int = 0,
     n_chunks: int = 8,
     backend: str = "auto",
+    trace=None,
     **adwise_cfg,
 ) -> List[PartitionResult]:
     """n-pass re-streaming over ``z`` batched spotlight instances.
@@ -282,6 +307,7 @@ def restream_partition_batched(
             f"{base!r}): a non-adwise pass 1 runs per-instance baselines — "
             "use spotlight_partition(..., backend='loop')"
         )
+    tr = resolve_tracer(trace)
     cfg = AdwiseConfig(k=k, seed=seed, **adwise_cfg)
     z = int(streams.shape[0])
     valid = np.asarray(valid, bool)
@@ -294,10 +320,17 @@ def restream_partition_batched(
     results = partition_stream_batched(
         streams, valid, num_vertices, cfg,
         allowed=allowed, backend=backend, n_chunks=n_chunks,
-        residency=residency,
+        residency=residency, trace=trace,
     )
     pass_rd = [[_rd(edges_i[i], results[i].assign, num_vertices, k)]
                for i in range(z)]
+    if tr.enabled:
+        tr.add_span(
+            "pass-1", "pass", t0, time.perf_counter(),
+            track="restream-pass-1",
+            attrs=dict(base=base, z=z,
+                       rd_mean=float(np.mean([r[0] for r in pass_rd]))),
+        )
     pass_score_rows = [[int(results[i].stats.get("score_rows", 0))]
                        for i in range(z)]
     # h2d counters are run-level (one batched program per pass).
@@ -307,7 +340,8 @@ def restream_partition_batched(
     best_rd = [pass_rd[i][0] for i in range(z)]
     best_pass = [1] * z
 
-    for _ in range(1, passes):
+    for j in range(1, passes):
+        t_pass = time.perf_counter()
         warms = [
             warm_from_assignment(edges_i[i], results[i].assign,
                                  num_vertices, k)
@@ -316,7 +350,7 @@ def restream_partition_batched(
         results = partition_stream_batched(
             streams, valid, num_vertices, cfg,
             allowed=allowed, backend=backend, n_chunks=n_chunks, warm=warms,
-            residency=residency,
+            residency=residency, trace=trace,
         )
         h2d_rows += int(results[0].stats.get("h2d_rows", 0))
         h2d_bytes += int(results[0].stats.get("h2d_bytes", 0))
@@ -328,12 +362,20 @@ def restream_partition_batched(
             pass_score_rows[i].append(int(results[i].stats.get("score_rows", 0)))
             if rd <= best_rd[i]:
                 best[i], best_rd[i], best_pass[i] = results[i], rd, len(pass_rd[i])
+        if tr.enabled:
+            tr.add_span(
+                f"pass-{j + 1}", "pass", t_pass, time.perf_counter(),
+                track=f"restream-pass-{j + 1}",
+                attrs=dict(z=z, rd_delta_max=improved,
+                           rd_mean=float(np.mean([r[-1] for r in pass_rd]))),
+            )
         if eps is not None and improved < eps:
             break
 
     passes_run = len(pass_rd[0])
     wall = time.perf_counter() - t0
     finals = best if keep_best else results
+    tsum = tr.summary().as_dict() if tr.enabled else None
     out = []
     for i in range(z):
         rows = int(sum(pass_score_rows[i]))
@@ -356,6 +398,8 @@ def restream_partition_batched(
             wall_time_s=wall,
             unassigned=metrics.unassigned_count(finals[i].assign),
         )
+        if tsum is not None:
+            stats["trace_summary"] = tsum
         out.append(PartitionResult(finals[i].assign, stats))
     return out
 

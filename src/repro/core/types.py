@@ -150,6 +150,14 @@ class PartitionResult:
         staged by the read-ahead worker when the driver asked for it).
         ``repro.engine.latency_model.partition_latency`` prefers the
         measured stall over the modeled ``h2d_bytes`` bill when refills ran.
+        ``prestage_wall_s`` is the read-ahead worker's staging wall (disk
+        read + host stage, measured on the worker thread) — comparing it
+        against ``h2d_wait_s`` gives the measured overlap efficiency: the
+        fraction of staging wall hidden from the driver's critical path.
+        Runs invoked with a live ``repro.obs.Tracer`` (``trace=``) also
+        carry ``trace_summary``: the tracer's
+        :meth:`~repro.obs.TraceSummary.as_dict` snapshot
+        (``events``/``wall_s``/``categories``/``tracks``).
     """
 
     assign: np.ndarray

@@ -32,7 +32,8 @@ __all__ = ["pagerank", "label_propagation", "coloring", "triangle_count"]
 
 
 def pagerank(
-    g: PartitionedGraph, iters: int = 20, damping: float = 0.85, mesh: Mesh | None = None
+    g: PartitionedGraph, iters: int = 20, damping: float = 0.85,
+    mesh: Mesh | None = None, trace=None,
 ) -> Tuple[np.ndarray, dict]:
     mesh = mesh or engine_mesh(k=g.k)
     v = g.num_vertices
@@ -44,7 +45,7 @@ def pagerank(
     def apply(state, synced, degrees):
         return (1.0 - damping) / v + damping * synced
 
-    step = make_superstep(g, msg, apply, mesh)
+    step = make_superstep(g, msg, apply, mesh, trace=trace)
     state = jnp.full((v, 1), 1.0 / v, jnp.float32)
     for _ in range(iters):
         state = step(state)
@@ -52,7 +53,8 @@ def pagerank(
 
 
 def label_propagation(
-    g: PartitionedGraph, max_iters: int = 64, mesh: Mesh | None = None
+    g: PartitionedGraph, max_iters: int = 64, mesh: Mesh | None = None,
+    trace=None,
 ) -> Tuple[np.ndarray, dict]:
     """Connected components by min-label flooding; converged when stable."""
     mesh = mesh or engine_mesh(k=g.k)
@@ -65,7 +67,7 @@ def label_propagation(
         has_nbr = synced < 3.0e38
         return jnp.where(has_nbr, jnp.minimum(state, synced), state)
 
-    step = make_superstep(g, msg, apply, mesh, combine="min")
+    step = make_superstep(g, msg, apply, mesh, combine="min", trace=trace)
     state = jnp.arange(v, dtype=jnp.float32)[:, None]
     it = 0
     for it in range(1, max_iters + 1):
@@ -78,7 +80,8 @@ def label_propagation(
 
 
 def coloring(
-    g: PartitionedGraph, max_colors: int = 64, max_iters: int = 256, mesh: Mesh | None = None
+    g: PartitionedGraph, max_colors: int = 64, max_iters: int = 256,
+    mesh: Mesh | None = None, trace=None,
 ) -> Tuple[np.ndarray, dict]:
     """Largest-priority-first greedy coloring (Jones–Plassmann schedule).
 
@@ -115,7 +118,7 @@ def coloring(
         a_new = jnp.where(can, big, a)
         return jnp.concatenate([a_new[:, None], b], axis=1)
 
-    step = make_superstep(g, msg, apply, mesh, combine="min")
+    step = make_superstep(g, msg, apply, mesh, combine="min", trace=trace)
     state = jnp.concatenate([(-prio)[:, None], jnp.ones((v, c), jnp.float32)], axis=1)
     it = 0
     for it in range(1, max_iters + 1):
@@ -129,7 +132,8 @@ def coloring(
 
 
 def triangle_count(
-    g: PartitionedGraph, sketch_bits: int = 256, mesh: Mesh | None = None
+    g: PartitionedGraph, sketch_bits: int = 256, mesh: Mesh | None = None,
+    trace=None,
 ) -> Tuple[int, dict]:
     """Heavy workload: approximate triangle counting via neighbourhood sketches.
 
@@ -151,7 +155,7 @@ def triangle_count(
         return jnp.minimum(synced, 1.0)  # OR of neighbour one-bit ids
 
     # Round 1: build neighbourhood bitmaps.
-    step = make_superstep(g, msg, apply, mesh)
+    step = make_superstep(g, msg, apply, mesh, trace=trace)
     ident = jax.nn.one_hot(jnp.asarray(slot), b, dtype=jnp.float32)
     bitmaps = step(ident)  # (V, b) — 1 iff some neighbour hashes to bit j
 

@@ -33,6 +33,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.engine.partitioned import PartitionedGraph
+from repro.obs import resolve_tracer
 
 __all__ = ["make_superstep", "engine_mesh", "gather_local"]
 
@@ -97,6 +98,7 @@ def make_superstep(
     apply_fn: Callable,  # (state, synced_acc, degrees) -> state
     mesh: Mesh,
     combine: str = "add",
+    trace=None,
 ):
     """Build a jitted superstep: state (V, d) -> state (V, d).
 
@@ -153,4 +155,15 @@ def make_superstep(
     def superstep(state):
         return shard_step(state, edges_d, evalid_d, repl_t, g.degrees)
 
-    return superstep
+    tr = resolve_tracer(trace)
+    if not tr.enabled:
+        return superstep
+
+    # Tracing wraps the jitted call from the host side: the span covers
+    # dispatch only (no block_until_ready, no added sync) and lives outside
+    # the traced program, so the compiled superstep is unchanged.
+    def traced_superstep(state):
+        with tr.span("superstep", cat="engine", k=k, combine=combine):
+            return superstep(state)
+
+    return traced_superstep

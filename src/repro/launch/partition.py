@@ -37,6 +37,17 @@ chunks, and the report includes the measured ingest wall / stream reads.
 `--prefetch N` sets the double-buffered ring-refill depth (0 = synchronous
 escape hatch); the report then shows the measured h2d stall and the fraction
 of refill spans the read-ahead worker had prestaged.
+
+`--trace out.json` records a span timeline of the run with
+`repro.obs.Tracer` and writes it as Chrome trace-event JSON — open it in
+https://ui.perfetto.dev (or chrome://tracing). Tracks: the main stepping
+loop (`scan`/`refill`/`phase` spans), the `adwise-readahead` worker
+(`stage` spans + queue-depth counter), and one `restream-pass-<j>` lane per
+re-streaming pass. The result's `stats["trace_summary"]` carries the
+aggregate view (`events`, `wall_s`, per-category `{count, wall_s}`,
+`tracks`); the same dict is printed at the end of a traced run. Tracing is
+host-side only — spans wrap dispatch and host waits, never adding a device
+sync — so `--trace` does not perturb the measured pipeline.
 """
 from __future__ import annotations
 
@@ -97,7 +108,7 @@ def strategy_cfg_kwargs(args) -> dict:
     return cfg
 
 
-def run_partition_file(path, args):
+def run_partition_file(path, args, trace=None):
     """Out-of-core path: ingest (optional) → partition_file → chunked metrics."""
     from repro.graph.io import EdgeFileReader, ingest_text
 
@@ -151,12 +162,22 @@ def run_partition_file(path, args):
         spread=args.spread if args.parallel > 1 else None, seed=args.seed,
         chunk_edges=args.chunk_edges, backend=backend,
         spill_dir=args.spill_dir or spill_tmp, prefetch=args.prefetch,
-        **strategy_cfg_kwargs(args),
+        trace=trace, **strategy_cfg_kwargs(args),
     )
     return reader, res, spill_tmp, ingest_tmp
 
 
-def run_partition(edges, n, args):
+def run_partition(edges, n, args, trace=None):
+    from repro.obs import resolve_tracer
+
+    tr = resolve_tracer(trace)
+    # In-memory paths get one coarse phase span (spotlight/registry routes
+    # don't thread a tracer); the file-driven path traces the full pipeline.
+    with tr.span("partition", cat="phase", strategy=args.strategy, k=args.k):
+        return _run_partition(edges, n, args)
+
+
+def _run_partition(edges, n, args):
     if args.parallel > 1:
         cfg = None
         strategy_cfg = None
@@ -242,19 +263,31 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="record a span timeline of the run (repro.obs) and "
+                         "write Chrome trace-event JSON here — open in "
+                         "https://ui.perfetto.dev. Host-side only: no added "
+                         "device syncs")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
 
     from_file = args.ingest or os.path.exists(args.graph)
     reader = None
     spill_tmp = ingest_tmp = None
     if from_file:
-        reader, res, spill_tmp, ingest_tmp = run_partition_file(args.graph, args)
+        reader, res, spill_tmp, ingest_tmp = run_partition_file(
+            args.graph, args, trace=tracer)
         n = reader.num_vertices
         edges = None  # never resident during partitioning
     else:
         edges, n = make_graph(args.graph, seed=args.seed, scale=args.scale)
         print(f"graph={args.graph} |V|={n} |E|={len(edges)} k={args.k}")
-        res = run_partition(edges, n, args)
+        res = run_partition(edges, n, args, trace=tracer)
     # The unassigned count is reported explicitly, so quality metrics run
     # under the 'drop' policy: a partial assignment yields numbers over the
     # assigned subset *plus* a nonzero unassigned= field — never a silent
@@ -298,12 +331,17 @@ def main(argv=None):
         spans = int(res.stats.get("refill_spans", 0) or 0)
         if spans:
             pre = int(res.stats.get("spans_prestaged", 0) or 0)
+            wait = float(res.stats.get("h2d_wait_s", 0.0) or 0.0)
+            prestage = float(res.stats.get("prestage_wall_s", 0.0) or 0.0)
+            # Measured overlap: fraction of the worker's staging wall hidden
+            # from the driver's critical path (1 - stall/staging).
+            overlap = max(0.0, 1.0 - wait / prestage) if prestage > 0 else 0.0
             print(
                 f"pipeline: prefetch={res.stats.get('prefetch_depth', 0)}, "
-                f"h2d_wait={res.stats.get('h2d_wait_s', 0.0):.3f}s, "
+                f"h2d_wait={wait:.3f}s, prestage_wall={prestage:.3f}s, "
                 f"spans={spans} ({pre} prestaged / "
-                f"{int(res.stats.get('spans_missed', 0) or 0)} missed, "
-                f"overlap={pre / spans:.0%})"
+                f"{int(res.stats.get('spans_missed', 0) or 0)} missed), "
+                f"overlap={overlap:.0%}"
             )
 
     out = dict(
@@ -325,14 +363,14 @@ def main(argv=None):
         g = build_partitioned_graph(edges, res.assign, n, args.k)
         t0 = time.perf_counter()
         if args.workload == "pagerank":
-            _, info = pagerank(g, iters=min(args.iters, 30))
+            _, info = pagerank(g, iters=min(args.iters, 30), trace=tracer)
             info["supersteps"] = args.iters
         elif args.workload == "coloring":
-            _, info = coloring(g)
+            _, info = coloring(g, trace=tracer)
         elif args.workload == "wcc":
-            _, info = label_propagation(g)
+            _, info = label_propagation(g, trace=tracer)
         else:
-            _, info = triangle_count(g)
+            _, info = triangle_count(g, trace=tracer)
         t_proc_local = time.perf_counter() - t0
         model = process_latency(g, info["supersteps"], info["msg_width"], PAPER_CLUSTER)
         total = t_part + model["t_total_s"]
@@ -347,6 +385,16 @@ def main(argv=None):
             processing_model=model,
             total_latency_s=total,
         )
+    if tracer is not None:
+        n_events = tracer.export(args.trace)
+        summ = tracer.summary()
+        cats = ", ".join(
+            f"{c}:{d['count']}x/{d['wall_s']:.3f}s"
+            for c, d in sorted(summ.categories.items())
+        )
+        print(f"trace: {n_events} events -> {args.trace} "
+              f"(wall={summ.wall_s:.3f}s; {cats})")
+        out["trace"] = dict(path=args.trace, **summ.as_dict())
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

@@ -1,0 +1,32 @@
+"""Zero-dep tracing + metrics for the streaming-partition pipeline.
+
+See README.md in this directory for the span model, track layout, and
+overhead guarantees; see tracer.py / export.py for the API.
+
+    from repro.obs import Tracer
+    tr = Tracer()
+    res = partition_file(reader, "hdrf", 8, z=2, trace=tr)
+    tr.export("trace.json")          # open in https://ui.perfetto.dev
+    print(res.stats["trace_summary"])
+"""
+from .export import chrome_trace, export_chrome_trace, validate_chrome_trace
+from .tracer import (
+    NULL_TRACER,
+    NullTracer,
+    SpanRecord,
+    Tracer,
+    TraceSummary,
+    resolve_tracer,
+)
+
+__all__ = [
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "resolve_tracer",
+    "TraceSummary",
+    "SpanRecord",
+    "chrome_trace",
+    "export_chrome_trace",
+    "validate_chrome_trace",
+]

@@ -1,0 +1,147 @@
+"""Bench regression gate: diff the two newest ``BENCH_<n>.json`` summaries.
+
+    PYTHONPATH=src python -m tools.bench_compare bench_logs/
+    PYTHONPATH=src python -m tools.bench_compare bench_logs/ --threshold 0.25
+
+Reads the two highest-numbered ``BENCH_<n>.json`` files a kept
+``--json-dir`` accumulated (see benchmarks/run.py), prints per-row deltas
+for the headline walls (partition file/sync/memory walls, h2d stall,
+prestage wall) and the jit compile counts, and exits non-zero when any
+tracked wall regressed by more than ``--threshold`` (default 25%).
+
+tools/ci.sh runs it warn-only (`|| echo warn`): a single CI box's bench
+walls are noisy, so the gate flags rather than blocks there; a perf-CI
+runner with pinned hardware can drop the `||` and make it binding.
+
+Fewer than two summaries (fresh checkout, first run) exits 0 — there is
+nothing to compare yet, which is not a regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+# Wall-clock keys gated by --threshold (from BENCH summary; lower = better).
+_WALL_KEYS = (
+    "partition_file_wall_s",
+    "partition_file_sync_wall_s",
+    "partition_memory_wall_s",
+    "h2d_wait_s",
+    "prestage_wall_s",
+)
+# Context keys printed but never gated (counts / ratios / throughputs).
+_INFO_KEYS = (
+    "overlap_efficiency",
+    "ingest_mb_s",
+    "read_mb_s",
+    "h2d_bytes",
+)
+
+
+def _bench_files(json_dir: str):
+    """(n, path) pairs for every BENCH_<n>.json in json_dir, sorted by n."""
+    if not os.path.isdir(json_dir):
+        return []
+    pairs = [
+        (int(m.group(1)), os.path.join(json_dir, f))
+        for f in os.listdir(json_dir)
+        if (m := re.fullmatch(r"BENCH_(\d+)\.json", f))
+    ]
+    return sorted(pairs)
+
+
+def _fmt(v):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _delta(old, new):
+    """Relative change new vs old; None when either side is missing/zero."""
+    if not isinstance(old, (int, float)) or not isinstance(new, (int, float)):
+        return None
+    if old <= 0:
+        return None
+    return (new - old) / old
+
+
+def compare(old_doc: dict, new_doc: dict, threshold: float):
+    """(lines, regressions) — report lines plus the walls over threshold."""
+    old_s, new_s = old_doc.get("summary") or {}, new_doc.get("summary") or {}
+    lines = [f"{'key':32s} {'old':>12s} {'new':>12s} {'delta':>8s}"]
+    regressions = []
+    for key in _WALL_KEYS:
+        old_v, new_v = old_s.get(key), new_s.get(key)
+        d = _delta(old_v, new_v)
+        mark = ""
+        if d is not None and d > threshold:
+            regressions.append((key, old_v, new_v, d))
+            mark = "  << REGRESSION"
+        ds = f"{d:+.0%}" if d is not None else "-"
+        lines.append(f"{key:32s} {_fmt(old_v):>12s} {_fmt(new_v):>12s} "
+                     f"{ds:>8s}{mark}")
+    for key in _INFO_KEYS:
+        old_v, new_v = old_s.get(key), new_s.get(key)
+        if old_v is None and new_v is None:
+            continue
+        d = _delta(old_v, new_v)
+        ds = f"{d:+.0%}" if d is not None else "-"
+        lines.append(f"{key:32s} {_fmt(old_v):>12s} {_fmt(new_v):>12s} "
+                     f"{ds:>8s}")
+    # Compile budget: any growth without a geometry change is suspect — the
+    # pow2-Rq contract (tests/test_compile_budget.py) bounds this per run.
+    old_c = old_doc.get("jit_scan_compiles") or {}
+    new_c = new_doc.get("jit_scan_compiles") or {}
+    for key in sorted(set(old_c) | set(new_c)):
+        lines.append(f"{'compiles.' + key:32s} {_fmt(old_c.get(key)):>12s} "
+                     f"{_fmt(new_c.get(key)):>12s} {'':>8s}")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_dir", help="directory of BENCH_<n>.json summaries "
+                                     "(benchmarks/run.py --json-dir)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative wall regression that fails the gate "
+                         "(default 0.25 = 25%%)")
+    args = ap.parse_args(argv)
+
+    files = _bench_files(args.json_dir)
+    if len(files) < 2:
+        print(f"bench_compare: {len(files)} summary file(s) in "
+              f"{args.json_dir} — need 2 to compare; nothing to gate")
+        return 0
+    (old_n, old_path), (new_n, new_path) = files[-2], files[-1]
+    with open(old_path) as f:
+        old_doc = json.load(f)
+    with open(new_path) as f:
+        new_doc = json.load(f)
+    print(f"bench_compare: BENCH_{old_n} ({old_doc.get('mode')}) -> "
+          f"BENCH_{new_n} ({new_doc.get('mode')}), "
+          f"threshold {args.threshold:.0%}")
+    if old_doc.get("mode") != new_doc.get("mode"):
+        print("bench_compare: modes differ — walls are not comparable; "
+              "reporting without gating")
+        for line in compare(old_doc, new_doc, threshold=float("inf"))[0]:
+            print(line)
+        return 0
+    lines, regressions = compare(old_doc, new_doc, args.threshold)
+    for line in lines:
+        print(line)
+    if regressions:
+        for key, old_v, new_v, d in regressions:
+            print(f"bench_compare: {key} regressed {d:+.0%} "
+                  f"({_fmt(old_v)}s -> {_fmt(new_v)}s)", file=sys.stderr)
+        return 1
+    print("bench_compare: no wall regression over threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

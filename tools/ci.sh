@@ -68,6 +68,12 @@ if (( ${#BENCH_AFTER[@]} <= ${#BENCH_BEFORE[@]} )); then
   exit 1
 fi
 
+# Bench regression gate: diff the two newest BENCH summaries. Warn-only on
+# this shared box — smoke-scale walls are noisy — but the report lands in
+# the log and a pinned perf runner can make it binding by dropping the ||.
+python -m tools.bench_compare bench_logs \
+  || echo "WARN: bench_compare flagged a wall regression (warn-only here)"
+
 # Multi-device path: batched spotlight (shard_map over instances) + padded
 # engine mesh on 2 fake CPU devices, every run.
 XLA_FLAGS="--xla_force_host_platform_device_count=2" \
@@ -107,6 +113,48 @@ with tempfile.TemporaryDirectory() as td:
     print("2-device hdrf z=4 partition_file smoke OK "
           f"({res.stats['name']}, backend={res.stats.get('backend')}, "
           f"devices={jax.device_count()})")
+PY
+
+# Traced pipeline smoke: drive the real launcher CLI with --trace over a
+# file-driven hdrf z=2 run, then validate the emitted Chrome trace-event
+# JSON (schema + globally monotonic ts) and the contract that makes the
+# timeline trustworthy: scan-span count == scan_calls, and both the main
+# stepping track and the adwise-readahead worker track are present. The
+# trace is kept in bench_logs/ and uploaded as a CI artifact next to the
+# BENCH summaries.
+python - <<'PY'
+import json, os, tempfile
+import numpy as np
+from repro.graph import rmat
+from repro.graph.io import write_edge_file
+from repro.launch import partition as launch
+from repro.obs import validate_chrome_trace
+
+os.makedirs("bench_logs", exist_ok=True)
+trace_path = "bench_logs/trace_smoke.json"
+edges, n = rmat(10, 4000, seed=0)
+with tempfile.TemporaryDirectory() as td:
+    path = os.path.join(td, "g.adw")
+    write_edge_file(path, edges, n)
+    out = launch.main([
+        "--graph", path, "--strategy", "hdrf", "--k", "8",
+        "--z", "2", "--spread", "4", "--chunk-edges", "1024",
+        "--prefetch", "2", "--workload", "none",
+        "--trace", trace_path,
+    ])
+doc = json.load(open(trace_path))
+errs = validate_chrome_trace(doc)
+assert not errs, f"invalid chrome trace: {errs[:5]}"
+scan_spans = [e for e in doc["traceEvents"]
+              if e.get("ph") == "X" and e.get("cat") == "scan"]
+scan_calls = int(out["stats"].get("scan_calls", 0))
+assert scan_calls and len(scan_spans) == scan_calls, (
+    f"scan span count {len(scan_spans)} != scan_calls {scan_calls}")
+tracks = {e["args"]["name"] for e in doc["traceEvents"]
+          if e.get("ph") == "M" and e.get("name") == "thread_name"}
+assert "main" in tracks and "adwise-readahead" in tracks, tracks
+print(f"traced smoke OK: {len(doc['traceEvents'])} events, "
+      f"{scan_calls} scan spans, tracks={sorted(tracks)} -> {trace_path}")
 PY
 
 echo "bench summaries kept:"

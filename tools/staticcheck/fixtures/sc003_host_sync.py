@@ -57,3 +57,18 @@ def make_step(stream):
         return carry, probe
 
     return step
+
+
+def make_step_traced_tracer(trace):
+    def make_step(stream):
+        def step(carry, _):
+            # SC003: tracer call inside the jit-traced step closure — it
+            # would record trace/compile time, not per-call run time.
+            with trace.span("step", cat="scan"):
+                carry = carry + 1
+            trace.add_span("tick", "scan", 0.0, 1.0)  # SC003 too
+            return carry, carry
+
+        return step
+
+    return make_step

@@ -401,6 +401,20 @@ _SYNC_ALWAYS = {
 }
 _DEVICE_PRODUCERS = re.compile(r"^(_run_scan\w*|run_chunk|_ring_write|refill)$")
 _DEVICE_NAME_SEEDS = {"carry", "buf", "carry_buf"}
+# repro.obs recording API. Tracing is HOST-side only: a tracer call inside a
+# jit-traced step closure reads the host clock at *trace* time (the span is
+# baked into the compiled program, not measured per call) and mutates host
+# state from a traced context — both silently wrong.
+_TRACER_API = {"span", "add_span", "instant", "gauge", "counter", "event"}
+
+
+def _tracer_base(node: ast.AST) -> bool:
+    """True when a dotted receiver names a tracer: any component is `tr` or
+    contains `trace` (`trace.span`, `self.trace`, `self._trace`, `tracer`)."""
+    base = dotted(node)
+    if not base:
+        return False
+    return any(p == "tr" or "trace" in p for p in base.lower().split("."))
 
 
 class SC003:
@@ -423,6 +437,7 @@ class SC003:
         for fn, why in closures.items():
             tainted = propagate(fn, param_names(fn))
             yield from self._scan_region(fn, tainted, f"step closure ({why})")
+            yield from self._scan_tracer(fn, f"step closure ({why})")
         for fn, region, owner in self._stepping_regions(tree):
             if fn in closures:
                 continue
@@ -529,6 +544,26 @@ class SC003:
                             f"{callee}({f0}, ...) materializes device "
                             f"tree(s) {sorted(hit)}",
                         )
+
+    def _scan_tracer(self, fn: ast.AST, where: str) -> Iterator[Finding]:
+        """Tracer calls inside jit-traced step closures. Stepping *loops*
+        may trace (they run on the host); step *closures* must not — the
+        call would record compile-time, not run-time."""
+        for node in ast.walk(fn):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _TRACER_API
+            ):
+                continue
+            if _tracer_base(node.func.value):
+                yield self._f(
+                    node, where,
+                    f"tracer call `.{node.func.attr}()` — tracing is "
+                    "host-side only; inside a traced closure it records "
+                    "trace/compile time (not run time) and mutates host "
+                    "state from a traced context",
+                )
 
     def _f(self, node, where, what) -> Finding:
         return Finding(
