@@ -1,4 +1,12 @@
-"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference wall-times.
+"""Kernel micro-benchmarks: wall time per dispatch tier, per op.
+
+Each op is timed at every tier runnable on this host (`xla` everywhere,
+`pallas-tpu` / `pallas-cpu` where the backend lowers them) plus explicit
+`interpret` where Pallas is importable — interpret is a *debug* tier, timed
+here only so the chosen-tier speedup over it stays visible in the perf
+trajectory. The `chosen` column is what `repro.kernels.ops.resolve_tier`
+picks for the op on this host (autotuned; `$ADWISE_KERNEL_TIER` overrides),
+and is never interpret.
 
 CPU wall-times are indicative only (TPU is the target); the structural
 metric that transfers is the op count / fusion shape, so we also report the
@@ -15,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.kernels import ops
 from repro.kernels.window_score import BW, LANE
 
@@ -28,12 +37,31 @@ def _time(fn, *a, n=3, **kw):
     return (time.perf_counter() - t0) / n
 
 
+def _bench_tiers(op: str) -> list[str]:
+    """Every runnable tier, plus explicit interpret where Pallas exists."""
+    tiers = list(ops.available_tiers(op))
+    if compat.has_pallas(op in ("segment_sum", "flash_attention")):
+        if op != "segment_sum" or compat.HAS_PREFETCH_GRID:
+            tiers.append(ops.INTERPRET_TIER)
+    return tiers
+
+
+def _row(op: str, shape: str, fn, args, vmem_kb: float) -> dict:
+    chosen = ops.resolve_tier(op)
+    walls_ms = {t: _time(fn, *args, tier=t) * 1e3 for t in _bench_tiers(op)}
+    cols = " ".join(f"{t}={ms:.2f}" for t, ms in walls_ms.items())
+    print(f"{op},{shape},chosen={chosen},{cols},vmem_tile_KB={vmem_kb:.0f}")
+    return dict(kernel=op, shape=shape, chosen_tier=chosen,
+                walls_ms=walls_ms, vmem_tile_kb=round(vmem_kb, 1))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
     rng = np.random.default_rng(0)
-    print("kernel,shape,ref_ms,pallas_interp_ms,vmem_tile_KB")
+    print("kernel,shape,chosen,per-tier ms,vmem_tile_KB")
+    rows = []
 
     shapes = [(256, 32), (512, 32)] if args.quick else [(256, 32), (512, 32), (1024, 64)]
     for w, k in shapes:
@@ -47,30 +75,37 @@ def main(argv=None):
         allowed = np.ones(k, bool)
         a = (uv, valid, repu, repv, degu, degv, bal, allowed,
              jnp.float32(1.0), jnp.int32(50))
-        t_ref = _time(ops.window_score, *a, impl="ref")
-        t_pl = _time(ops.window_score, *a, impl="pallas")
         w_pad = -(-w // BW) * BW
         k_pad = -(-k // LANE) * LANE
         vmem = (5 * w_pad * 4 + 2 * w_pad * k_pad * 4 + BW * k_pad * 4) / 1024
-        print(f"window_score,W{w}xK{k},{t_ref*1e3:.2f},{t_pl*1e3:.2f},{vmem:.0f}")
+        rows.append(_row("window_score", f"W{w}xK{k}", ops.window_score, a, vmem))
 
     for e, d, s in ([(2048, 32, 256)] if args.quick else [(2048, 32, 256), (8192, 64, 1024)]):
         seg = np.sort(rng.integers(0, s, e)).astype(np.int32)
         data = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32))
-        t_ref = _time(ops.segment_sum_sorted, data, seg, s, impl="ref")
-        t_pl = _time(ops.segment_sum_sorted, data, seg, s, impl="pallas")
-        print(f"segment_sum,E{e}xD{d}xS{s},{t_ref*1e3:.2f},{t_pl*1e3:.2f},"
-              f"{(512*d*4 + 128*d*4)//1024}")
+        rows.append(_row("segment_sum", f"E{e}xD{d}xS{s}",
+                         ops.segment_sum_sorted, (data, seg, s),
+                         (512 * d * 4 + 128 * d * 4) / 1024))
 
     for b, hq, hkv, t, dh in ([(1, 4, 2, 256, 64)] if args.quick
                               else [(1, 4, 2, 256, 64), (2, 8, 4, 512, 64)]):
         q = jnp.asarray(rng.normal(size=(b, hq, t, dh)).astype(np.float32))
         kk = jnp.asarray(rng.normal(size=(b, hkv, t, dh)).astype(np.float32))
         v = jnp.asarray(rng.normal(size=(b, hkv, t, dh)).astype(np.float32))
-        t_ref = _time(ops.flash_attention, q, kk, v, impl="ref")
-        t_pl = _time(ops.flash_attention, q, kk, v, impl="pallas")
-        print(f"flash_attention,B{b}H{hq}T{t}D{dh},{t_ref*1e3:.2f},{t_pl*1e3:.2f},"
-              f"{(128*dh*4*3 + 128*128*4)//1024}")
+        rows.append(_row("flash_attention", f"B{b}H{hq}T{t}D{dh}",
+                         ops.flash_attention, (q, kk, v),
+                         (128 * dh * 4 * 3 + 128 * 128 * 4) / 1024))
+
+    # Headline numbers for the BENCH summary: the largest shape of each hot
+    # op, billed at its chosen (non-interpret) tier.
+    def _head(op: str):
+        last = [r for r in rows if r["kernel"] == op][-1]
+        return last["chosen_tier"], last["walls_ms"][last["chosen_tier"]] / 1e3
+
+    ws_tier, ws_wall = _head("window_score")
+    _, ss_wall = _head("segment_sum")
+    return dict(rows=rows, kernel_tier=ws_tier,
+                window_score_wall_s=ws_wall, segment_sum_wall_s=ss_wall)
 
 
 if __name__ == "__main__":

@@ -75,6 +75,14 @@ def _summarize(results: dict) -> dict:
         head.setdefault("partition_batched_s", {})[str(row.get("devices"))] = (
             row.get("t_partition_batched_s")
         )
+    kernels = results.get("kernels") or {}
+    if kernels:
+        # Chosen dispatch tier + hot-kernel walls at that tier (the tier
+        # ladder replaced unconditional interpret mode; a flip back to a
+        # slower tier shows up here and in bench_compare).
+        head["kernel_tier"] = kernels.get("kernel_tier")
+        head["window_score_wall_s"] = kernels.get("window_score_wall_s")
+        head["segment_sum_wall_s"] = kernels.get("segment_sum_wall_s")
     return head
 
 
@@ -148,7 +156,8 @@ def main(argv=None):
         sec("\n=== ADWISE-balance MoE routing (smoke) ===", "moe_balance",
             lambda: bench_moe_balance.main(
                 ["--steps", "3", "--tokens", "128", "--d", "16"]))
-        sec("\n=== kernels (smoke) ===", "kernels",
+        results["kernels"] = sec(
+            "\n=== kernels (smoke) ===", "kernels",
             lambda: bench_kernels.main(["--quick"]))
         sec("\n=== roofline table ===", "roofline", lambda: roofline.main([]))
         print(f"\nsmoke pass over all bench entrypoints done in {time.time()-t0:.0f}s")
@@ -178,7 +187,8 @@ def main(argv=None):
         sec("\n=== beyond-paper: ADWISE-balance MoE routing ===", "moe_balance",
             lambda: bench_moe_balance.main(
                 ["--steps", "12" if not args.full else "40"]))
-        sec("\n=== kernels (interpret-mode wall times, CPU-indicative) ===",
+        results["kernels"] = sec(
+            "\n=== kernels (per-tier wall times, CPU-indicative) ===",
             "kernels",
             lambda: bench_kernels.main(["--quick"] if not args.full else []))
         sec("\n=== roofline table (from dry-run artifact, if present) ===",
@@ -206,6 +216,7 @@ def main(argv=None):
             summary=dict(_summarize(results), jit_scan_compiles=compiles),
             jit_scan_compiles=compiles,
             io=results.get("io"),
+            kernels=results.get("kernels"),
             scaling=results.get("scaling"),
             total_latency=results.get("total_latency"),
         )

@@ -38,6 +38,7 @@ __all__ = [
     "HAS_PALLAS_TPU",
     "HAS_PREFETCH_GRID",
     "has_pallas",
+    "has_pallas_cpu_lowering",
     "pallas_interpret",
     "pallas",
     "pallas_tpu",
@@ -142,3 +143,43 @@ def has_pallas(require_tpu_support: bool = False) -> bool:
 def pallas_interpret() -> bool:
     """True when Pallas kernels must run in interpret mode (non-TPU backend)."""
     return jax.default_backend() != "tpu"
+
+
+# Lazy: probing requires compiling a (tiny) kernel, so it must not run at
+# import time. None = not probed yet.
+_PALLAS_CPU_LOWERING: bool | None = None
+
+
+def has_pallas_cpu_lowering() -> bool:
+    """True when this JAX can *lower* (not interpret) Pallas on the CPU backend.
+
+    Newer JAX grows a real CPU lowering path for ``pallas_call``; 0.4.x raises
+    ``Only interpret mode is supported on CPU backend``. The kernel tier
+    resolver (:mod:`repro.kernels.ops`) consults this once: when it is False
+    the ``pallas-cpu`` tier is simply unavailable and dispatch lands on XLA —
+    never on silent interpret-mode emulation. Probed by compiling a trivial
+    copy kernel the first time it is asked; the answer is cached for the
+    process.
+    """
+    global _PALLAS_CPU_LOWERING
+    if _PALLAS_CPU_LOWERING is not None:
+        return _PALLAS_CPU_LOWERING
+    if not HAS_PALLAS or jax.default_backend() == "tpu":
+        _PALLAS_CPU_LOWERING = False
+        return False
+    import jax.numpy as jnp
+
+    def _copy(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    try:
+        out = pallas.pallas_call(
+            _copy,
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            interpret=False,
+        )(jnp.zeros((8, 128), jnp.float32))
+        jax.block_until_ready(out)
+        _PALLAS_CPU_LOWERING = True
+    except Exception:  # ValueError on 0.4.x; be permissive about the message
+        _PALLAS_CPU_LOWERING = False
+    return _PALLAS_CPU_LOWERING

@@ -385,6 +385,11 @@ def _make_step(
     return step
 
 
+def _ceil_pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1) — the length-bucket key."""
+    return 1 << (max(int(x), 1) - 1).bit_length()
+
+
 def partition_stream(
     edges: np.ndarray,
     num_vertices: int,
@@ -520,6 +525,21 @@ def partition_stream_batched(
       identical inputs the assignment is bit-identical to
       :func:`partition_stream` — the batched step function is the same
       trace, vmapped.
+
+    Length bucketing: instances are grouped by ``ceil_pow2(m_i)`` and each
+    bucket runs as its own batched scan padded to
+    ``min(ceil_pow2(max m_i in bucket), per)`` rows — the same
+    bounded-kernel-shape discipline as the ring's pow2 ``Rq`` spans. Skewed
+    per-instance lengths therefore compile at most
+    ``ceil(log2(max_m / min_m)) + 1`` scan programs instead of padding
+    every instance to the global maximum (and idling the short ones through
+    the tail). When every instance lands in one bucket whose pow2 bound
+    meets or exceeds ``per``, shapes — and thus programs, uploads, and
+    assignments — are identical to the unbucketed layout. Results come back
+    in the caller's instance order regardless of bucketing, and
+    seed-deriving cores receive the *global* instance ids
+    (:meth:`StepCore.seed_instances`), so assignments are bit-identical to
+    the unbucketed program.
     """
     from repro.core.driver import ResidentSource, ScanDriver
 
@@ -540,51 +560,86 @@ def partition_stream_batched(
     if allowed is not None:
         allowed = np.asarray(allowed, bool)
         assert allowed.shape == (z, k), (allowed.shape, (z, k))
+    if warm is not None:
+        warm = list(warm)
+        assert len(warm) == z, f"need one WarmState per instance, got {len(warm)}"
     if m_max == 0:
         return [
             PartitionResult(np.zeros((0,), np.int32), dict(k=k, unassigned=0))
             for _ in range(z)
         ]
 
-    drv = ScanDriver(
-        ResidentSource(streams, m_per, residency=residency),
-        core if core is not None else cfg,
-        num_vertices,
-        allowed=allowed,
-        warm=list(warm) if warm is not None else None,
-        cost_per_score=cost_per_score,
-        backend=backend,
-        trace=trace,
-    )
-    res = drv.run(n_chunks=n_chunks)
+    # ---- pow2 length buckets --------------------------------------------
+    # Bucket by the pow2 class of each instance's REAL length; the padded
+    # width never exceeds the caller's layout, so a single-bucket batch is
+    # shape-identical (same program, same h2d bytes) to the unbucketed one.
+    buckets: dict[int, list[int]] = {}
+    for i in range(z):
+        buckets.setdefault(_ceil_pow2(int(m_per[i])), []).append(i)
+
+    runs = []  # (global idx, driver, result, padded width) per bucket
+    total_wall, total_h2d_rows, total_h2d_bytes = 0.0, 0, 0
+    for key in sorted(buckets):
+        idx = np.asarray(buckets[key], np.int64)
+        width = min(key, per)
+        drv = ScanDriver(
+            ResidentSource(
+                np.ascontiguousarray(streams[idx, :width]),
+                m_per[idx],
+                residency=residency,
+            ),
+            core if core is not None else cfg,
+            num_vertices,
+            allowed=None if allowed is None else allowed[idx],
+            warm=None if warm is None else [warm[i] for i in idx],
+            cost_per_score=cost_per_score,
+            backend=backend,
+            trace=trace,
+            instance_ids=idx,
+        )
+        res_b = drv.run(n_chunks=n_chunks)
+        total_wall += res_b.wall_time_s
+        total_h2d_rows += res_b.h2d_rows
+        total_h2d_bytes += res_b.h2d_bytes
+        runs.append((idx, drv, res_b, width))
     tsum = (
         trace.summary().as_dict()
         if trace is not None and trace.enabled else None
     )
-    results = []
-    for i in range(z):
-        m_i = int(m_per[i])
-        assign = np.full((m_i,), -1, np.int32)
-        live = res.sidx[i] >= 0
-        assign[res.sidx[i][live]] = res.p[i][live]
-        unassigned = int((assign < 0).sum())
-        assert unassigned == 0 and int(res.assigned[i]) == m_i, (
-            f"batched instance {i} left {unassigned} of {m_i} edges "
-            f"unassigned (scan counter: {int(res.assigned[i])}) — drain failed"
-        )
-        stats = dict(
-            drv.stats_base(res, i),
-            batched=True,
-            backend=res.backend,
-            n_shards=res.n_shards,
-            z=z,
-            instance=i,
-            # One program ran all z instances; the batched wall IS the
-            # parallel-model wall, shared by every instance.
-            w_trace=res.w_trace[i],
-            unassigned=unassigned,
-        )
-        if tsum is not None:
-            stats["trace_summary"] = tsum
-        results.append(PartitionResult(assign, stats))
+    results: list[Optional[PartitionResult]] = [None] * z
+    for idx, drv, res_b, width in runs:
+        for j, i in enumerate(int(g) for g in idx):
+            m_i = int(m_per[i])
+            assign = np.full((m_i,), -1, np.int32)
+            live = res_b.sidx[j] >= 0
+            assign[res_b.sidx[j][live]] = res_b.p[j][live]
+            unassigned = int((assign < 0).sum())
+            assert unassigned == 0 and int(res_b.assigned[j]) == m_i, (
+                f"batched instance {i} left {unassigned} of {m_i} edges "
+                f"unassigned (scan counter: {int(res_b.assigned[j])}) — "
+                "drain failed"
+            )
+            stats = dict(
+                drv.stats_base(res_b, j),
+                batched=True,
+                backend=res_b.backend,
+                n_shards=res_b.n_shards,
+                z=z,
+                instance=i,
+                # Buckets run back-to-back, so the batch's parallel-model
+                # wall — and its upload bill — is the sum over buckets,
+                # shared by every instance (one bucket degenerates to the
+                # old single-program accounting).
+                wall_time_s=total_wall,
+                h2d_rows=total_h2d_rows,
+                h2d_bytes=total_h2d_bytes,
+                n_buckets=len(runs),
+                bucket_rows=width,
+                w_trace=res_b.w_trace[j],
+                unassigned=unassigned,
+            )
+            if tsum is not None:
+                stats["trace_summary"] = tsum
+            results[i] = PartitionResult(assign, stats)
+    assert all(r is not None for r in results)
     return results

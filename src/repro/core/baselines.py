@@ -458,9 +458,13 @@ class HdrfCore(StepCore):
             sizes=jnp.asarray(warm.sizes, jnp.int32),
         )
 
-    def seed_instances(self, carry, z: int):
+    def seed_instances(self, carry, z: int, ids=None):
+        # Seeds key on the caller's *global* instance ids, not the batch
+        # position, so pow2 length-bucketing (which permutes instances into
+        # sub-batches) reproduces the unbucketed tie-break stream exactly.
+        ids = np.arange(z) if ids is None else np.asarray(ids)
         seeds = jnp.asarray(
-            (int(self.seed) + np.arange(z)) & 0xFFFFFFFF, jnp.uint32
+            (int(self.seed) + ids) & 0xFFFFFFFF, jnp.uint32
         )
         return carry._replace(seed=seeds)
 

@@ -46,9 +46,10 @@ jit-specializes on. A core implements:
   warm resume from a :class:`~repro.core.types.WarmState`. The carry is any
   pytree obeying the contract in :mod:`repro.core.types` (``.cursor`` and
   ``.assigned`` int32 leaves).
-* ``seed_instances(carry, z)`` — batched hook: derive per-instance state
-  (e.g. counter-based tie-break seeds ``seed + i``) after the driver stacks
-  z carries.
+* ``seed_instances(carry, z, ids)`` — batched hook: derive per-instance
+  state (e.g. counter-based tie-break seeds ``seed + ids[i]``) after the
+  driver stacks z carries; ``ids`` are the caller's global instance
+  indices so bucketed sub-batches reproduce the unbucketed streams.
 * ``window_rows`` / ``rows_per_step`` — the look-ahead and per-step
   consumption bounds the driver sizes scan calls and the ring with
   (ADWISE: ``window_max`` / ``assign_batch``; single-edge baselines 0 / 1).
@@ -233,8 +234,17 @@ class StepCore:
         """Hard per-partition capacity for an instance streaming m edges."""
         return int(np.iinfo(np.int32).max)
 
-    def seed_instances(self, carry: Any, z: int) -> Any:
-        """Derive per-instance carry state after batching (default: none)."""
+    def seed_instances(
+        self, carry: Any, z: int, ids: Optional[np.ndarray] = None
+    ) -> Any:
+        """Derive per-instance carry state after batching (default: none).
+
+        ``ids`` are the caller's *global* instance indices for the z batch
+        positions (defaults to ``arange(z)``). Seed-deriving cores must key
+        on ``ids`` — never on the batch position — so length-bucketed
+        batching, which permutes instances across sub-batches, reproduces
+        the exact per-instance streams of the unbucketed layout.
+        """
         return carry
 
     def set_cost(self, carry: Any, cost_per_score: float, z: int) -> Any:
@@ -512,27 +522,26 @@ class StreamResidency:
     """Cross-pass device residency for resident (in-memory) sources.
 
     A re-streaming caller creates one holder and threads it through every
-    pass; pass p publishes its uploaded ``(z, per, 2)`` device stream array
-    here and pass p+1 reuses it, shipping only the new ``prev`` table.
-    Caller contract: every pass must stream the SAME edge content in the
-    same instance layout — only the shape is cheap to verify, so the holder
-    must never be shared across different streams.
+    pass; pass p publishes its uploaded ``(z, per, 2)`` device stream
+    array(s) here and pass p+1 reuses them, shipping only the new ``prev``
+    table. Length-bucketed batching (`partition_stream_batched`) uploads one
+    array per pow2 bucket, so the holder keys residency by shape — every
+    bucket of the next pass finds its own resident array. Caller contract:
+    every pass must stream the SAME edge content in the same instance
+    layout — only the shape is cheap to verify, so the holder must never be
+    shared across different streams.
     """
 
-    __slots__ = ("streams", "shape")
+    __slots__ = ("_by_shape",)
 
     def __init__(self) -> None:
-        self.streams: Optional[jax.Array] = None
-        self.shape: Optional[Tuple[int, ...]] = None
+        self._by_shape: dict[Tuple[int, ...], jax.Array] = {}
 
     def publish(self, streams: jax.Array, shape: Tuple[int, ...]) -> None:
-        self.streams = streams
-        self.shape = shape
+        self._by_shape[tuple(shape)] = streams
 
     def lookup(self, shape: Tuple[int, ...]) -> Optional[jax.Array]:
-        if self.streams is not None and self.shape == shape:
-            return self.streams
-        return None
+        return self._by_shape.get(tuple(shape))
 
 
 # One staged block: (start_row, row_count, uv rows or None, prev rows or
@@ -1080,6 +1089,7 @@ class ScanDriver:
         cost_per_score: Optional[float] = None,
         backend: str = "vmap",
         trace: Any = None,
+        instance_ids: Optional[np.ndarray] = None,
     ) -> None:
         self.trace = resolve_tracer(trace)
         # A traced driver over an untraced FileSource adopts the driver's
@@ -1152,7 +1162,12 @@ class ScanDriver:
                         f"instance {i}: prev_assign must align with its stream"
                     )
                     prev_np[i, : len(pa)] = pa
-        carry = core.seed_instances(carry, z)
+        if instance_ids is None:
+            ids = np.arange(z)
+        else:
+            ids = np.asarray(instance_ids)
+            assert ids.shape == (z,), (ids.shape, z)
+        carry = core.seed_instances(carry, z, ids)
         self.fixed_cost = cost_per_score is not None
         if cost_per_score is not None:
             carry = core.set_cost(carry, cost_per_score, z)

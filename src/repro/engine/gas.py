@@ -113,12 +113,25 @@ def make_superstep(
     zero / identity contributions in `gather_local`) and no replicas (the
     replica mask zeroes the slab out of the cross-partition combine). This
     is what lets `engine_mesh` keep every device for any k.
+
+    Slab balance: pad slabs are interleaved so per-device REAL slab counts
+    differ by at most one (appending them at the end would pile every pad
+    onto the last devices — they idle while earlier devices carry full
+    slabs, and the psum stalls on the stragglers). The cross-partition
+    combine is permutation-invariant, so reordering slabs never changes
+    results. The returned callable exposes the placement as
+    ``.slab_occupancy`` (real slabs per device) and the traced superstep
+    span carries it for Perfetto visibility.
     """
     v, k = g.num_vertices, g.k
     n_shards = int(mesh.devices.size)
     k_pad = -(-k // n_shards) * n_shards
     edges_d, evalid_d = g.edges, g.evalid
     repl_t = jnp.asarray(np.asarray(g.replicas).T)  # (k, V)
+    kp_per = k_pad // n_shards
+    base, rem = divmod(k, n_shards)
+    occupancy = np.full(n_shards, base, np.int64)
+    occupancy[:rem] += 1
     if k_pad != k:
         pad = k_pad - k
         edges_d = jnp.concatenate(
@@ -130,6 +143,22 @@ def make_superstep(
         repl_t = jnp.concatenate(
             [repl_t, jnp.zeros((pad, repl_t.shape[1]), repl_t.dtype)]
         )
+        # Device d's contiguous shard_map slab holds occupancy[d] real
+        # partitions followed by its share of the pads.
+        perm = np.empty(k_pad, np.int64)
+        next_real, next_pad, pos = 0, k, 0
+        for d in range(n_shards):
+            c = int(occupancy[d])
+            perm[pos : pos + c] = np.arange(next_real, next_real + c)
+            perm[pos + c : pos + kp_per] = np.arange(
+                next_pad, next_pad + kp_per - c
+            )
+            next_real += c
+            next_pad += kp_per - c
+            pos += kp_per
+        edges_d = edges_d[perm]
+        evalid_d = evalid_d[perm]
+        repl_t = repl_t[perm]
 
     def step(state, edges, evalid, replicas_t, degrees):
         acc = gather_local(edges, evalid, state, degrees, msg_fn, v, agg=combine)
@@ -155,15 +184,24 @@ def make_superstep(
     def superstep(state):
         return shard_step(state, edges_d, evalid_d, repl_t, g.degrees)
 
+    slab_occupancy = tuple(int(c) for c in occupancy)
     tr = resolve_tracer(trace)
     if not tr.enabled:
-        return superstep
+        # jit-wrapped callables reject attribute assignment; a plain
+        # closure carries the placement metadata either way.
+        def plain_superstep(state):
+            return superstep(state)
+
+        plain_superstep.slab_occupancy = slab_occupancy
+        return plain_superstep
 
     # Tracing wraps the jitted call from the host side: the span covers
     # dispatch only (no block_until_ready, no added sync) and lives outside
     # the traced program, so the compiled superstep is unchanged.
     def traced_superstep(state):
-        with tr.span("superstep", cat="engine", k=k, combine=combine):
+        with tr.span("superstep", cat="engine", k=k, combine=combine,
+                     n_shards=n_shards, slab_occupancy=list(slab_occupancy)):
             return superstep(state)
 
+    traced_superstep.slab_occupancy = slab_occupancy
     return traced_superstep

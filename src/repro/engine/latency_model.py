@@ -60,8 +60,25 @@ TPU_POD = ClusterProfile(
 # Streaming-partitioner cost constants calibrated to the paper's setup
 # (HDRF on Brain: ~20.6M edges/instance on one 3 GHz Xeon core in O(100 s)
 # ⇒ ~0.2 µs per (edge, partition) score evaluation + ~1 µs/edge stream IO).
+# SCORE_COST_S is the *fallback*: when the kernel autotune table holds a
+# measured window_score wall for this backend (see
+# `repro.kernels.ops.measured_score_cost_s`), compute is billed at that
+# measured tier instead of the paper's Xeon calibration.
 SCORE_COST_S = 2.3e-7
 EDGE_IO_COST_S = 1.0e-6
+
+
+def _score_cost_s() -> float:
+    """Per-score cost at the measured kernel tier, else the calibrated
+    constant. Import is lazy/defensive: the model must keep working on
+    installs where the kernels package cannot load."""
+    try:
+        from repro.kernels.ops import measured_score_cost_s
+
+        measured = measured_score_cost_s()
+    except Exception:
+        measured = None
+    return SCORE_COST_S if measured is None else measured
 # Host→device stream-buffer bandwidth (PCIe-gen4-class x16 sustained). The
 # scan drivers count every byte they ship (`h2d_bytes` in partition stats —
 # O(m) for the ring-buffer file path, O(m) once for resident uploads); the
@@ -70,7 +87,9 @@ EDGE_IO_COST_S = 1.0e-6
 H2D_BW_BPS = 16e9
 
 
-def partition_latency(stats: dict, m: int, k: int) -> float:
+def partition_latency(
+    stats: dict, m: int, k: int, *, score_cost_s: float | None = None
+) -> float:
     """Modeled cluster partitioning latency from the algorithm's own
     complexity counters (score computations — the paper's §III-B metric).
 
@@ -107,7 +126,9 @@ def partition_latency(stats: dict, m: int, k: int) -> float:
         or stats.get("passes")
         or 1
     )
-    compute = scores * SCORE_COST_S
+    # Compute is billed at the measured kernel tier when the autotune table
+    # has one for this backend; callers can pin the cost explicitly.
+    compute = scores * (_score_cost_s() if score_cost_s is None else score_cost_s)
     io = reads * m * EDGE_IO_COST_S
     # Measured refill stall exists only when the ring driver ran refills
     # (refill_spans > 0); resident uploads report a structurally-zero wait

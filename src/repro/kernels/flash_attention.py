@@ -81,7 +81,7 @@ def flash_attention_pallas(
     *,
     causal: bool = True,
     scale: float | None = None,
-    interpret: bool = True,
+    interpret: bool = False,
 ) -> jax.Array:
     b, hq, tq, dh = q.shape
     _, hkv, tk, _ = k.shape

@@ -39,9 +39,38 @@ def csr_block_layout(seg_ids: np.ndarray, num_segments: int, d: int):
       loc:  int32 (E_pad,) — destination id *local to its segment block*,
       chunk_ptr: int32 (n_sblocks,) — first chunk index of each block,
       nchunks:   int32 (n_sblocks,) — number of chunks of each block.
+
+    Invalid layouts are rejected up front with a ValueError naming the
+    offending position — unsorted or out-of-range ids would otherwise
+    surface as index garbage deep in the padding math. Degenerate inputs are
+    legal: ``m=0`` yields an all-padding layout and a single segment block
+    still gets its one (padded) chunk run.
     """
     seg_ids = np.asarray(seg_ids)
-    assert (np.diff(seg_ids) >= 0).all(), "segment ids must be sorted"
+    if seg_ids.ndim != 1:
+        raise ValueError(
+            f"csr_block_layout: seg_ids must be 1-D, got shape {seg_ids.shape}"
+        )
+    if num_segments < 1:
+        raise ValueError(
+            f"csr_block_layout: num_segments must be >= 1, got {num_segments}"
+        )
+    if seg_ids.size:
+        drop = np.diff(seg_ids) < 0
+        if drop.any():
+            i = int(np.argmax(drop))
+            raise ValueError(
+                "csr_block_layout: segment ids must be sorted ascending; "
+                f"seg_ids[{i}]={int(seg_ids[i])} > "
+                f"seg_ids[{i + 1}]={int(seg_ids[i + 1])}"
+            )
+        bad = (seg_ids < 0) | (seg_ids >= num_segments)
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                "csr_block_layout: segment ids must lie in "
+                f"[0, {num_segments}); seg_ids[{i}]={int(seg_ids[i])}"
+            )
     n_sblocks = -(-num_segments // SB)
     # Edge range per segment block.
     lo = np.searchsorted(seg_ids, np.arange(n_sblocks) * SB)
@@ -119,9 +148,13 @@ def segment_sum_pallas(
     num_segments: int,
     *,
     max_chunks: int | None = None,
-    interpret: bool = True,
+    interpret: bool = False,
 ) -> jax.Array:
-    """(S_pad, D) blocked segment sum; rows ≥ num_segments are zero padding."""
+    """(S_pad, D) blocked segment sum; rows ≥ num_segments are zero padding.
+
+    ``interpret=True`` is a debug flag only — tier dispatch (including the
+    decision to run this kernel at all) lives in ``ops.segment_sum_sorted``.
+    """
     if pl is None or pltpu is None or not hasattr(pltpu, "PrefetchScalarGridSpec"):
         # Fast path (ROADMAP item): no Pallas prefetch grid on this install —
         # compute the same blocked layout through jax.ops.segment_sum. Loud so

@@ -104,9 +104,14 @@ def window_score_pallas(
     max_deg: jax.Array,  # () int32
     *,
     use_cs: bool = True,
-    interpret: bool = True,
+    interpret: bool = False,
 ) -> jax.Array:
-    """Padded pallas_call wrapper; returns (W, K) f32 score matrix."""
+    """Padded pallas_call wrapper; returns (W, K) f32 score matrix.
+
+    ``interpret=True`` is a debug flag (pure-Python emulation); the default
+    lowers for real and raises where the backend cannot (dispatch belongs in
+    ``ops.window_score``, which resolves a runnable tier first).
+    """
     if pl is None:
         raise RuntimeError(
             "jax.experimental.pallas unavailable — use ops.window_score"

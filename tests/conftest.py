@@ -19,6 +19,21 @@ import pytest
 from repro.graph import make_graph
 
 
+@pytest.fixture(autouse=True)
+def _hermetic_kernel_autotune(tmp_path, monkeypatch):
+    """Point the kernel-tier autotune cache at a per-test path and drop the
+    in-process memo, so a developer machine's accumulated table (or another
+    test's recordings) can never leak measured walls into assertions — e.g.
+    `partition_latency` expectations computed from SCORE_COST_S."""
+    from repro.kernels import ops
+
+    monkeypatch.setenv(ops.AUTOTUNE_CACHE_ENV,
+                       str(tmp_path / "kernel_tiers.json"))
+    ops.clear_tier_cache()
+    yield
+    ops.clear_tier_cache()
+
+
 @pytest.fixture(scope="session")
 def tiny_graph():
     edges, n = make_graph("tiny_clustered", seed=1)

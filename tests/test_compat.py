@@ -137,16 +137,30 @@ def test_engine_multi_device_cpu_mesh():
 # Pallas probe
 # ----------------------------------------------------------------------------
 
-def test_pallas_probe_consistent_with_resolver():
-    if compat.has_pallas():
-        assert ops.resolve_impl("pallas") == "pallas"
-    else:
-        assert ops.resolve_impl("pallas") == "ref"
-    # On non-TPU hosts 'auto' must pick the XLA reference.
+def test_pallas_probe_consistent_with_resolver(monkeypatch):
+    monkeypatch.delenv(ops.KERNEL_TIER_ENV, raising=False)
+    for op in ("window_score", "segment_sum", "flash_attention"):
+        tiers = ops.available_tiers(op)
+        assert tiers[-1] == "xla"
+        resolved = ops.resolve_tier(op)
+        assert resolved in tiers  # in particular: never 'interpret'
     if jax.default_backend() != "tpu":
-        assert ops.resolve_impl("auto") == "ref"
         assert compat.pallas_interpret()
-    assert ops.resolve_impl("ref") == "ref"
+        assert "pallas-tpu" not in ops.available_tiers("window_score")
+        # pallas-cpu exists only where JAX can genuinely lower on CPU.
+        if not compat.has_pallas_cpu_lowering():
+            assert ops.available_tiers("window_score") == ("xla",)
+            assert ops.resolve_tier("window_score") == "xla"
+    # Legacy alias from the impl= era still resolves.
+    assert ops.resolve_tier("window_score", "ref") == "xla"
+
+
+def test_pallas_cpu_lowering_probe_is_cached_and_boolean():
+    first = compat.has_pallas_cpu_lowering()
+    assert isinstance(first, bool)
+    assert compat.has_pallas_cpu_lowering() is first
+    if not compat.HAS_PALLAS:
+        assert first is False
 
 
 # ----------------------------------------------------------------------------

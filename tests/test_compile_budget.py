@@ -204,6 +204,40 @@ def test_hdrf_seed_not_in_cache_key():
     assert post["run_scan_ring"] == pre["run_scan_ring"]
 
 
+def test_batched_length_buckets_bound_scan_programs():
+    """Ragged z-instance batching compiles at most
+    ``ceil(log2(max_m / min_m)) + 1`` resident scan programs: instances are
+    pow2-length-bucketed (`partition_stream_batched`), so skewed lengths
+    share ≤ one program per occupied pow2 class instead of padding every
+    instance to the global max."""
+    import math
+
+    from repro.core.adwise import _ceil_pow2, partition_stream_batched
+
+    rng = np.random.default_rng(11)
+    ms = [40, 70, 130, 300, 520, 1000]  # 5 pow2 classes, 6 instances
+    z, per, V, k = len(ms), max(ms), 40, 8
+    streams = np.zeros((z, per, 2), np.int32)
+    valid = np.zeros((z, per), bool)
+    for i, m in enumerate(ms):
+        streams[i, :m] = _edges(rng, V, m)
+        valid[i, :m] = True
+    pre = scan_compile_counts()["run_scan_resident"]
+    res = partition_stream_batched(
+        streams, valid, V, None, core=HdrfCore(num_vertices=V, k=k, seed=0)
+    )
+    post = scan_compile_counts()["run_scan_resident"]
+    bound = math.ceil(math.log2(max(ms) / min(ms))) + 1
+    n_buckets = len({_ceil_pow2(m) for m in ms})
+    assert n_buckets <= bound
+    assert post - pre <= bound, (post - pre, bound)
+    assert post - pre <= n_buckets, (post - pre, n_buckets)
+    for i, m in enumerate(ms):
+        assert len(res[i].assign) == m
+        assert res[i].stats["n_buckets"] == n_buckets
+        assert res[i].stats["bucket_rows"] == min(_ceil_pow2(m), per)
+
+
 def test_counts_are_live_gauges():
     counts = scan_compile_counts()
     assert set(counts) == {"run_scan_resident", "run_scan_ring", "ring_write"}

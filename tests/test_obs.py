@@ -255,7 +255,15 @@ def test_engine_superstep_spans():
     _, info = pagerank(g, iters=3, trace=tr)
     cats = tr.summary().categories
     assert cats["engine"]["count"] == 3
-    # untraced path returns the bare jitted superstep (no wrapper penalty)
+    # Every superstep span carries the device slab placement (balanced to
+    # within one real slab by make_superstep) for Perfetto visibility.
+    steps = [s for s in tr.spans if s.name == "superstep"]
+    assert len(steps) == 3
+    for s in steps:
+        occ = s.attrs["slab_occupancy"]
+        assert len(occ) == s.attrs["n_shards"]
+        assert sum(occ) == 4  # k real slabs, none lost to padding
+        assert max(occ) - min(occ) <= 1
     _, info2 = pagerank(g, iters=3)
     assert info2["supersteps"] == info["supersteps"]
 

@@ -46,6 +46,7 @@ def check(snippet: str, path: str = CORE_PATH):
         ("sc003_host_sync.py", "SC003"),
         ("sc004_legacy_rng.py", "SC004"),
         ("sc005_donated_read.py", "SC005"),
+        ("sc006_interpret_literal.py", "SC006"),
     ],
 )
 def test_fixture_flags_only_its_rule(fixture, rule):
@@ -166,6 +167,23 @@ def test_sc005_rebind_is_clean_tuple_arg_tracked():
     sc5 = [f for f in found if f.rule == "SC005"]
     assert len(sc5) == 1
     assert "`buf`" in sc5[0].message
+
+
+def test_sc006_flags_literal_but_exempts_kernel_modules():
+    snippet = (
+        "def f(kernel, x):\n"
+        "    return pallas_call(kernel, interpret=True)(x)\n"
+    )
+    assert rules_of(check_source(snippet, CORE_PATH)) == {"SC006"}
+    # The kernel modules own `interpret` as their debug parameter.
+    for mod in ("window_score", "segment_sum", "flash_attention"):
+        assert check_source(snippet, f"src/repro/kernels/{mod}.py") == []
+    # Forwarding a variable (the dispatcher's decision) is always fine.
+    fwd = (
+        "def f(kernel, x, interpret):\n"
+        "    return pallas_call(kernel, interpret=interpret)(x)\n"
+    )
+    assert rules_of(check_source(fwd, CORE_PATH)) == set()
 
 
 # ----------------------------------------------------------------------------

@@ -31,6 +31,8 @@ _WALL_KEYS = (
     "partition_memory_wall_s",
     "h2d_wait_s",
     "prestage_wall_s",
+    "window_score_wall_s",
+    "segment_sum_wall_s",
 )
 # Context keys printed but never gated (counts / ratios / throughputs).
 _INFO_KEYS = (
@@ -38,6 +40,7 @@ _INFO_KEYS = (
     "ingest_mb_s",
     "read_mb_s",
     "h2d_bytes",
+    "kernel_tier",
 )
 
 

@@ -52,6 +52,13 @@ fi
 ADWISE_PREFETCH=0 python -m pytest -x -q tests/test_driver.py
 ADWISE_PREFETCH=2 python -m pytest -x -q tests/test_driver.py
 
+# Kernel-tier matrix: the kernel suite must hold numeric parity at BOTH a
+# pinned xla tier (the env override escape hatch, bit-stable everywhere)
+# and the autotuned default this host resolves — whichever tier that is,
+# it is never interpret (asserted inside the suite).
+ADWISE_KERNEL_TIER=xla python -m pytest -x -q tests/test_kernels.py
+python -m pytest -x -q tests/test_kernels.py
+
 # The smoke pass also writes a machine-readable BENCH_<n>.json into
 # bench_logs/ (kept / uploaded as a CI artifact), so the perf trajectory —
 # partition walls, h2d stream traffic, ingest MB/s, scan-core speedups,
@@ -113,6 +120,18 @@ with tempfile.TemporaryDirectory() as td:
     print("2-device hdrf z=4 partition_file smoke OK "
           f"({res.stats['name']}, backend={res.stats.get('backend')}, "
           f"devices={jax.device_count()})")
+
+# Slab-balanced engine placement: k=7 on 2 devices pads to 8 slabs, and
+# make_superstep spreads the pad so per-device REAL slab counts differ by
+# at most one ((4, 3), not tail-padded (4, 4-with-1-pad-heavy)).
+from repro.engine import build_partitioned_graph
+from repro.engine.gas import engine_mesh, make_superstep
+g = build_partitioned_graph(edges, ref.assign % 7, n, 7)
+step = make_superstep(g, lambda xu, xv, du, dv: (xu, xv),
+                      lambda s, a, d: s, engine_mesh(k=7))
+occ = step.slab_occupancy
+assert sum(occ) == 7 and max(occ) - min(occ) <= 1, occ
+print(f"2-device slab placement OK: occupancy={occ}")
 PY
 
 # Traced pipeline smoke: drive the real launcher CLI with --trace over a

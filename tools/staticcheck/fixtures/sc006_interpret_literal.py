@@ -1,0 +1,23 @@
+# staticcheck-fixture-expect: SC006
+"""SC006 fixture: literal interpret=True at a kernel call site (checked
+under a virtual src/repro/core/ path — i.e. NOT one of the kernel modules
+that own the debug flag)."""
+
+
+def window_score_pallas(*args, interpret=False):
+    return args, interpret
+
+
+def score_window(args):
+    # SC006: hardwired debug emulator, bypasses the tier ladder
+    return window_score_pallas(*args, interpret=True)
+
+
+def score_window_ok(args, debug):
+    # fine: forwarding a variable keeps the decision with the dispatcher
+    return window_score_pallas(*args, interpret=debug)
+
+
+def score_window_default(args):
+    # fine: explicit False is the non-debug default
+    return window_score_pallas(*args, interpret=False)

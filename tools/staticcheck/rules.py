@@ -804,4 +804,55 @@ class SC005:
                 findings.append(f)
 
 
-RULES = (SC001(), SC002(), SC003(), SC004(), SC005())
+# ---------------------------------------------------------------------------
+# SC006 — no interpret=True literals outside the kernels' debug entry points
+# ---------------------------------------------------------------------------
+
+# The Pallas kernel modules own `interpret` as an explicit debug parameter
+# (default False, forwarded to pallas_call); every other call site must go
+# through the repro.kernels.ops tier ladder.
+_INTERPRET_ENTRY_RE = re.compile(
+    r"repro/kernels/(window_score|segment_sum|flash_attention)\.py$"
+)
+
+
+class SC006:
+    id = "SC006"
+    severity = "error"
+    hint = (
+        "interpret mode is a debug tier, never the dispatch default: "
+        "request it explicitly through repro.kernels.ops "
+        "(tier='interpret', or $ADWISE_KERNEL_TIER=interpret at run time) "
+        "so the resolved tier ladder stays in charge — a literal "
+        "interpret=True pins pure-Python kernel emulation at the call site"
+    )
+
+    def applies_to(self, path: str) -> bool:
+        return not _INTERPRET_ENTRY_RE.search(path.replace("\\", "/"))
+
+    def check(
+        self, tree: ast.AST, path: str, lines: Sequence[str]
+    ) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if (
+                    kw.arg == "interpret"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                ):
+                    callee = dotted(node.func) or "<call>"
+                    yield Finding(
+                        rule=self.id, severity=self.severity, path="",
+                        line=kw.value.lineno, col=kw.value.col_offset,
+                        message=(
+                            f"literal interpret=True passed to {callee} — "
+                            "hardwires the Pallas debug emulator and "
+                            "bypasses the kernel tier ladder"
+                        ),
+                        hint=self.hint,
+                    )
+
+
+RULES = (SC001(), SC002(), SC003(), SC004(), SC005(), SC006())
